@@ -1,0 +1,66 @@
+"""Render the §Roofline table from the dry-run artifacts (results/*.json).
+
+Not a timing benchmark: it turns the compiled-artifact analysis into the
+EXPERIMENTS.md table + emits one row per (arch × shape × mesh) cell.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun_baseline.json")
+
+
+def load_cells(path=RESULTS):
+    if not os.path.exists(path):
+        return []
+    return [r for r in json.load(open(path)) if "roofline" in r]
+
+
+def markdown_table(cells) -> str:
+    hdr = (
+        "| arch | shape | mesh | t_compute | t_memory | t_collective | bound | "
+        "useful | MFU bound | peak GiB/dev |\n|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    fmt = lambda t: f"{t:.3g}s" if t >= 0.1 else (f"{t*1e3:.3g}ms" if t >= 1e-4 else f"{t*1e6:.3g}us")
+    rows = []
+    for r in cells:
+        rr = r["roofline"]
+        mesh = "2×16×16" if r["multi_pod"] else "16×16"
+        peak = r["memory"]["peak_bytes_per_device"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | {fmt(rr['t_compute_s'])} | "
+            f"{fmt(rr['t_memory_s'])} | {fmt(rr['t_collective_s'])} | {rr['bottleneck']} | "
+            f"{rr['useful_ratio']:.2f} | {rr['mfu_bound']:.3f} | "
+            f"{(peak or 0)/2**30:.2f} |"
+        )
+    return hdr + "\n".join(rows)
+
+
+def bench():
+    cells = load_cells()
+    if not cells:
+        return [("roofline_table/missing", 0.0, "run repro.launch.dryrun --all first")]
+    worst = min(
+        (c for c in cells if c["shape"] == "train_4k" and not c["multi_pod"]),
+        key=lambda c: c["roofline"]["mfu_bound"],
+    )
+    best = max(cells, key=lambda c: c["roofline"]["mfu_bound"])
+    return [
+        ("roofline/cells", float(len(cells)), "compiled (arch×shape×mesh) cells"),
+        (
+            "roofline/worst_train",
+            worst["roofline"]["mfu_bound"],
+            f"{worst['arch']}×{worst['shape']} ({worst['roofline']['bottleneck']}-bound)",
+        ),
+        (
+            "roofline/best",
+            best["roofline"]["mfu_bound"],
+            f"{best['arch']}×{best['shape']}",
+        ),
+    ]
+
+
+if __name__ == "__main__":
+    print(markdown_table(load_cells()))

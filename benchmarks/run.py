@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper evaluation.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * message_rate      — paper Fig. 4 (global lock vs per-VCI vs streams)
+  * threadcomm_latency— paper Fig. 7 (threadcomm vs MPI-everywhere) +
+                        multi-pod all-reduce byte model
+  * progress_overlap  — paper §General Progress RMA example
+  * datatype_iov      — paper §Derived Datatypes iovec costs
+  * kernels_bench     — Pallas kernels vs references (interpret mode)
+  * roofline_table    — §Roofline summary from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        datatype_iov,
+        kernels_bench,
+        message_rate,
+        progress_overlap,
+        roofline_table,
+        threadcomm_latency,
+    )
+
+    modules = [
+        ("message_rate", message_rate),
+        ("threadcomm_latency", threadcomm_latency),
+        ("progress_overlap", progress_overlap),
+        ("datatype_iov", datatype_iov),
+        ("kernels_bench", kernels_bench),
+        ("roofline_table", roofline_table),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        try:
+            for row in mod.bench():
+                n, us, derived = row
+                print(f"{n},{us:.2f},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{name},nan,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

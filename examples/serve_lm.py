@@ -1,0 +1,49 @@
+"""Batched serving with continuous batching over a slotted KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen1.5-0.5b
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serving.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params = api.init_params(cfg, jax.random.key(0))
+    engine = ServeEngine(cfg, params, max_batch=args.max_batch, max_len=128)
+
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    reqs = [
+        engine.submit(rng.integers(0, cfg.vocab, (4 + i % 5,)), max_new_tokens=args.max_new)
+        for i in range(args.requests)
+    ]
+    steps = 0
+    while any(not r.done for r in reqs):
+        engine.step()
+        steps += 1
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in reqs)
+    print(f"[serve] {len(reqs)} requests, {toks} tokens in {steps} engine steps ({dt:.1f}s)")
+    for r in reqs[:3]:
+        print(f"[serve] req{r.rid}: prompt={list(r.prompt[:4])}… out={r.out_tokens}")
+    assert all(len(r.out_tokens) == args.max_new for r in reqs)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Iovec-addressed sharded checkpoints + async manager."""
+from repro.checkpoint.manager import CheckpointManager

@@ -1,0 +1,128 @@
+"""Async checkpoint manager: saves are generalized requests (paper ext. 1).
+
+``save_async`` snapshots device arrays to host (d2h) then hands the file
+writes to a worker thread whose completion is tracked by a
+``poll_fn``-backed generalized request on the checkpoint stream — the
+training loop keeps stepping while the progress thread (ext. 6) retires
+the I/O. ``wait_for_pending`` is the single ``MPI_Waitall`` that covers
+checkpoint + data-prefetch + heartbeat requests together.
+
+Fault-tolerance contract: a checkpoint directory is valid iff its
+manifest exists and says ``complete`` (written atomically, last);
+``restore_latest`` scans for the newest valid step, so a crash mid-save
+falls back to the previous one. Retention keeps the newest ``keep``.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import threading
+from typing import List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import iovec_store as store
+from repro.core.progress import GeneralizedRequest, ProgressEngine, default_engine
+from repro.core.streams import MPIXStream, STREAM_NULL
+
+__all__ = ["CheckpointManager"]
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        base_dir: str,
+        engine: Optional[ProgressEngine] = None,
+        stream: MPIXStream = STREAM_NULL,
+        keep: int = 3,
+    ):
+        self.base_dir = base_dir
+        self.engine = engine or default_engine()
+        self.stream = stream
+        self.keep = keep
+        self._pending: List[GeneralizedRequest] = []
+        os.makedirs(base_dir, exist_ok=True)
+
+    # -- paths ----------------------------------------------------------
+    def _dir_for(self, step: int) -> str:
+        return os.path.join(self.base_dir, f"step_{step:08d}")
+
+    def available_steps(self) -> List[int]:
+        steps = []
+        for d in os.listdir(self.base_dir):
+            m = _STEP_RE.match(d)
+            if not m:
+                continue
+            man = store.manifest_path(os.path.join(self.base_dir, d))
+            if os.path.exists(man):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    # -- save -------------------------------------------------------------
+    def save_async(self, step: int, tree, extra: Optional[dict] = None) -> GeneralizedRequest:
+        """Snapshot to host, then write asynchronously."""
+        host_tree = jax.tree.map(lambda a: np.asarray(a), tree)  # d2h barrier
+        tmp_dir = self._dir_for(step) + ".tmp"
+        final_dir = self._dir_for(step)
+        state = {"error": None, "thread": None}
+
+        def work():
+            try:
+                if os.path.exists(tmp_dir):
+                    shutil.rmtree(tmp_dir)
+                store.save_pytree(tmp_dir, host_tree, step=step, extra=extra)
+                os.replace(tmp_dir, final_dir)
+                self._retain()
+            except Exception as e:  # surfaced via query_fn/status
+                state["error"] = e
+
+        t = threading.Thread(target=work, daemon=True, name=f"ckpt-{step}")
+        state["thread"] = t
+        t.start()
+
+        def poll(st) -> bool:
+            return not st["thread"].is_alive()
+
+        def query(st):
+            return st["error"]
+
+        req = self.engine.grequest_start(
+            poll_fn=poll, query_fn=query, extra_state=state, stream=self.stream, name=f"ckpt-{step}"
+        )
+        self._pending.append(req)
+        return req
+
+    def save_sync(self, step: int, tree, extra: Optional[dict] = None) -> None:
+        req = self.save_async(step, tree, extra)
+        self.engine.wait(req)
+        if req.status() is not None:
+            raise req.status()
+
+    def _retain(self):
+        steps = self.available_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self._dir_for(s), ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def restore_latest(self, template, shardings=None) -> Tuple[object, int]:
+        steps = self.available_steps()
+        if not steps:
+            raise FileNotFoundError(f"no complete checkpoints under {self.base_dir}")
+        return store.load_pytree(self._dir_for(steps[-1]), template, shardings)
+
+    def restore_step(self, step: int, template, shardings=None):
+        return store.load_pytree(self._dir_for(step), template, shardings)
+
+    # -- progress integration -------------------------------------------------
+    def wait_for_pending(self, timeout: Optional[float] = None) -> bool:
+        ok = self.engine.wait_all(self._pending, timeout)
+        for r in self._pending:
+            if r.status() is not None:
+                raise r.status()
+        self._pending = [r for r in self._pending if not r.done]
+        return ok

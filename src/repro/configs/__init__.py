@@ -1,0 +1,2 @@
+"""Assigned architecture configs. get_config(name) / list_archs()."""
+from repro.configs.registry import get_config, list_archs, get_shape, list_shapes, input_specs, applicable_shapes

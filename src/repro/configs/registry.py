@@ -1,0 +1,129 @@
+"""Architecture + input-shape registry (the 10×4 assignment grid).
+
+``get_config(arch, smoke=False)`` → ModelConfig with the exact published
+numbers (or the reduced smoke variant). ``input_specs(cfg, shape)`` →
+ShapeDtypeStruct stand-ins for every model input: weak-type-correct,
+shardable, zero allocation — the dry-run contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+from repro.configs import (  # noqa: E402  (cycle-free: modules import only models.config)
+    granite_moe_1b,
+    deepseek_v3,
+    llama3_405b,
+    internlm2_20b,
+    gemma3_4b,
+    qwen1p5_0p5b,
+    phi3_vision,
+    rwkv6_7b,
+    jamba_v0p1,
+    whisper_tiny,
+)
+
+_MODULES = {
+    m.ARCH: m
+    for m in (
+        granite_moe_1b,
+        deepseek_v3,
+        llama3_405b,
+        internlm2_20b,
+        gemma3_4b,
+        qwen1p5_0p5b,
+        phi3_vision,
+        rwkv6_7b,
+        jamba_v0p1,
+        whisper_tiny,
+    )
+}
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)
+
+
+def list_shapes() -> List[str]:
+    return list(SHAPES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
+    m = _MODULES[arch]
+    return m.smoke() if smoke else m.full()
+
+
+def get_shape(name: str) -> ShapeSpec:
+    return SHAPES[name]
+
+
+def applicable_shapes(cfg: ModelConfig) -> List[str]:
+    """The assignment's skip rules: long_500k only for sub-quadratic-KV
+    archs (SSM / hybrid / local-global); every arch here has a decoder."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.supports_long_decode:
+        out.append("long_500k")
+    return out
+
+
+# ----------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ----------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Batch spec for train/prefill; for decode the cache spec comes from
+    ``decode_specs`` (it depends on init_cache's structure)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode == "decode":
+        return {
+            "tokens": _sds((B,), jnp.int32),
+            "pos": _sds((B,), jnp.int32),
+        }
+    batch = {}
+    if cfg.vlm and cfg.n_img_tokens:
+        batch["tokens"] = _sds((B, S - cfg.n_img_tokens), jnp.int32)
+        batch["img_embeds"] = _sds((B, cfg.n_img_tokens, cfg.d_model), jnp.float32)
+    elif cfg.encdec:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+        batch["enc_frames"] = _sds((B, cfg.n_audio_ctx, cfg.d_model), jnp.float32)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    return batch
+
+
+def decode_cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Abstract cache pytree for serve_step lowering (eval_shape → no
+    allocation even for the 500k cache)."""
+    from repro.models import api
+
+    return jax.eval_shape(lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len))

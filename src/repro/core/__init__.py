@@ -1,0 +1,72 @@
+"""repro.core — the paper's six MPIX extensions, TPU/JAX-native.
+
+1. generalized requests + poll/wait  → :mod:`repro.core.progress`
+2. datatype iovec                    → :mod:`repro.core.datatype`
+3. MPIX streams / stream comms       → :mod:`repro.core.streams`
+4. enqueue (device-ordered) ops      → :mod:`repro.core.enqueue`
+5. thread communicators              → :mod:`repro.core.threadcomm`
+6. general progress                  → :mod:`repro.core.progress`
+
+plus the stream-tagged collective layer (:mod:`repro.core.collectives`)
+and hierarchical multi-pod schedules (:mod:`repro.core.hierarchical`).
+"""
+
+from repro.core.datatype import (
+    BYTE,
+    FLOAT,
+    DOUBLE,
+    BF16,
+    INT32,
+    Datatype,
+    Iov,
+    contiguous,
+    hindexed,
+    hvector,
+    indexed,
+    pack,
+    pack_info,
+    predefined,
+    resized,
+    struct,
+    subarray,
+    type_extent,
+    type_iov,
+    type_iov_len,
+    type_size,
+    unpack,
+    vector,
+)
+from repro.core.progress import (
+    GeneralizedRequest,
+    ProgressEngine,
+    default_engine,
+    grequest_complete,
+    grequest_start,
+    start_progress_thread,
+    stop_progress_thread,
+    stream_progress,
+)
+from repro.core.streams import (
+    MPIXStream,
+    STREAM_NULL,
+    StreamComm,
+    StreamPool,
+    comm_get_stream,
+    default_pool,
+    info_set_hex,
+    new_token,
+    serialize_on,
+    stream_comm_create,
+    stream_comm_create_multiplex,
+    stream_create,
+    stream_free,
+    token_join,
+)
+from repro.core.threadcomm import (
+    ThreadComm,
+    comm_test_threadcomm,
+    flatten_comm,
+    split_comm,
+    threadcomm_free,
+    threadcomm_init,
+)

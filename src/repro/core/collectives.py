@@ -1,0 +1,202 @@
+"""Stream-tagged collectives (the communication layer of the framework).
+
+Every distributed operation in ``repro`` goes through a :class:`StreamComm`
+— never a raw axis name — mirroring the paper's design where stream
+communicators are drop-in for conventional communicators ("no additional
+adaptation from the user code is needed").
+
+These helpers are *per-shard* code: call them inside ``shard_map`` regions
+(the pjit/GSPMD path inserts its own collectives; the explicit path here
+is used by the hierarchical grad-sync, pipeline transport, serving
+all-to-all, and the paper-evaluation benchmarks).
+
+Semantics:
+* ops on the SAME stream are chained through an explicit ``token``
+  (serial execution context — what lets MPICH skip locks);
+* ops on DIFFERENT streams share no token, so XLA is free to schedule
+  them concurrently (disjoint channels);
+* ``multi_stream_*`` split one big tensor across k streams' channels —
+  the chunked/overlapped schedule used in the §Perf hillclimb.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.streams import StreamComm, new_token, serialize_on, token_join
+
+__all__ = [
+    "all_reduce",
+    "all_gather",
+    "reduce_scatter",
+    "all_to_all",
+    "ppermute",
+    "broadcast",
+    "pshuffle",
+    "multi_stream_all_reduce",
+    "multi_stream_all_gather",
+    "stream_send_recv",
+]
+
+Token = jax.Array
+
+
+def _axes(comm: StreamComm):
+    return comm.axes if len(comm.axes) > 1 else comm.axes[0]
+
+
+def _maybe_seal(comm: StreamComm, token: Optional[Token], *arrays):
+    """Serialize on the comm's stream token if one is threaded."""
+    if token is None:
+        return None, arrays
+    return serialize_on(token, *arrays)
+
+
+# ----------------------------------------------------------------------
+# Core collectives
+# ----------------------------------------------------------------------
+
+
+def all_reduce(x, comm: StreamComm, token: Optional[Token] = None):
+    """psum over the (flattened) comm axes. Returns (y, token')."""
+    token, (x,) = _maybe_seal(comm, token, x)
+    y = lax.psum(x, _axes(comm))
+    if token is not None:
+        token, (y,) = serialize_on(token, y)
+    return y, token
+
+
+def all_gather(x, comm: StreamComm, axis: int = 0, tiled: bool = True, token: Optional[Token] = None):
+    token, (x,) = _maybe_seal(comm, token, x)
+    y = lax.all_gather(x, _axes(comm), axis=axis, tiled=tiled)
+    if token is not None:
+        token, (y,) = serialize_on(token, y)
+    return y, token
+
+
+def reduce_scatter(x, comm: StreamComm, axis: int = 0, token: Optional[Token] = None):
+    token, (x,) = _maybe_seal(comm, token, x)
+    y = lax.psum_scatter(x, _axes(comm), scatter_dimension=axis, tiled=True)
+    if token is not None:
+        token, (y,) = serialize_on(token, y)
+    return y, token
+
+
+def all_to_all(x, comm: StreamComm, split_axis: int, concat_axis: int, token: Optional[Token] = None):
+    token, (x,) = _maybe_seal(comm, token, x)
+    y = lax.all_to_all(x, _axes(comm), split_axis=split_axis, concat_axis=concat_axis, tiled=True)
+    if token is not None:
+        token, (y,) = serialize_on(token, y)
+    return y, token
+
+
+def ppermute(x, comm: StreamComm, perm: Sequence[Tuple[int, int]], token: Optional[Token] = None):
+    """Point-to-point permutation along the comm's (single) axis."""
+    if len(comm.axes) != 1:
+        raise ValueError("ppermute needs a single-axis comm; flatten first")
+    token, (x,) = _maybe_seal(comm, token, x)
+    y = lax.ppermute(x, comm.axes[0], perm=list(perm))
+    if token is not None:
+        token, (y,) = serialize_on(token, y)
+    return y, token
+
+
+def broadcast(x, comm: StreamComm, root: int = 0, token: Optional[Token] = None):
+    """Broadcast root's shard to all ranks of the comm (via masked psum)."""
+    token, (x,) = _maybe_seal(comm, token, x)
+    mask = (comm.rank() == root).astype(x.dtype)
+    y = lax.psum(x * mask, _axes(comm))
+    if token is not None:
+        token, (y,) = serialize_on(token, y)
+    return y, token
+
+
+def pshuffle(x, comm: StreamComm, shift: int = 1, token: Optional[Token] = None):
+    """Ring shift by ``shift`` along a single-axis comm."""
+    n = comm.mesh.shape[comm.axes[0]] if comm.mesh is not None else None
+    if n is None:
+        raise ValueError("pshuffle needs a bound mesh to build the ring")
+    perm = [(i, (i + shift) % n) for i in range(n)]
+    return ppermute(x, comm, perm, token)
+
+
+# ----------------------------------------------------------------------
+# Multi-stream (chunked, concurrent) collectives — the Fig.4 insight
+# ----------------------------------------------------------------------
+
+
+def _split_chunks(x, k: int, axis: int = 0):
+    if x.shape[axis] % k:
+        raise ValueError(f"dim {axis} ({x.shape[axis]}) not divisible by {k} streams")
+    return jnp.split(x, k, axis=axis)
+
+
+def multi_stream_all_reduce(
+    x,
+    comms: Sequence[StreamComm],
+    tokens: Optional[Sequence[Token]] = None,
+    axis: int = 0,
+):
+    """Split ``x`` into ``len(comms)`` chunks and all-reduce each on its own
+    stream. With distinct streams the chunks carry NO mutual dependency —
+    XLA overlaps them (parallel VCIs). With one shared stream/token the
+    chunks serialize (the paper's global-critical-section baseline).
+
+    Returns (y, tokens').
+    """
+    k = len(comms)
+    chunks = _split_chunks(x, k, axis)
+    tokens = list(tokens) if tokens is not None else [None] * k
+    outs: List[jax.Array] = []
+    for i, (c, comm) in enumerate(zip(chunks, comms)):
+        y, tokens[i] = all_reduce(c, comm, tokens[i])
+        outs.append(y)
+    return jnp.concatenate(outs, axis=axis), tokens
+
+
+def multi_stream_all_gather(
+    x,
+    comms: Sequence[StreamComm],
+    tokens: Optional[Sequence[Token]] = None,
+    axis: int = 0,
+    gather_axis: int = 0,
+):
+    k = len(comms)
+    chunks = _split_chunks(x, k, axis)
+    tokens = list(tokens) if tokens is not None else [None] * k
+    outs: List[jax.Array] = []
+    for i, (c, comm) in enumerate(zip(chunks, comms)):
+        y, tokens[i] = all_gather(c, comm, axis=gather_axis, token=tokens[i])
+        outs.append(y)
+    return jnp.concatenate(outs, axis=axis), tokens
+
+
+# ----------------------------------------------------------------------
+# Multiplex-comm p2p (MPIX_Stream_send/recv with stream indices)
+# ----------------------------------------------------------------------
+
+
+def stream_send_recv(
+    x,
+    comm: StreamComm,
+    perm: Sequence[Tuple[int, int]],
+    source_stream_index: int = 0,
+    dest_stream_index: int = 0,
+    token: Optional[Token] = None,
+):
+    """``MPIX_Stream_send``/``recv`` on a multiplex comm: the (src,dst)
+    stream indices select which attached stream's channel carries the
+    transfer. SPMD: every rank supplies its outgoing shard, receives the
+    incoming one. ``dest_stream_index=-1`` = any-stream receive (maps to
+    the first stream's channel; ordering only vs that stream)."""
+    if source_stream_index >= len(comm.streams):
+        raise IndexError("source_stream_index out of range")
+    if dest_stream_index >= len(comm.streams):
+        raise IndexError("dest_stream_index out of range")
+    use = comm.streams[max(dest_stream_index, 0)]
+    sub = StreamComm(comm.axes, (use,), comm.mesh)
+    return ppermute(x, sub, perm, token)

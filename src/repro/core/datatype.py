@@ -1,0 +1,591 @@
+"""MPI-style derived datatypes with the MPICH iovec extension (paper ext. 2).
+
+The paper's ``MPIX_Type_iov_len`` / ``MPIX_Type_iov`` let applications use
+MPI datatypes as a *general-purpose data layout API*: an O(1)-size
+descriptor for a non-contiguous layout, with random access to the i-th
+contiguous segment (an "iovec") without enumerating all of them.
+
+This module is a faithful port of that algebra:
+
+* constructors mirror ``MPI_Type_contiguous / vector / create_hvector /
+  indexed / create_hindexed / create_struct / create_subarray /
+  create_resized`` — a descriptor is a small tree, independent of the
+  number of segments it describes;
+* ``type_iov_len(dt, max_iov_bytes)`` returns the number of whole segments
+  within a byte budget (bisection, per the paper);
+* ``type_iov(dt, iov_offset, max_iov_len)`` returns segments
+  ``[iov_offset, iov_offset + max_iov_len)`` in O(depth + n), *not*
+  O(total_segments).
+
+Consumers inside the framework: the sharded checkpoint store (each shard
+is a ``subarray`` of the global array), the gradient bucketizer (a
+``struct`` over flattened parameter groups), and the ``dt_pack`` Pallas
+kernel (device-side pack of the uniform-stride fast path).
+
+Offsets/lengths are plain Python ints (host metadata, never traced).
+"""
+
+from __future__ import annotations
+
+import bisect
+import math
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Datatype",
+    "Iov",
+    "predefined",
+    "contiguous",
+    "vector",
+    "hvector",
+    "indexed",
+    "hindexed",
+    "struct",
+    "subarray",
+    "resized",
+    "type_size",
+    "type_extent",
+    "type_iov_len",
+    "type_iov",
+    "pack",
+    "unpack",
+    "pack_info",
+]
+
+
+@dataclass(frozen=True)
+class Iov:
+    """One contiguous segment: byte offset (from the type origin) + length.
+
+    Mirrors ``MPIX_Iov`` (``iov_base``/``iov_len``); offsets are relative
+    because there is no pointer arithmetic in host metadata land.
+    """
+
+    offset: int
+    length: int
+
+    def __iter__(self):  # allow tuple-unpacking
+        yield self.offset
+        yield self.length
+
+
+class Datatype:
+    """Base class. Subclasses are immutable descriptor nodes.
+
+    Core protocol (all O(depth) or O(log segments)):
+      * ``size``          — bytes of actual data
+      * ``extent`` / ``lb`` — span including gaps (MPI semantics)
+      * ``num_segments``  — number of maximal contiguous segments
+      * ``segment(i)``    — the i-th segment as :class:`Iov`
+      * ``cum_bytes(k)``  — total bytes of the first ``k`` segments
+      * ``is_contiguous`` — True iff data is one gap-free run starting at 0
+    """
+
+    size: int
+    lb: int
+    extent: int
+
+    # -- protocol -----------------------------------------------------
+    @property
+    def ub(self) -> int:
+        return self.lb + self.extent
+
+    @property
+    def num_segments(self) -> int:
+        raise NotImplementedError
+
+    def segment(self, i: int) -> Iov:
+        raise NotImplementedError
+
+    def cum_bytes(self, k: int) -> int:
+        raise NotImplementedError
+
+    @property
+    def is_contiguous(self) -> bool:
+        return self.num_segments == 1 and self.segment(0) == Iov(self.lb, self.size) and self.lb == 0
+
+    # -- sugar --------------------------------------------------------
+    def iovs(self) -> List[Iov]:
+        """Enumerate all segments (test/checkpoint use; O(num_segments))."""
+        return type_iov(self, 0, self.num_segments)
+
+    def __mul__(self, count: int) -> "Datatype":
+        return contiguous(count, self)
+
+
+# ----------------------------------------------------------------------
+# Leaf + combinators
+# ----------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class _Primitive(Datatype):
+    size: int
+    name: str = "byte"
+
+    lb: int = field(default=0, init=False)
+
+    @property
+    def extent(self) -> int:  # type: ignore[override]
+        return self.size
+
+    @property
+    def num_segments(self) -> int:
+        return 1 if self.size > 0 else 0
+
+    def segment(self, i: int) -> Iov:
+        if i != 0 or self.size == 0:
+            raise IndexError(i)
+        return Iov(0, self.size)
+
+    def cum_bytes(self, k: int) -> int:
+        return self.size if k >= 1 else 0
+
+
+def predefined(nbytes: int, name: str = "byte") -> Datatype:
+    """A predefined/primitive type of ``nbytes`` (e.g. MPI_BYTE=1, MPI_FLOAT=4)."""
+    if nbytes <= 0:
+        raise ValueError("primitive size must be positive")
+    return _Primitive(nbytes, name)
+
+
+BYTE = _Primitive(1, "byte")
+FLOAT = _Primitive(4, "float")
+DOUBLE = _Primitive(8, "double")
+BF16 = _Primitive(2, "bf16")
+INT32 = _Primitive(4, "int32")
+
+
+@dataclass(frozen=True)
+class _HVector(Datatype):
+    """count blocks of ``blocklength`` base elements, block i at byte
+    ``i * stride_bytes``.  ``vector``/``contiguous`` normalize to this."""
+
+    count: int
+    blocklength: int
+    stride_bytes: int
+    base: Datatype
+
+    def __post_init__(self):
+        if self.count < 0 or self.blocklength < 0:
+            raise ValueError("count/blocklength must be >= 0")
+
+    # -- MPI size/extent ----------------------------------------------
+    @property
+    def size(self) -> int:  # type: ignore[override]
+        return self.count * self.blocklength * self.base.size
+
+    @property
+    def lb(self) -> int:  # type: ignore[override]
+        if self.count == 0 or self.blocklength == 0:
+            return 0
+        first = self.base.lb
+        if self.stride_bytes < 0:
+            return (self.count - 1) * self.stride_bytes + first
+        return first
+
+    @property
+    def extent(self) -> int:  # type: ignore[override]
+        if self.count == 0 or self.blocklength == 0:
+            return 0
+        block_span = (self.blocklength - 1) * self.base.extent + self.base.extent
+        last_start = (self.count - 1) * abs(self.stride_bytes)
+        return last_start + block_span
+
+    # -- segment structure ---------------------------------------------
+    @property
+    def _base_dense(self) -> bool:
+        """base packs back-to-back with no holes when tiled at its extent."""
+        return self.base.is_contiguous and self.base.size == self.base.extent
+
+    @property
+    def _block_bytes(self) -> int:
+        return self.blocklength * self.base.size
+
+    @property
+    def _segs_per_block(self) -> int:
+        if self.blocklength == 0:
+            return 0
+        if self._base_dense:
+            return 1
+        return self.blocklength * self.base.num_segments
+
+    @property
+    def _fully_merged(self) -> bool:
+        """blocks themselves merge into one run (gap-free stride)."""
+        return (
+            self._base_dense
+            and (self.count <= 1 or self.stride_bytes == self._block_bytes)
+        )
+
+    @property
+    def num_segments(self) -> int:
+        if self.count == 0 or self.blocklength == 0 or self.base.size == 0:
+            return 0
+        if self._fully_merged:
+            return 1
+        return self.count * self._segs_per_block
+
+    def segment(self, i: int) -> Iov:
+        n = self.num_segments
+        if not (0 <= i < n):
+            raise IndexError(i)
+        if self._fully_merged:
+            return Iov(self.base.lb, self.size)
+        spb = self._segs_per_block
+        blk, r = divmod(i, spb)
+        off = blk * self.stride_bytes
+        if self._base_dense:
+            return Iov(off + self.base.lb, self._block_bytes)
+        rep, j = divmod(r, self.base.num_segments)
+        inner = self.base.segment(j)
+        return Iov(off + rep * self.base.extent + inner.offset, inner.length)
+
+    def cum_bytes(self, k: int) -> int:
+        k = min(max(k, 0), self.num_segments)
+        if k == 0:
+            return 0
+        if self._fully_merged:
+            return self.size
+        spb = self._segs_per_block
+        blocks, r = divmod(k, spb)
+        total = blocks * self._block_bytes
+        if r:
+            if self._base_dense:  # spb == 1, r == 0 always; defensive
+                total += self._block_bytes
+            else:
+                reps, j = divmod(r, self.base.num_segments)
+                total += reps * self.base.size + self.base.cum_bytes(j)
+        return total
+
+
+@dataclass(frozen=True)
+class _Blocks(Datatype):
+    """Shared machinery for indexed/hindexed/struct: an explicit small list
+    of (displacement_bytes, count, child) blocks with prefix sums."""
+
+    displs: Tuple[int, ...]
+    counts: Tuple[int, ...]
+    children: Tuple[Datatype, ...]
+
+    def __post_init__(self):
+        if not (len(self.displs) == len(self.counts) == len(self.children)):
+            raise ValueError("blocks must be parallel lists")
+        seg_prefix = [0]
+        byte_prefix = [0]
+        for c, ch in zip(self.counts, self.children):
+            rep = _HVector(c, 1, ch.extent, ch) if c != 1 else ch
+            seg_prefix.append(seg_prefix[-1] + (rep.num_segments if c > 0 else 0))
+            byte_prefix.append(byte_prefix[-1] + c * ch.size)
+        object.__setattr__(self, "_seg_prefix", tuple(seg_prefix))
+        object.__setattr__(self, "_byte_prefix", tuple(byte_prefix))
+
+    def _rep(self, b: int) -> Datatype:
+        c, ch = self.counts[b], self.children[b]
+        return _HVector(c, 1, ch.extent, ch) if c != 1 else ch
+
+    @property
+    def size(self) -> int:  # type: ignore[override]
+        return self._byte_prefix[-1]
+
+    @property
+    def lb(self) -> int:  # type: ignore[override]
+        cands = [
+            d + self._rep(b).lb
+            for b, d in enumerate(self.displs)
+            if self.counts[b] > 0 and self.children[b].size > 0
+        ]
+        return min(cands) if cands else 0
+
+    @property
+    def extent(self) -> int:  # type: ignore[override]
+        cands = [
+            d + self._rep(b).ub
+            for b, d in enumerate(self.displs)
+            if self.counts[b] > 0 and self.children[b].size > 0
+        ]
+        return (max(cands) - self.lb) if cands else 0
+
+    @property
+    def num_segments(self) -> int:
+        return self._seg_prefix[-1]
+
+    def segment(self, i: int) -> Iov:
+        if not (0 <= i < self.num_segments):
+            raise IndexError(i)
+        b = bisect.bisect_right(self._seg_prefix, i) - 1
+        inner = self._rep(b).segment(i - self._seg_prefix[b])
+        return Iov(self.displs[b] + inner.offset, inner.length)
+
+    def cum_bytes(self, k: int) -> int:
+        k = min(max(k, 0), self.num_segments)
+        if k == 0:
+            return 0
+        b = bisect.bisect_right(self._seg_prefix, k - 1) - 1
+        return self._byte_prefix[b] + self._rep(b).cum_bytes(k - self._seg_prefix[b])
+
+
+@dataclass(frozen=True)
+class _Resized(Datatype):
+    base: Datatype
+    new_lb: int
+    new_extent: int
+
+    @property
+    def size(self) -> int:  # type: ignore[override]
+        return self.base.size
+
+    @property
+    def lb(self) -> int:  # type: ignore[override]
+        return self.new_lb
+
+    @property
+    def extent(self) -> int:  # type: ignore[override]
+        return self.new_extent
+
+    @property
+    def num_segments(self) -> int:
+        return self.base.num_segments
+
+    def segment(self, i: int) -> Iov:
+        return self.base.segment(i)
+
+    def cum_bytes(self, k: int) -> int:
+        return self.base.cum_bytes(k)
+
+    @property
+    def is_contiguous(self) -> bool:
+        return self.base.is_contiguous and self.new_lb == 0 and self.new_extent == self.size
+
+
+@dataclass(frozen=True)
+class _Shifted(Datatype):
+    """Internal: base displaced by ``disp`` bytes, with an overridden
+    lb/extent window (used by subarray, which spans the *full* array)."""
+
+    base: Datatype
+    disp: int
+    win_lb: int
+    win_extent: int
+
+    @property
+    def size(self) -> int:  # type: ignore[override]
+        return self.base.size
+
+    @property
+    def lb(self) -> int:  # type: ignore[override]
+        return self.win_lb
+
+    @property
+    def extent(self) -> int:  # type: ignore[override]
+        return self.win_extent
+
+    @property
+    def num_segments(self) -> int:
+        return self.base.num_segments
+
+    def segment(self, i: int) -> Iov:
+        inner = self.base.segment(i)
+        return Iov(self.disp + inner.offset, inner.length)
+
+    def cum_bytes(self, k: int) -> int:
+        return self.base.cum_bytes(k)
+
+
+# ----------------------------------------------------------------------
+# Public constructors (mirror MPI_Type_*)
+# ----------------------------------------------------------------------
+
+
+def contiguous(count: int, base: Datatype) -> Datatype:
+    return _HVector(count, 1, base.extent, base)
+
+
+def vector(count: int, blocklength: int, stride: int, base: Datatype) -> Datatype:
+    """stride in *elements* of base (MPI_Type_vector)."""
+    return _HVector(count, blocklength, stride * base.extent, base)
+
+
+def hvector(count: int, blocklength: int, stride_bytes: int, base: Datatype) -> Datatype:
+    return _HVector(count, blocklength, stride_bytes, base)
+
+
+def indexed(blocklengths: Sequence[int], displacements: Sequence[int], base: Datatype) -> Datatype:
+    """displacements in elements of base (MPI_Type_indexed)."""
+    return _Blocks(
+        tuple(int(d) * base.extent for d in displacements),
+        tuple(int(c) for c in blocklengths),
+        tuple(base for _ in blocklengths),
+    )
+
+
+def hindexed(blocklengths: Sequence[int], displacements_bytes: Sequence[int], base: Datatype) -> Datatype:
+    return _Blocks(
+        tuple(int(d) for d in displacements_bytes),
+        tuple(int(c) for c in blocklengths),
+        tuple(base for _ in blocklengths),
+    )
+
+
+def struct(
+    blocklengths: Sequence[int],
+    displacements_bytes: Sequence[int],
+    types: Sequence[Datatype],
+) -> Datatype:
+    return _Blocks(
+        tuple(int(d) for d in displacements_bytes),
+        tuple(int(c) for c in blocklengths),
+        tuple(types),
+    )
+
+
+def resized(base: Datatype, lb: int, extent: int) -> Datatype:
+    return _Resized(base, lb, extent)
+
+
+def subarray(
+    sizes: Sequence[int],
+    subsizes: Sequence[int],
+    starts: Sequence[int],
+    base: Datatype,
+    order: str = "C",
+) -> Datatype:
+    """MPI_Type_create_subarray. ``base`` must be dense (size == extent).
+
+    The paper's flagship example: the YZ surface of an Nx×Ny×Nz volume is
+    Ny·Nz segments but an O(1) two-level nested-vector descriptor.
+    """
+    sizes, subsizes, starts = list(sizes), list(subsizes), list(starts)
+    ndims = len(sizes)
+    if not (len(subsizes) == len(starts) == ndims):
+        raise ValueError("sizes/subsizes/starts rank mismatch")
+    for d in range(ndims):
+        if not (0 <= starts[d] and starts[d] + subsizes[d] <= sizes[d]):
+            raise ValueError(f"subarray dim {d} out of bounds")
+    if base.size != base.extent or not base.is_contiguous:
+        raise ValueError("subarray base must be dense")
+    if order not in ("C", "F"):
+        raise ValueError("order must be 'C' or 'F'")
+    if order == "F":
+        sizes, subsizes, starts = sizes[::-1], subsizes[::-1], starts[::-1]
+
+    e = base.extent
+    # innermost (fastest-varying) dim is contiguous runs of base
+    dt: Datatype = contiguous(subsizes[-1], base)
+    row_elems = sizes[-1]
+    for d in range(ndims - 2, -1, -1):
+        stride_elems = math.prod(sizes[d + 1 :])
+        dt = hvector(subsizes[d], 1, stride_elems * e, dt)
+        row_elems *= sizes[d]
+    disp = sum(starts[d] * math.prod(sizes[d + 1 :]) for d in range(ndims)) * e
+    full_extent = math.prod(sizes) * e
+    return _Shifted(dt, disp, 0, full_extent)
+
+
+# ----------------------------------------------------------------------
+# The MPIX iovec extension API
+# ----------------------------------------------------------------------
+
+
+def type_size(dt: Datatype) -> int:
+    return dt.size
+
+
+def type_extent(dt: Datatype) -> Tuple[int, int]:
+    return dt.lb, dt.extent
+
+
+def type_iov_len(dt: Datatype, max_iov_bytes: int) -> Tuple[int, int]:
+    """``MPIX_Type_iov_len``: number of *whole* segments within
+    ``max_iov_bytes`` and the bytes they cover.  ``-1`` (or anything >=
+    type size) → all segments.  O(log segments · depth) by bisection on
+    ``cum_bytes`` — the paper notes max_iov_bytes "can be used to bisect
+    the byte offset of an arbitrary segment".
+    """
+    n = dt.num_segments
+    if max_iov_bytes < 0 or max_iov_bytes >= dt.size:
+        return n, dt.size
+    lo, hi = 0, n  # invariant: cum_bytes(lo) <= max < cum_bytes(hi+..)
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if dt.cum_bytes(mid) <= max_iov_bytes:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo, dt.cum_bytes(lo)
+
+
+def type_iov(dt: Datatype, iov_offset: int, max_iov_len: int) -> List[Iov]:
+    """``MPIX_Type_iov``: segments [iov_offset, iov_offset+max_iov_len)."""
+    n = dt.num_segments
+    if iov_offset < 0:
+        raise ValueError("iov_offset must be >= 0")
+    stop = min(n, iov_offset + max(0, max_iov_len))
+    return [dt.segment(i) for i in range(iov_offset, stop)]
+
+
+# ----------------------------------------------------------------------
+# Host-side pack/unpack (numpy) — the classic MPI datatype engine
+# ----------------------------------------------------------------------
+
+
+def pack(buf: np.ndarray, dt: Datatype, count: int = 1) -> np.ndarray:
+    """Gather ``count`` elements of ``dt`` from byte-buffer ``buf`` into a
+    contiguous uint8 array (MPI_Pack). Reference path for the ``dt_pack``
+    Pallas kernel and the checkpoint writer."""
+    flat = np.ascontiguousarray(buf).view(np.uint8).reshape(-1)
+    out = np.empty(count * dt.size, dtype=np.uint8)
+    pos = 0
+    for rep in range(count):
+        basedisp = rep * dt.extent
+        for off, ln in dt.iovs():
+            out[pos : pos + ln] = flat[basedisp + off : basedisp + off + ln]
+            pos += ln
+    return out
+
+
+def unpack(packed: np.ndarray, dt: Datatype, out: np.ndarray, count: int = 1) -> np.ndarray:
+    """Scatter a contiguous buffer back through the datatype (MPI_Unpack)."""
+    flat = out.view(np.uint8).reshape(-1)
+    src = packed.view(np.uint8).reshape(-1)
+    pos = 0
+    for rep in range(count):
+        basedisp = rep * dt.extent
+        for off, ln in dt.iovs():
+            flat[basedisp + off : basedisp + off + ln] = src[pos : pos + ln]
+            pos += ln
+    return out
+
+
+def pack_info(dt: Datatype):
+    """If ``dt`` is a *uniform strided* layout (all segments equal length,
+    constant stride), return ``(nseg, seg_bytes, stride_bytes, disp0)`` so a
+    device kernel can pack it without a segment list; else ``None``.
+
+    This is the TPU adaptation of the datatype engine hot loop: the
+    dominant HPC layouts (array surfaces/halos) are uniform, and a blocked
+    Pallas gather handles them at memory-bandwidth; irregular layouts fall
+    back to the host iovec path.
+    """
+    n = dt.num_segments
+    if n == 0:
+        return None
+    s0 = dt.segment(0)
+    if n == 1:
+        return (1, s0.length, 0, s0.offset)
+    s1 = dt.segment(1)
+    stride = s1.offset - s0.offset
+    if s1.length != s0.length:
+        return None
+    last = dt.segment(n - 1)
+    if last.length != s0.length or last.offset != s0.offset + (n - 1) * stride:
+        return None
+    # spot-check a middle segment (uniform types are affine; blocks types
+    # may coincidentally match ends)
+    mid = dt.segment(n // 2)
+    if mid.length != s0.length or mid.offset != s0.offset + (n // 2) * stride:
+        return None
+    return (n, s0.length, stride, s0.offset)

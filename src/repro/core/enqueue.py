@@ -1,0 +1,153 @@
+"""Enqueue semantics: device-ordered communication (paper ext. 4).
+
+``MPIX_Send_enqueue``/``MPIX_Recv_enqueue`` place MPI operations *into a
+device stream*: the host never blocks, ordering comes from the stream.
+On TPU the device stream IS the XLA program's dataflow: an op "enqueued
+after" another is simply an op with a dependency edge. We reproduce the
+semantics with token-threaded ``ppermute`` transfers on an *offload*
+stream:
+
+* ``send_enqueue``/``recv_enqueue`` return immediately with a token
+  (host-async, like the paper's CUDA example that never calls
+  ``cudaStreamSynchronize``);
+* ``wait_enqueued`` materializes the dependency (the analogue of the
+  stream completing);
+* the non-blocking pair (``isend_enqueue``) returns an
+  :class:`EnqueuedRequest` whose completion is a *host-side* generalized
+  request — the paper's three-contexts point (offload stream / host
+  start-complete / actual transfer) maps to (XLA dataflow / host dispatch
+  / ICI transfer).
+
+This module is the transport of pipeline parallelism
+(:mod:`repro.parallel.pipeline`): microbatch activations are "enqueued"
+across pipeline-stage boundaries, and the 1F1B schedule relies on sends
+of step i overlapping compute of step i+1 — precisely the paper's
+motivation for getting the host out of the loop.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collectives
+from repro.core.progress import GeneralizedRequest, ProgressEngine, default_engine
+from repro.core.streams import MPIXStream, StreamComm, new_token, serialize_on
+
+__all__ = [
+    "send_enqueue",
+    "recv_enqueue",
+    "sendrecv_enqueue",
+    "isend_enqueue",
+    "wait_enqueue",
+    "EnqueuedRequest",
+    "shift_enqueue",
+]
+
+Token = jax.Array
+
+
+def _require_offload(comm: StreamComm) -> None:
+    if not comm.stream.is_offload and not comm.stream.is_null:
+        raise ValueError(
+            "enqueue ops need an offload stream (create with "
+            "info={'type': 'tpu_stream'}) or STREAM_NULL for implicit mode"
+        )
+
+
+def sendrecv_enqueue(
+    x,
+    comm: StreamComm,
+    perm: Sequence[Tuple[int, int]],
+    token: Optional[Token] = None,
+):
+    """SPMD matched send+recv enqueued on the comm's offload stream.
+
+    Every rank contributes its outgoing shard and receives per ``perm``.
+    Returns ``(received, token')`` — the token orders subsequent enqueued
+    ops on the same stream (CUDA-stream semantics)."""
+    _require_offload(comm)
+    token = token if token is not None else new_token()
+    y, token = collectives.ppermute(x, comm, perm, token)
+    return y, token
+
+
+def send_enqueue(x, comm: StreamComm, dest_offset: int, token: Optional[Token] = None):
+    """``MPIX_Send_enqueue`` to ``rank + dest_offset`` on a ring (SPMD: the
+    matching recv is implied on the destination)."""
+    n = comm.mesh.shape[comm.axes[0]]
+    perm = [(i, (i + dest_offset) % n) for i in range(n)]
+    return sendrecv_enqueue(x, comm, perm, token)
+
+
+def recv_enqueue(x_buffer, comm: StreamComm, src_offset: int, token: Optional[Token] = None):
+    """``MPIX_Recv_enqueue`` from ``rank - src_offset``; ``x_buffer`` is the
+    value this rank forwards (SPMD symmetry)."""
+    return send_enqueue(x_buffer, comm, src_offset, token)
+
+
+def shift_enqueue(x, comm: StreamComm, shift: int = 1, token: Optional[Token] = None):
+    """Pipeline-stage shift: stage s → stage s+shift (non-wrapping edges
+    receive zeros). The workhorse of :mod:`repro.parallel.pipeline`."""
+    _require_offload(comm)
+    n = comm.mesh.shape[comm.axes[0]]
+    if shift >= 0:
+        perm = [(i, i + shift) for i in range(n - shift)]
+    else:
+        perm = [(i, i + shift) for i in range(-shift, n)]
+    token = token if token is not None else new_token()
+    y, token = collectives.ppermute(x, comm, perm, token)
+    return y, token
+
+
+# ----------------------------------------------------------------------
+# Host-visible nonblocking wrappers (MPIX_Isend_enqueue / MPIX_Wait_enqueue)
+# ----------------------------------------------------------------------
+
+
+@dataclass
+class EnqueuedRequest:
+    """Host handle for an enqueued transfer: completion of the *dispatch*
+    (host side), distinct from completion of the offload stream itself —
+    the paper's separation of the three contexts."""
+
+    grequest: GeneralizedRequest
+    token: Token
+
+
+def isend_enqueue(
+    x,
+    comm: StreamComm,
+    dest_offset: int,
+    token: Optional[Token] = None,
+    engine: Optional[ProgressEngine] = None,
+) -> Tuple[jax.Array, EnqueuedRequest]:
+    """Non-blocking enqueue: returns (result, request). The request
+    completes when the dispatched device work is done (poll_fn queries the
+    device future, like cudaEventQuery in the paper's grequest example)."""
+    y, tok = send_enqueue(x, comm, dest_offset, token)
+
+    def _poll(state) -> bool:
+        arr = state["y"]
+        # jax arrays expose ready-ness via block-free is_ready on the
+        # underlying future; is_deleted arrays count as done.
+        try:
+            return arr.is_ready() if hasattr(arr, "is_ready") else True
+        except RuntimeError:
+            return True
+
+    req = (engine or default_engine()).grequest_start(
+        poll_fn=_poll,
+        extra_state={"y": y},
+        stream=comm.stream,
+        name="isend_enqueue",
+    )
+    return y, EnqueuedRequest(req, tok)
+
+
+def wait_enqueue(req: EnqueuedRequest, engine: Optional[ProgressEngine] = None) -> None:
+    """``MPIX_Wait_enqueue``."""
+    (engine or default_engine()).wait(req.grequest)

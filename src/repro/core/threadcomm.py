@@ -1,0 +1,151 @@
+"""Thread communicators → communicator algebra over mesh axes (paper ext. 5).
+
+The paper's ``MPIX_Threadcomm`` builds ONE communicator of size N·M from N
+processes × M threads, so code written against MPI ranks runs unchanged
+over the whole hierarchy (MPI×Threads), and a single collective replaces
+the "sandwich" (per-level nested) pattern.
+
+TPU adaptation (DESIGN.md §2): the hierarchy levels are MESH AXES —
+``pod`` ("process") × intra-pod ranks ("threads"). A :class:`ThreadComm`
+*flattens* an ordered axis tuple into one communicator:
+
+* ``threadcomm_init(mesh, outer, inner)`` ≈ ``MPIX_Threadcomm_init(comm,
+  num_threads)`` — it declares the N×M structure;
+* ``start()/finish()``  activate it inside a parallel region — here, a
+  ``shard_map`` region where those axes are manual; :meth:`run` is the
+  convenience wrapper that enters the region;
+* rank/size match the paper's example: each (pod, local) pair behaves as
+  one MPI process of the flattened world.
+
+The same algebra (flatten / split / sub) powers the *hierarchical*
+collectives in :mod:`repro.core.hierarchical`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.core.streams import StreamComm, MPIXStream, STREAM_NULL
+
+__all__ = [
+    "ThreadComm",
+    "threadcomm_init",
+    "threadcomm_free",
+    "comm_test_threadcomm",
+    "flatten_comm",
+    "split_comm",
+]
+
+
+@dataclass(frozen=True)
+class ThreadComm:
+    """A communicator spanning a flattened tuple of mesh axes.
+
+    ``axes`` is ordered major→minor: rank = axis0_idx · (Π inner sizes) +
+    … + axisK_idx, matching the paper's output where ranks 0..M-1 live in
+    process 0, M..2M-1 in process 1, etc.
+    """
+
+    mesh: object
+    axes: Tuple[str, ...]
+    stream: MPIXStream = STREAM_NULL
+
+    # -- geometry --------------------------------------------------------
+    def size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.axes]))
+
+    def axis_sizes(self) -> Tuple[int, ...]:
+        return tuple(self.mesh.shape[a] for a in self.axes)
+
+    def rank(self):
+        """Traced flattened rank; valid inside an active region only."""
+        r = lax.axis_index(self.axes[0])
+        for a in self.axes[1:]:
+            r = r * lax.axis_size(a) + lax.axis_index(a)
+        return r
+
+    @property
+    def is_threadcomm(self) -> bool:
+        return len(self.axes) > 1
+
+    # -- activation: the parallel region ----------------------------------
+    def run(
+        self,
+        fn: Callable,
+        *args,
+        in_specs,
+        out_specs,
+        check_vma: bool = False,
+    ):
+        """``MPIX_Threadcomm_start``/``finish`` bracket: execute ``fn`` as
+        per-rank SPMD code over the flattened communicator. ``fn`` may call
+        any :mod:`repro.core.collectives` op on comms derived from self."""
+        mapped = shard_map(
+            fn,
+            mesh=self.mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=check_vma,
+        )
+        return mapped(*args)
+
+    # -- algebra ---------------------------------------------------------
+    def as_stream_comm(self, stream: MPIXStream = STREAM_NULL) -> StreamComm:
+        return StreamComm(self.axes, (stream,), self.mesh)
+
+    def sub(self, axes: Sequence[str]) -> "ThreadComm":
+        """Sub-communicator over a subset of the axes (must stay ordered)."""
+        axes = tuple(axes)
+        if any(a not in self.axes for a in axes):
+            raise ValueError(f"axes {axes} not in comm axes {self.axes}")
+        return ThreadComm(self.mesh, axes, self.stream)
+
+    def outer(self) -> "ThreadComm":
+        """The 'process-level' communicator (major axis)."""
+        return self.sub(self.axes[:1])
+
+    def inner(self) -> "ThreadComm":
+        """The 'thread-level' communicator (all minor axes)."""
+        return self.sub(self.axes[1:])
+
+
+def threadcomm_init(mesh, axes: Sequence[str], stream: MPIXStream = STREAM_NULL) -> ThreadComm:
+    """``MPIX_Threadcomm_init``: declare the flattened communicator.
+
+    ``axes=("pod","data")`` → N_pod × N_data ranks; inactive until
+    :meth:`ThreadComm.run` enters a parallel region (shard_map)."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(axes)
+    for a in axes:
+        if a not in mesh.shape:
+            raise ValueError(f"axis {a!r} not in mesh {dict(mesh.shape)}")
+    return ThreadComm(mesh, axes, stream)
+
+
+def threadcomm_free(comm: ThreadComm) -> None:
+    """``MPIX_Threadcomm_free`` — no device state to release; host handle
+    only (kept for API parity + symmetry checks in tests)."""
+    return None
+
+
+def comm_test_threadcomm(comm) -> bool:
+    """``MPIX_Comm_test_threadcomm``: does this communicator span more than
+    one hierarchy level?"""
+    return isinstance(comm, ThreadComm) and comm.is_threadcomm
+
+
+def flatten_comm(mesh, *axes: str) -> ThreadComm:
+    return threadcomm_init(mesh, axes)
+
+
+def split_comm(comm: ThreadComm, keep: Sequence[str]) -> ThreadComm:
+    return comm.sub(keep)

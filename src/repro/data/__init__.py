@@ -1,0 +1,2 @@
+"""Data pipeline with progress-engine prefetch."""
+from repro.data.pipeline import DataConfig, SyntheticPipeline

@@ -1,0 +1,4 @@
+"""Fault tolerance: heartbeat failure detection, straggler policy, elastic re-mesh."""
+from repro.ft.heartbeat import HeartbeatMonitor
+from repro.ft.straggler import StragglerMonitor, Advice
+from repro.ft.elastic import MeshPlan, plan_remesh, reshard_plan

@@ -1,0 +1,87 @@
+"""Elastic re-meshing: survive pod/host loss by shrinking the mesh.
+
+``plan_remesh`` maps a failed-device set to the largest viable mesh
+(shrinking the data-parallel axes first — the model axes carry TP/EP
+state that would need weight resharding). ``reshard_plan`` computes, per
+NEW shard, the iovec segments to read from the iovec-store checkpoint
+files — because the store addresses the GLOBAL array (see
+checkpoint/iovec_store.py), restarting on a different mesh is just a
+different set of subarray queries. No shard-merging step, ever.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.checkpoint.iovec_store import shard_subarray
+from repro.core import datatype as dt
+
+__all__ = ["MeshPlan", "plan_remesh", "reshard_plan", "shard_slices"]
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    n_devices: int
+    dropped: Tuple[str, ...] = ()  # human-readable notes
+
+
+def plan_remesh(
+    shape: Sequence[int],
+    axis_names: Sequence[str],
+    n_failed: int,
+    dp_axes: Sequence[str] = ("pod", "data"),
+) -> MeshPlan:
+    """Shrink DP axes (outermost first) until the healthy device count
+    fits. TP ('model') is never shrunk — those shards hold disjoint model
+    state; losing model capacity means reload-from-checkpoint anyway."""
+    shape = list(shape)
+    names = list(axis_names)
+    healthy = int(np.prod(shape)) - n_failed
+    notes = []
+    for ax in dp_axes:
+        if ax not in names:
+            continue
+        i = names.index(ax)
+        while int(np.prod(shape)) > healthy and shape[i] > 1:
+            shape[i] -= 1
+            notes.append(f"shrunk {ax} to {shape[i]}")
+    if int(np.prod(shape)) > healthy:
+        raise RuntimeError(
+            f"cannot re-mesh: need {int(np.prod(shape))} devices, {healthy} healthy "
+            f"(model axes are not shrinkable)"
+        )
+    return MeshPlan(tuple(shape), tuple(names), int(np.prod(shape)), tuple(notes))
+
+
+def shard_slices(global_shape: Sequence[int], grid: Sequence[int], coord: Sequence[int]):
+    """Slices of the shard at ``coord`` in a dense block-partition ``grid``
+    (grid[i] divides global_shape[i])."""
+    out = []
+    for dim, g, c in zip(global_shape, grid, coord):
+        step = dim // g
+        out.append(slice(c * step, (c + 1) * step))
+    return tuple(out)
+
+
+def reshard_plan(
+    global_shape: Sequence[int],
+    new_grid: Sequence[int],
+    itemsize: int,
+) -> Dict[Tuple[int, ...], List[dt.Iov]]:
+    """Per-new-shard iovec read lists against the global checkpoint file.
+
+    Returns {coord: [Iov, ...]}. Total bytes across shards == array bytes
+    (verified by the property test) — the conservation law that makes the
+    restart correct by construction.
+    """
+    plans: Dict[Tuple[int, ...], List[dt.Iov]] = {}
+    for coord in np.ndindex(*new_grid):
+        idx = shard_slices(global_shape, new_grid, coord)
+        sub = shard_subarray(tuple(global_shape), idx, itemsize)
+        plans[tuple(coord)] = sub.iovs()
+    return plans

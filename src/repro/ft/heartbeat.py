@@ -1,0 +1,69 @@
+"""Failure detection: heartbeats as generalized requests.
+
+Every worker (pod/host in a real deployment; simulated ranks here) pings
+``record(rank)``; a detector generalized-request polls deadlines from the
+progress engine (ext. 1/6) — no dedicated watchdog thread beyond the
+engine's own progress thread, which the application spins up/down.
+On a miss, the registered callback fires (launch/train wires it to the
+elastic re-mesh planner + checkpoint restore path).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.core.progress import ProgressEngine, default_engine
+from repro.core.streams import MPIXStream, STREAM_NULL
+
+__all__ = ["HeartbeatMonitor"]
+
+
+class HeartbeatMonitor:
+    def __init__(
+        self,
+        ranks: List[int],
+        timeout: float = 5.0,
+        engine: Optional[ProgressEngine] = None,
+        stream: MPIXStream = STREAM_NULL,
+        on_failure: Optional[Callable[[List[int]], None]] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.timeout = timeout
+        self.engine = engine or default_engine()
+        self.stream = stream
+        self.on_failure = on_failure
+        self.clock = clock
+        self._lock = threading.Lock()
+        now = clock()
+        self._last: Dict[int, float] = {r: now for r in ranks}
+        self._failed: List[int] = []
+        self._req = self.engine.grequest_start(
+            poll_fn=self._poll, extra_state=None, stream=stream, name="heartbeat"
+        )
+
+    def record(self, rank: int) -> None:
+        with self._lock:
+            if rank in self._last:
+                self._last[rank] = self.clock()
+
+    def _poll(self, _state) -> bool:
+        """Completes (only) when failures were detected and reported."""
+        now = self.clock()
+        with self._lock:
+            newly = [r for r, t in self._last.items() if now - t > self.timeout and r not in self._failed]
+            self._failed.extend(newly)
+        if newly and self.on_failure is not None:
+            self.on_failure(list(newly))
+        return bool(self._failed)
+
+    @property
+    def failed(self) -> List[int]:
+        with self._lock:
+            return list(self._failed)
+
+    def check(self) -> List[int]:
+        """Synchronous check (one progress visit)."""
+        self.engine.progress(self.stream)
+        return self.failed

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU):
+flash_attention (blocked causal attention), rwkv6_scan (chunk-parallel
+WKV with data-dependent decay), dt_pack (datatype pack/unpack engine).
+Each has a pure-jnp oracle in ref.py and a jitted wrapper in ops.py."""

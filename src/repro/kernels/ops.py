@@ -1,0 +1,83 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+These are the integration points the model zoo calls (flash attention for
+GQA layers, chunked WKV for RWKV-6, dt_pack for the checkpoint/comm
+buffer path). ``interpret`` defaults to True because this container is
+CPU-only; on TPU pass interpret=False (same kernels, real lowering).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dt_pack as _dtp
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rwkv6_scan as _wkv
+from repro.core import datatype as dt
+
+__all__ = ["gqa_flash_attention", "wkv6", "pack_datatype", "unpack_datatype"]
+
+
+@partial(jax.jit, static_argnames=("causal", "interpret", "block_q", "block_k"))
+def gqa_flash_attention(q, k, v, causal=True, interpret=True, block_q=128, block_k=128):
+    """q (B,S,nq,hd); k/v (B,S,nkv,hd) → (B,S,nq,hd). GQA via KV repeat at
+    the head-folding level (no HBM copy on TPU: it lowers to a broadcast
+    in the BlockSpec index map domain)."""
+    B, S, nq, hd = q.shape
+    nkv = k.shape[2]
+    G = nq // nkv
+    qf = q.transpose(0, 2, 1, 3).reshape(B * nq, S, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * nq, S, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * nq, S, hd)
+    o = _fa.flash_attention(
+        qf, kf, vf, causal=causal, interpret=interpret, block_q=block_q, block_k=block_k
+    )
+    return o.reshape(B, nq, S, hd).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(w, r, k, v, bonus, state0, chunk=64, interpret=True):
+    return _wkv.wkv6_chunked(w, r, k, v, bonus, state0, chunk=chunk, interpret=interpret)
+
+
+def pack_datatype(buf_flat, dtype_descr: dt.Datatype, *, interpret: bool = True):
+    """Pack a uniform-strided datatype from a flat element buffer using the
+    Pallas kernel; raises on irregular layouts (host iovec path covers
+    those — see core.datatype.pack)."""
+    info = dt.pack_info(dtype_descr)
+    if info is None:
+        raise ValueError("irregular datatype: use core.datatype.pack (host path)")
+    nseg, seg_bytes, stride_bytes, disp = info
+    item = buf_flat.dtype.itemsize
+    assert seg_bytes % item == 0 and stride_bytes % max(item, 1) == 0 and disp % item == 0
+    seg_len = seg_bytes // item
+    if nseg == 1:
+        return jax.lax.dynamic_slice(buf_flat, (disp // item,), (seg_len,))
+    stride = stride_bytes // item
+    start = disp // item
+    window = jax.lax.dynamic_slice(buf_flat, (start,), ((nseg - 1) * stride + seg_len,))
+    pad = jnp.zeros((nseg * stride - window.shape[0],), buf_flat.dtype)
+    src = jnp.concatenate([window, pad]).reshape(nseg, stride)
+    return _dtp.dt_pack(src, seg_len, interpret=interpret).reshape(-1)
+
+
+def unpack_datatype(packed_flat, dtype_descr: dt.Datatype, out_len: int, *, interpret: bool = True):
+    """Inverse of pack_datatype into a zeroed flat buffer of out_len elems."""
+    info = dt.pack_info(dtype_descr)
+    if info is None:
+        raise ValueError("irregular datatype: use core.datatype.unpack (host path)")
+    nseg, seg_bytes, stride_bytes, disp = info
+    item = packed_flat.dtype.itemsize
+    seg_len = seg_bytes // item
+    if nseg == 1:
+        out = jnp.zeros((out_len,), packed_flat.dtype)
+        return jax.lax.dynamic_update_slice(out, packed_flat, (disp // item,))
+    stride = stride_bytes // item
+    start = disp // item
+    strided = _dtp.dt_unpack(packed_flat.reshape(nseg, seg_len), stride, interpret=interpret)
+    flat = strided.reshape(-1)[: (nseg - 1) * stride + seg_len]
+    out = jnp.zeros((out_len,), packed_flat.dtype)
+    return jax.lax.dynamic_update_slice(out, flat, (start,))

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "wkv6_ref", "pack_ref", "unpack_ref"]
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q/k/v (BH, S, d). fp32 softmax, no blocking."""
+    BH, S, d = q.shape
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32), k.astype(jnp.float32)) / math.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def wkv6_ref(w, r, k, v, bonus, state0):
+    """Per-token WKV recurrence. w/r/k/v (B,S,H,hs) fp32; bonus (H,hs);
+    state0 (B,H,hs,hs). Returns (y, state)."""
+
+    def step(S, wrkv):
+        w_t, r_t, k_t, v_t = wrkv
+        kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + bonus[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    mv = lambda a: jnp.moveaxis(a, 1, 0)
+    state, y = jax.lax.scan(step, state0, (mv(w), mv(r), mv(k), mv(v)))
+    return jnp.moveaxis(y, 0, 1), state
+
+
+def pack_ref(src, seg_len: int):
+    return src[:, :seg_len]
+
+
+def unpack_ref(packed, stride: int):
+    nseg, seg_len = packed.shape
+    out = jnp.zeros((nseg, stride), packed.dtype)
+    return out.at[:, :seg_len].set(packed)

@@ -1,0 +1,235 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: hypothesis → change → re-lower → measure.
+
+Three chosen cells (from the 66-cell baseline, per the assignment's
+selection rule):
+  * granite-moe-1b-a400m × train_4k — WORST roofline fraction (0.002)
+  * deepseek-v3-671b × train_4k     — most collective-bound giant
+  * llama3-405b × train_4k          — closest to roofline (0.42) & most
+    representative of the paper's technique (stream/overlap + memory fit)
+
+Each variant is a ModelConfig transform; results append to
+results/hillclimb.json. Run:
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell granite --upto v3
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+from repro.launch.dryrun import lower_cell  # noqa: E402
+
+# variant registries: list of (tag, hypothesis, cfg_transform)
+VARIANTS = {
+    "granite": {
+        "arch": "granite-moe-1b-a400m",
+        "shape": "train_4k",
+        "steps": [
+            ("v0-baseline", "full TP-16 of a d_ff=512 model: activation ARs dominate", lambda c: c),
+            (
+                "v1-ep-only",
+                "d_ff/16=32-wide TP shards are pure overhead; replicate dense layers, "
+                "keep EP over experts + vocab sharding → activation ARs vanish, "
+                "collectives reduce to MoE dispatch + grad AR",
+                lambda c: c.replace(tp_strategy="ep_only"),
+            ),
+            (
+                "v2-ep-dispatch",
+                "pin the (E,C,d) dispatch layout so token→expert movement is one "
+                "all-to-all instead of GSPMD's guessed reshard chain",
+                lambda c: c.replace(tp_strategy="ep_only", moe_dispatch_sharding=True),
+            ),
+            (
+                "v3-scatter-combine",
+                "REFUTED v1/v2: the ~1TB AR is the MoE COMBINE (k gathers from the "
+                "EP-sharded (E,C,d) → k partial-sum ARs of (N,d) per layer). One "
+                "gate-weighted scatter-add replaces them with a single transfer: "
+                "predict AR bytes ÷~8",
+                lambda c: c.replace(tp_strategy="ep_only", moe_dispatch_sharding=True, moe_scatter_combine=True),
+            ),
+            (
+                "v4-seq-shard",
+                "remaining (N,d)-sized dispatch/combine operands replicate over "
+                "'model' under ep_only; sequence-sharding activations over 'model' "
+                "shrinks every token-space operand 16×: predict collective ÷16, "
+                "memory term down too",
+                lambda c: c.replace(tp_strategy="ep_only", moe_dispatch_sharding=True, moe_scatter_combine=True, seq_shard_acts=True),
+            ),
+        ],
+    },
+    "deepseek": {
+        "arch": "deepseek-v3-671b",
+        "shape": "train_4k",
+        "steps": [
+            ("v0-baseline", "TP-16 everywhere incl. d_expert=2048/16=128 expert shards", lambda c: c),
+            (
+                "v1-ep-only",
+                "EP over 256 experts (16/chip) with dense/MLA replicated... MLA+dense "
+                "layers are large (18432-wide) so full replication may regress compute "
+                "locality — measure",
+                lambda c: c.replace(tp_strategy="ep_only"),
+            ),
+            (
+                "v2-ep-dispatch",
+                "v1 + pinned dispatch layout (canonical MoE all-to-all)",
+                lambda c: c.replace(tp_strategy="ep_only", moe_dispatch_sharding=True),
+            ),
+            (
+                "v3-dispatch-only",
+                "keep baseline TP for MLA/dense (memory needs it at 671B) but pin the "
+                "MoE dispatch layout",
+                lambda c: c.replace(moe_dispatch_sharding=True),
+            ),
+            (
+                "v4-scatter-combine",
+                "granite's lesson transfers: replace the top-8 combine gathers "
+                "(8 partial ARs of (N,7168)!) with one scatter-add",
+                lambda c: c.replace(moe_dispatch_sharding=True, moe_scatter_combine=True),
+            ),
+            (
+                "v5-save-acts",
+                "v4 + remat policy that saves post-collective sublayer outputs: "
+                "backward skips re-running TP all-reduces (~1/3 of AR bytes)",
+                lambda c: c.replace(moe_dispatch_sharding=True, moe_scatter_combine=True, remat="save_acts"),
+            ),
+            (
+                "v6-seq-shard",
+                "v5 + sequence-parallel activations (token-space operands ÷16)",
+                lambda c: c.replace(moe_dispatch_sharding=True, moe_scatter_combine=True, remat="save_acts", seq_shard_acts=True),
+            ),
+            (
+                "v7-scatter-nopin",
+                "isolate the dispatch pin: scatter-combine WITHOUT the (E,C) "
+                "constraint — v2/v3 showed the pin itself triggered a 4x reshard "
+                "blowup at E=256; let GSPMD place the dispatch freely",
+                lambda c: c.replace(moe_scatter_combine=True, remat="save_acts"),
+            ),
+        ],
+    },
+    "jamba": {
+        "arch": "jamba-v0.1-52b",
+        "shape": "train_4k",
+        "steps": [
+            ("v0-baseline", "MoE gather-combine baseline (transfer check)", lambda c: c),
+            (
+                "v1-scatter-combine",
+                "generalization of the granite/deepseek fix to the third MoE arch",
+                lambda c: c.replace(moe_scatter_combine=True),
+            ),
+        ],
+    },
+    "whisper": {
+        "arch": "whisper-tiny",
+        "shape": "train_4k",
+        "steps": [
+            ("v0-baseline", "TP-16 of a d=384 model (96-wide FFN shards)", lambda c: c),
+            (
+                "v1-dp-only",
+                "tiny model: drop TP entirely (ep_only with no experts = pure DP; "
+                "vocab 51865 indivisible → replicated too) — all activation ARs "
+                "vanish, leaving only the ~50M-param grad AR",
+                lambda c: c.replace(tp_strategy="ep_only"),
+            ),
+        ],
+    },
+    "llama": {
+        "arch": "llama3-405b",
+        "shape": "train_4k",
+        "steps": [
+            ("v0-baseline", "TP-16 + DP-16, full remat: 6 activation ARs/layer/micro", lambda c: c),
+            (
+                "v1-save-acts",
+                "save tagged attn_out/ffn_out: remat recompute skips the 2 fwd ARs "
+                "per layer → ~1/3 fewer AR bytes; saved acts must be seq-sharded "
+                "to fit (v2), so expect memory up here",
+                lambda c: c.replace(remat="save_acts"),
+            ),
+            (
+                "v2-save-seq",
+                "v1 + sequence-parallel activation constraints: saved activations "
+                "shard S over 'model' (16×) — memory back down, AR bytes stay low; "
+                "GSPMD converts AR → RS+AG around constrained points",
+                lambda c: c.replace(remat="save_acts", seq_shard_acts=True),
+            ),
+            (
+                "v3-fsdp",
+                "params+opt (65 GiB/dev TP-only) exceed HBM: FSDP-shard weights over "
+                "data axis; with the microbatch constraint fixed, GSPMD should now "
+                "gather weights (small) instead of partial-AR activations (huge)",
+                lambda c: c.replace(remat="save_acts", seq_shard_acts=True, fsdp=True),
+            ),
+            (
+                "v4-fsdp-accum4",
+                "v3 regathers weights per microbatch; fewer microbatches → "
+                "proportionally less gather traffic, activation memory ×4 "
+                "(seq-sharded saves keep it in budget)",
+                lambda c: c.replace(remat="save_acts", seq_shard_acts=True, fsdp=True, grad_accum=4),
+            ),
+            (
+                "v5-fsdp-saveacts",
+                "v2 REFUTED seq-shard (941s: per-sublayer AG/RS ping-pong). Drop it; "
+                "keep the two confirmed wins: save_acts (fewer remat ARs) + fsdp "
+                "(memory fit): predict ~150s collective at ~51GiB/dev",
+                lambda c: c.replace(remat="save_acts", fsdp=True),
+            ),
+            (
+                "v6-fsdp-full-remat",
+                "v5 memory check: full remat + fsdp (no saved acts) — lowest-memory "
+                "feasible point; collectives back to baseline + gather traffic",
+                lambda c: c.replace(fsdp=True),
+            ),
+            (
+                "v7-fsdp-gather",
+                "root-cause fix for the FSDP regression: explicitly re-constrain "
+                "each scan-sliced layer's weights to TP-only at block entry — "
+                "XLA gathers the SMALL operand (weights, ~400MB/layer) instead of "
+                "partial-AR'ing activations; predict v5's 14.4TB AR → ~5.4TB AR "
+                "+ ~2.4TB AG at unchanged 9.1GiB/dev args",
+                lambda c: c.replace(remat="save_acts", fsdp=True, fsdp_gather_layers=True),
+            ),
+        ],
+    },
+}
+
+
+def run_cell(cell: str, upto: str = None, out="results/hillclimb.json"):
+    spec = VARIANTS[cell]
+    results = []
+    if os.path.exists(out):
+        results = json.load(open(out))
+    for tag, hypothesis, tf in spec["steps"]:
+        if any(r.get("variant") == tag and r.get("arch") == spec["arch"] for r in results):
+            print(f"[hillclimb] skip {tag} (already recorded)")
+            continue
+        print(f"[hillclimb] {spec['arch']} {tag}: {hypothesis[:100]}")
+        try:
+            r = lower_cell(spec["arch"], spec["shape"], multi_pod=False, cfg_transform=tf, tag=tag)
+            r["hypothesis"] = hypothesis
+        except Exception as e:
+            import traceback
+
+            traceback.print_exc()
+            r = {"arch": spec["arch"], "variant": tag, "error": repr(e), "hypothesis": hypothesis}
+        results.append(r)
+        json.dump(results, open(out, "w"), indent=1)
+        if upto and tag.startswith(upto):
+            break
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(VARIANTS) + ["all"], default="all")
+    ap.add_argument("--upto", default=None)
+    ap.add_argument("--out", default="results/hillclimb.json")
+    args = ap.parse_args()
+    cells = list(VARIANTS) if args.cell == "all" else [args.cell]
+    for c in cells:
+        run_cell(c, args.upto, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = ("data", "model") — 256 v5e chips.
+Multi-pod:  (2, 16, 16) = ("pod", "data", "model") — 512 chips; the "pod"
+axis crosses the slower inter-pod links, so DP spans ("pod","data") and
+the hierarchical collectives in repro.core.hierarchical split legs
+accordingly.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (dryrun.py must set XLA_FLAGS first).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    return jax.make_mesh(shape, axes)
+
+
+class HW:
+    """TPU v5e per-chip roofline constants (targets; container is CPU)."""
+
+    PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+    HBM_BW = 819e9  # B/s
+    ICI_BW_PER_LINK = 50e9  # B/s/link (~)
+    HBM_BYTES = 16 * 1024**3

@@ -1,0 +1,3 @@
+"""Model zoo: unified transformer (dense/MoE/MLA/local-global/VLM),
+RWKV-6, Mamba/Jamba hybrid, Whisper enc-dec. See repro.models.api."""
+from repro.models.config import MLAConfig, MoEConfig, ModelConfig, SSMConfig

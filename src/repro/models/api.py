@@ -1,0 +1,93 @@
+"""Public model API: one dispatch surface over the whole zoo.
+
+    init_params(cfg, key)                     → params pytree
+    loss_fn(cfg, params, batch)               → (loss, metrics)
+    init_cache(cfg, B, max_len)               → decode cache/state
+    prefill(cfg, params, batch, max_len)      → (last_logits, cache)
+    decode_step(cfg, params, cache, tok, pos) → (logits, cache)
+
+Batches are dicts: ``tokens`` always; ``enc_frames`` (audio stub) for
+enc-dec; ``img_embeds`` (patch stub) for VLM; optional ``loss_mask``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models import jamba as jamba_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models import transformer as tf_mod
+from repro.models import whisper as whisper_mod
+from repro.models.config import ModelConfig
+
+__all__ = ["init_params", "loss_fn", "init_cache", "prefill", "decode_step"]
+
+
+def _family(cfg: ModelConfig) -> str:
+    if cfg.encdec:
+        return "encdec"
+    if cfg.family == "ssm_rwkv":
+        return "rwkv"
+    if cfg.family == "hybrid":
+        return "jamba"
+    return "transformer"
+
+
+def init_params(cfg: ModelConfig, key):
+    f = _family(cfg)
+    if f == "rwkv":
+        return rwkv_mod.init_rwkv(cfg, key)
+    if f == "jamba":
+        return jamba_mod.init_jamba(cfg, key)
+    if f == "encdec":
+        return whisper_mod.init_whisper(cfg, key)
+    return tf_mod.init_lm(cfg, key)
+
+
+def abstract_params(cfg: ModelConfig):
+    """Params as ShapeDtypeStructs — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    f = _family(cfg)
+    if f == "rwkv":
+        return rwkv_mod.rwkv_loss(cfg, params, batch)
+    if f == "jamba":
+        return jamba_mod.jamba_loss(cfg, params, batch)
+    if f == "encdec":
+        return whisper_mod.whisper_loss(cfg, params, batch)
+    return tf_mod.lm_loss(cfg, params, batch)
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int):
+    f = _family(cfg)
+    if f == "rwkv":
+        return rwkv_mod.init_state(cfg, B, max_len)
+    if f == "jamba":
+        return jamba_mod.init_cache(cfg, B, max_len)
+    if f == "encdec":
+        return whisper_mod.init_cache(cfg, B, max_len)
+    return tf_mod.init_cache(cfg, B, max_len)
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len=None):
+    f = _family(cfg)
+    if f == "rwkv":
+        return rwkv_mod.rwkv_prefill(cfg, params, batch, max_len)
+    if f == "jamba":
+        return jamba_mod.jamba_prefill(cfg, params, batch, max_len)
+    if f == "encdec":
+        return whisper_mod.whisper_prefill(cfg, params, batch, max_len)
+    return tf_mod.prefill(cfg, params, batch, max_len)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    f = _family(cfg)
+    if f == "rwkv":
+        return rwkv_mod.rwkv_decode_step(cfg, params, cache, tokens, pos)
+    if f == "jamba":
+        return jamba_mod.jamba_decode_step(cfg, params, cache, tokens, pos)
+    if f == "encdec":
+        return whisper_mod.whisper_decode_step(cfg, params, cache, tokens, pos)
+    return tf_mod.decode_step(cfg, params, cache, tokens, pos)

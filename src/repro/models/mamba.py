@@ -1,0 +1,134 @@
+"""Mamba-1 selective-SSM block (for Jamba, arXiv:2403.19887).
+
+Jamba flavour: RMSNorm on dt/B/C, d_state=16, d_conv=4, expand=2.
+Full-sequence path uses a chunked sequential scan (chunk body
+rematerialised); decode keeps an O(1) (conv, ssm) state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import dense_init, rms_norm, split_keys
+from repro.models.config import ModelConfig
+
+__all__ = ["mamba_params", "mamba_full", "mamba_decode", "mamba_init_state"]
+
+CHUNK = 128
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    return s.d_inner(cfg.d_model), s.d_state, s.d_conv, s.resolved_dt_rank(cfg.d_model)
+
+
+def mamba_params(cfg: ModelConfig, key):
+    d = cfg.d_model
+    di, ds, dc, dtr = _dims(cfg)
+    ks = split_keys(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype=cfg.pdtype),
+        "conv_w": dense_init(ks[1], (dc, di), scale=0.3, dtype=cfg.pdtype),
+        "conv_b": jnp.zeros((di,), cfg.pdtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * ds), dtype=cfg.pdtype),
+        "dt_proj": dense_init(ks[3], (dtr, di), scale=dtr**-0.5, dtype=cfg.pdtype),
+        "dt_bias": jnp.full((di,), -4.6, cfg.pdtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))).astype(jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "dt_norm": jnp.zeros((dtr,), cfg.pdtype),
+        "b_norm": jnp.zeros((ds,), cfg.pdtype),
+        "c_norm": jnp.zeros((ds,), cfg.pdtype),
+        "out_proj": dense_init(ks[4], (di, d), dtype=cfg.pdtype),
+    }
+
+
+def mamba_init_state(cfg: ModelConfig, B: int):
+    di, ds, dc, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((B, dc - 1, di), cfg.cdtype),
+        "ssm": jnp.zeros((B, di, ds), jnp.float32),
+    }
+
+
+def _causal_conv(p, x, conv_state):
+    """Depthwise causal conv via shift-sum (d_conv is tiny). x (B,S,di);
+    conv_state (B, dc-1, di) = trailing inputs of the previous segment."""
+    dc = p["conv_w"].shape[0]
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # (B, S+dc-1, di)
+    S = x.shape[1]
+    out = jnp.zeros_like(x)
+    for i in range(dc):
+        out = out + xp[:, i : i + S] * p["conv_w"][i].astype(x.dtype)
+    new_state = xp[:, xp.shape[1] - (dc - 1) :]
+    return out + p["conv_b"].astype(x.dtype), new_state
+
+
+def _ssm_inputs(cfg, p, xc):
+    """xc (B,S,di) post-conv+silu → (dt, B_, C_) fp32."""
+    s = cfg.ssm
+    dtr = s.resolved_dt_rank(cfg.d_model)
+    ds = s.d_state
+    x_dbl = xc @ p["x_proj"].astype(xc.dtype)
+    dt_r, B_, C_ = jnp.split(x_dbl, [dtr, dtr + ds], axis=-1)
+    dt_r = rms_norm(dt_r, p["dt_norm"])
+    B_ = rms_norm(B_, p["b_norm"]).astype(jnp.float32)
+    C_ = rms_norm(C_, p["c_norm"]).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (dt_r @ p["dt_proj"].astype(xc.dtype)).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B,S,di)
+    return dt, B_, C_
+
+
+def _ssm_scan(dt, B_, C_, x32, A, D, h):
+    """Sequential selective scan. dt/x32 (B,c,di); B_/C_ (B,c,ds);
+    h (B,di,ds). Returns y (B,c,di), h'."""
+
+    def step(h, args):
+        dt_t, b_t, c_t, x_t = args  # (B,di), (B,ds), (B,ds), (B,di)
+        dA = jnp.exp(dt_t[..., None] * A)  # (B,di,ds)
+        dBx = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bds,bs->bd", h, c_t) + D * x_t
+        return h, y
+
+    mv = lambda a: jnp.moveaxis(a, 1, 0)
+    h, y = lax.scan(step, h, (mv(dt), mv(B_), mv(C_), mv(x32)))
+    return jnp.moveaxis(y, 0, 1), h
+
+
+def mamba_full(cfg: ModelConfig, p, x, state=None):
+    """x (B,S,d) → (y (B,S,d), state'). Chunked over S."""
+    B, S, d = x.shape
+    di, ds, dc, _ = _dims(cfg)
+    if state is None:
+        state = mamba_init_state(cfg, B)
+    xz = x @ p["in_proj"].astype(x.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(p, x_in, state["conv"])
+    xc = jax.nn.silu(xc)
+    dt, B_, C_ = _ssm_inputs(cfg, p, xc)
+    A = -jnp.exp(p["A_log"])  # (di,ds)
+    x32 = xc.astype(jnp.float32)
+
+    n_chunks = max(1, S // CHUNK)
+    if S % CHUNK == 0 and n_chunks > 1:
+        def chunk_body(h, args):
+            y, h2 = _ssm_scan(*args, A, p["D"], h)
+            return h2, y
+
+        body = jax.checkpoint(chunk_body)
+        resh = lambda a: a.reshape(B, n_chunks, CHUNK, a.shape[-1]).swapaxes(0, 1)
+        h, y = lax.scan(body, state["ssm"], (resh(dt), resh(B_), resh(C_), resh(x32)))
+        y = y.swapaxes(0, 1).reshape(B, S, di)
+    else:
+        y, h = _ssm_scan(dt, B_, C_, x32, A, p["D"], state["ssm"])
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(x.dtype), {"conv": conv_state, "ssm": h}
+
+
+def mamba_decode(cfg: ModelConfig, p, x, state):
+    """Single-token step: x (B,1,d)."""
+    return mamba_full(cfg, p, x, state)

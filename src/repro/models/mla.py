@@ -1,0 +1,109 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Train/prefill expand the latent into per-head K/V; decode uses the
+*absorbed* form: the cache holds only the (kv_lora_rank + rope_dim)-wide
+latent per token, and W_UK / W_UV are folded into the query/output
+projections — the memory win that makes 128-head attention decodable.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init, rms_norm, split_keys
+from repro.models.config import ModelConfig
+
+__all__ = ["mla_params", "mla_full", "mla_decode"]
+
+
+def mla_params(cfg: ModelConfig, key):
+    m = cfg.mla
+    d, nq = cfg.d_model, cfg.n_heads
+    ks = split_keys(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dtype=cfg.pdtype),
+        "q_norm": jnp.zeros((m.q_lora_rank,), cfg.pdtype),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, nq * m.qk_head_dim), dtype=cfg.pdtype),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype=cfg.pdtype),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), cfg.pdtype),
+        "wkv_b": dense_init(
+            ks[3], (m.kv_lora_rank, nq * (m.qk_nope_head_dim + m.v_head_dim)), dtype=cfg.pdtype
+        ),
+        "wo": dense_init(ks[4], (nq * m.v_head_dim, d), dtype=cfg.pdtype),
+    }
+
+
+def _project_q(cfg, p, x, positions, theta):
+    m = cfg.mla
+    B, S, _ = x.shape
+    nq = cfg.n_heads
+    cq = rms_norm(x @ p["wq_a"].astype(cfg.cdtype), p["q_norm"])
+    q = (cq @ p["wq_b"].astype(cfg.cdtype)).reshape(B, S, nq, m.qk_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, theta)
+    return q_nope, q_rope
+
+
+def _project_latent(cfg, p, x, positions, theta):
+    m = cfg.mla
+    ckv_full = x @ p["wkv_a"].astype(cfg.cdtype)
+    c_kv, k_rope = jnp.split(ckv_full, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_full(cfg: ModelConfig, p, x, positions, theta: float):
+    """Full-sequence MLA. Returns (out, (c_kv, k_rope)) — latent cache seed."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    nq = cfg.n_heads
+    q_nope, q_rope = _project_q(cfg, p, x, positions, theta)
+    c_kv, k_rope = _project_latent(cfg, p, x, positions, theta)
+    kv = (c_kv @ p["wkv_b"].astype(cfg.cdtype)).reshape(
+        B, S, nq, m.qk_nope_head_dim + m.v_head_dim
+    )
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, nq, m.qk_rope_head_dim))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    scale = 1.0 / math.sqrt(m.qk_head_dim)
+    logits = jnp.einsum("bsnh,btnh->bnst", q, k).astype(jnp.float32) * scale
+    mask = (jnp.arange(S)[None, :] <= jnp.arange(S)[:, None])[None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, -1).astype(v.dtype)
+    out = jnp.einsum("bnst,btnv->bsnv", probs, v).reshape(B, S, nq * m.v_head_dim)
+    return out @ p["wo"].astype(cfg.cdtype), (c_kv, k_rope)
+
+
+def mla_decode(cfg: ModelConfig, p, x, cache, pos, theta: float):
+    """Absorbed one-token decode. cache = (c_kv (B,T,r), k_rope (B,T,dr));
+    pos (B,). Scores/outputs computed in latent space."""
+    m = cfg.mla
+    B = x.shape[0]
+    nq = cfg.n_heads
+    q_nope, q_rope = _project_q(cfg, p, x, pos[:, None], theta)  # (B,1,nq,·)
+    c_new, kr_new = _project_latent(cfg, p, x, pos[:, None], theta)
+    C, KR = cache
+    T = C.shape[1]
+    bidx = jnp.arange(B)
+    C = C.at[bidx, pos].set(c_new[:, 0].astype(C.dtype))
+    KR = KR.at[bidx, pos].set(kr_new[:, 0].astype(KR.dtype))
+
+    wkv_b = p["wkv_b"].astype(cfg.cdtype).reshape(m.kv_lora_rank, nq, -1)
+    wk = wkv_b[..., : m.qk_nope_head_dim]  # (r, nq, nope)
+    wv = wkv_b[..., m.qk_nope_head_dim :]  # (r, nq, v)
+    q_lat = jnp.einsum("bsnh,rnh->bsnr", q_nope, wk)  # absorb W_UK
+    scale = 1.0 / math.sqrt(m.qk_head_dim)
+    logits = (
+        jnp.einsum("bsnr,btr->bnst", q_lat, C.astype(cfg.cdtype))
+        + jnp.einsum("bsnh,bth->bnst", q_rope, KR.astype(cfg.cdtype))
+    ).astype(jnp.float32) * scale
+    mask = (jnp.arange(T)[None, :] <= pos[:, None])[:, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, -1).astype(cfg.cdtype)
+    out_lat = jnp.einsum("bnst,btr->bsnr", probs, C.astype(cfg.cdtype))
+    out = jnp.einsum("bsnr,rnv->bsnv", out_lat, wv).reshape(B, 1, nq * m.v_head_dim)
+    return out @ p["wo"].astype(cfg.cdtype), (C, KR)

@@ -1,0 +1,257 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with
+data-dependent per-channel decay.
+
+Time-mix: token-shift lerp with low-rank data-dependent deltas (the
+``maa`` LoRA), data-dependent decay ``w = exp(-exp(w0 + lora(x)))``, and
+the matrix-valued WKV state S (H, hs, hs):
+
+    y_t = r_t · (S_{t-1} + u ⊙ kᵀ_t v_t)
+    S_t = diag(w_t) S_{t-1} + kᵀ_t v_t
+
+Full-sequence path: projections vectorised over time, recurrence as a
+chunked ``lax.scan`` (chunk body rematerialised → O(S/chunk) saved
+states). Decode is O(1) per token. The Pallas kernel in
+``repro.kernels.rwkv6_scan`` implements the chunk-parallel form; this
+module is its oracle and the default (shardable) path.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import (
+    dense_init,
+    embed,
+    embed_params,
+    logits_out,
+    next_token_xent,
+    norm_params,
+    apply_norm,
+    rms_norm,
+    split_keys,
+)
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "init_rwkv",
+    "rwkv_loss",
+    "rwkv_forward",
+    "init_state",
+    "rwkv_prefill",
+    "rwkv_decode_step",
+    "HEAD_SIZE",
+]
+
+HEAD_SIZE = 64
+MAA_RANK = 32
+DECAY_RANK = 64
+CHUNK = 128
+
+
+def _n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // HEAD_SIZE
+
+
+def _layer_params(cfg: ModelConfig, key):
+    d = cfg.d_model
+    H = _n_heads(cfg)
+    ks = split_keys(key, 14)
+    return {
+        "ln1": norm_params(cfg, ks[0]),
+        "ln2": norm_params(cfg, ks[1]),
+        # token-shift mixing coefficients (x + (x_prev - x) * mu)
+        "mu_x": jnp.full((d,), 0.5, cfg.pdtype),
+        "mu_wkvrg": jnp.full((5, d), 0.5, cfg.pdtype),
+        "maa_w1": dense_init(ks[2], (d, 5 * MAA_RANK), scale=0.01, dtype=cfg.pdtype),
+        "maa_w2": dense_init(ks[3], (5, MAA_RANK, d), scale=0.01, dtype=cfg.pdtype),
+        # data-dependent decay
+        "w0": jnp.full((d,), -6.0, cfg.pdtype),
+        "decay_w1": dense_init(ks[4], (d, DECAY_RANK), scale=0.01, dtype=cfg.pdtype),
+        "decay_w2": dense_init(ks[5], (DECAY_RANK, d), scale=0.01, dtype=cfg.pdtype),
+        "bonus": dense_init(ks[6], (H, HEAD_SIZE), scale=0.1, dtype=cfg.pdtype),
+        "wr": dense_init(ks[7], (d, d), dtype=cfg.pdtype),
+        "wk": dense_init(ks[8], (d, d), dtype=cfg.pdtype),
+        "wv": dense_init(ks[9], (d, d), dtype=cfg.pdtype),
+        "wg": dense_init(ks[10], (d, d), dtype=cfg.pdtype),
+        "wo": dense_init(ks[11], (d, d), dtype=cfg.pdtype),
+        "ln_x": {"w": jnp.ones((d,), cfg.pdtype), "b": jnp.zeros((d,), cfg.pdtype)},
+        # channel mix
+        "mu_k_c": jnp.full((d,), 0.5, cfg.pdtype),
+        "mu_r_c": jnp.full((d,), 0.5, cfg.pdtype),
+        "wk_c": dense_init(ks[12], (d, cfg.d_ff), dtype=cfg.pdtype),
+        "wv_c": dense_init(ks[13], (cfg.d_ff, d), dtype=cfg.pdtype),
+        "wr_c": dense_init(ks[12], (d, d), dtype=cfg.pdtype),
+    }
+
+
+def init_rwkv(cfg: ModelConfig, key):
+    ks = split_keys(key, 3)
+    lkeys = jax.random.split(ks[2], cfg.n_layers)
+    return {
+        "embed": embed_params(cfg, ks[0]),
+        "final_norm": norm_params(cfg, ks[1]),
+        "layers": jax.vmap(lambda k: _layer_params(cfg, k))(lkeys),
+    }
+
+
+# ----------------------------------------------------------------------
+# time-mix projections (vectorised over time)
+# ----------------------------------------------------------------------
+
+
+def _time_mix_projections(cfg, lp, x, x_prev_first):
+    """x (B,S,d); x_prev_first (B,d) = last token of the previous segment.
+    Returns per-time (w, r, k, v, g) with shapes (B,S,·)."""
+    B, S, d = x.shape
+    x_prev = jnp.concatenate([x_prev_first[:, None], x[:, :-1]], axis=1)
+    dx = x_prev - x
+    xxx = x + dx * lp["mu_x"].astype(x.dtype)
+    maa = jnp.tanh(xxx @ lp["maa_w1"].astype(x.dtype)).reshape(B, S, 5, MAA_RANK)
+    maa = jnp.einsum("bsfr,frd->bsfd", maa, lp["maa_w2"].astype(x.dtype))
+    mu = lp["mu_wkvrg"].astype(x.dtype)  # (5,d)
+    xw, xk, xv, xr, xg = [x + dx * (mu[i] + maa[:, :, i]) for i in range(5)]
+    w = jnp.exp(
+        -jnp.exp(
+            (
+                lp["w0"].astype(jnp.float32)
+                + (jnp.tanh(xw @ lp["decay_w1"].astype(x.dtype)) @ lp["decay_w2"].astype(x.dtype)).astype(jnp.float32)
+            )
+        )
+    )  # (B,S,d) in (0,1)
+    r = xr @ lp["wr"].astype(x.dtype)
+    k = xk @ lp["wk"].astype(x.dtype)
+    v = xv @ lp["wv"].astype(x.dtype)
+    g = jax.nn.silu(xg @ lp["wg"].astype(x.dtype))
+    return w, r, k, v, g, x[:, -1]
+
+
+def _wkv_scan(w, r, k, v, bonus, state):
+    """Sequential WKV recurrence over the chunk. Shapes: (B,c,H,hs) for
+    w/r/k/v (fp32), state (B,H,hs,hs) fp32. Returns (y (B,c,H,hs), state)."""
+
+    def step(S, wrkv):
+        w_t, r_t, k_t, v_t = wrkv  # (B,H,hs)
+        kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + bonus[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    state, y = lax.scan(step, state, jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), (w, r, k, v)))
+    return jnp.moveaxis(y, 0, 1), state
+
+
+def _time_mix(cfg, lp, x, tm_state, use_kernel: bool = False):
+    """Full time-mix block over a sequence. tm_state = (x_last (B,d),
+    S (B,H,hs,hs) fp32)."""
+    B, S_len, d = x.shape
+    H = _n_heads(cfg)
+    x_last, wkv = tm_state
+    w, r, k, v, g, x_last = _time_mix_projections(cfg, lp, x, x_last)
+    shp = (B, S_len, H, HEAD_SIZE)
+    w32, r32, k32, v32 = (a.astype(jnp.float32).reshape(shp) for a in (w, r, k, v))
+    bonus = lp["bonus"].astype(jnp.float32)
+
+    if use_kernel:
+        from repro.kernels import rwkv6_scan as _krn
+
+        y, wkv = _krn.wkv6_chunked(w32, r32, k32, v32, bonus, wkv)
+    else:
+        # chunked scan: O(S/CHUNK) stored states, chunk body rematerialised
+        n_chunks = max(1, S_len // CHUNK)
+        if S_len % CHUNK == 0 and n_chunks > 1:
+            def chunk_body(S0, args):
+                yc, S1 = _wkv_scan(*args, bonus, S0)
+                return S1, yc
+
+            body = jax.checkpoint(chunk_body)
+            resh = lambda a: a.reshape(B, n_chunks, CHUNK, H, HEAD_SIZE).swapaxes(0, 1)
+            wkv, y = lax.scan(body, wkv, (resh(w32), resh(r32), resh(k32), resh(v32)))
+            y = y.swapaxes(0, 1).reshape(B, S_len, H, HEAD_SIZE)
+        else:
+            y, wkv = _wkv_scan(w32, r32, k32, v32, bonus, wkv)
+
+    y = y.reshape(B, S_len, d)
+    # per-head groupnorm
+    yh = y.reshape(B, S_len, H, HEAD_SIZE)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * lax.rsqrt(var + 64e-5)
+    y = yh.reshape(B, S_len, d) * lp["ln_x"]["w"].astype(jnp.float32) + lp["ln_x"]["b"].astype(jnp.float32)
+    y = y.astype(x.dtype) * g
+    return y @ lp["wo"].astype(x.dtype), (x_last, wkv)
+
+
+def _channel_mix(cfg, lp, x, cm_state):
+    x_prev = jnp.concatenate([cm_state[:, None], x[:, :-1]], axis=1)
+    dx = x_prev - x
+    xk = x + dx * lp["mu_k_c"].astype(x.dtype)
+    xr = x + dx * lp["mu_r_c"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ lp["wk_c"].astype(x.dtype)))
+    out = jax.nn.sigmoid(xr @ lp["wr_c"].astype(x.dtype)) * (k @ lp["wv_c"].astype(x.dtype))
+    return out, x[:, -1]
+
+
+def _layer(cfg, lp, x, state, use_kernel=False):
+    tm_state = (state["x_tm"], state["wkv"])
+    a, (x_tm, wkv) = _time_mix(cfg, lp, apply_norm(cfg, lp["ln1"], x), tm_state, use_kernel)
+    x = x + a
+    c, x_cm = _channel_mix(cfg, lp, apply_norm(cfg, lp["ln2"], x), state["x_cm"])
+    x = x + c
+    return x, {"x_tm": x_tm, "x_cm": x_cm, "wkv": wkv}
+
+
+# ----------------------------------------------------------------------
+# model-level API (matches transformer.py's contract)
+# ----------------------------------------------------------------------
+
+
+def init_state(cfg: ModelConfig, B: int, max_len: int = 0):
+    """O(1) recurrent state per layer (max_len ignored — that's the point)."""
+    H, d = _n_heads(cfg), cfg.d_model
+    one = {
+        "x_tm": jnp.zeros((B, d), cfg.cdtype),
+        "x_cm": jnp.zeros((B, d), cfg.cdtype),
+        "wkv": jnp.zeros((B, H, HEAD_SIZE, HEAD_SIZE), jnp.float32),
+    }
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), one)
+
+
+def rwkv_forward(cfg: ModelConfig, params, batch, state=None, use_kernel=False):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(cfg, params["embed"], tokens)
+    if state is None:
+        state = init_state(cfg, B)
+
+    def block(lp_state, x):
+        lp, st = lp_state
+        return _layer(cfg, lp, x, st, use_kernel)
+
+    def scan_body(x, xs):
+        wrapped = block
+        return wrapped(xs, x)
+
+    x, new_state = lax.scan(scan_body, x, (params["layers"], state))
+    x = apply_norm(cfg, params["final_norm"], x)
+    return logits_out(cfg, params["embed"], x), new_state
+
+
+def rwkv_loss(cfg: ModelConfig, params, batch):
+    logits, _ = rwkv_forward(cfg, params, batch)
+    loss = next_token_xent(logits, batch["tokens"], batch.get("loss_mask"))
+    return loss, {"xent": loss, "loss": loss}
+
+
+def rwkv_prefill(cfg: ModelConfig, params, batch, max_len=None):
+    logits, state = rwkv_forward(cfg, params, batch)
+    return logits[:, -1], state
+
+
+def rwkv_decode_step(cfg: ModelConfig, params, state, tokens, pos):
+    logits, state = rwkv_forward(cfg, params, {"tokens": tokens[:, None]}, state)
+    return logits[:, 0], state

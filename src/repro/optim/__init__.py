@@ -1,0 +1,2 @@
+"""Optimizers + distributed-optimization tricks (bucketed overlap, int8 EF compression)."""
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, lr_schedule

@@ -1,0 +1,98 @@
+"""AdamW with fp32 master weights, global-norm clipping, warmup+cosine.
+
+Pure-pytree implementation (no optax dependency): the optimizer state is
+{m, v, master, count}; ``master`` holds fp32 weights (params stay bf16 on
+the forward path). Under ZeRO-1 the state shards over the data axes (see
+``parallel.sharding.opt_state_specs``) — GSPMD turns the grad add into
+reduce-scatter + the param refresh into all-gather automatically.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "lr_schedule", "global_norm"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    moments_dtype: str = "float32"  # bf16 for memory-bound giants
+    master: bool = True             # keep fp32 master weights
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_init(cfg: AdamWConfig, params):
+    mdt = jnp.dtype(cfg.moments_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    state = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if cfg.master:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) if cfg.clip_norm > 0 else 1.0
+    lr = lr_schedule(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moments_dtype)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mh = m32 / b1c
+        vh = v32 / b2c
+        w32 = w.astype(jnp.float32)
+        w32 = w32 - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * w32)
+        return m32.astype(mdt), v32.astype(mdt), w32
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    masters = state["master"] if cfg.master else params
+    flat_w = treedef.flatten_up_to(masters)
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_w32 = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), new_w32, params)
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    if cfg.master:
+        new_state["master"] = new_w32
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,1 @@
+"""Distribution: sharding rules (DP/TP/EP/SP) + pipeline parallelism."""

@@ -1,0 +1,113 @@
+"""Pipeline parallelism over an explicit mesh axis, transported by the
+enqueue extension (paper ext. 4).
+
+GPipe-style schedule expressed as a ``lax.scan`` over clock ticks inside a
+``shard_map`` region: each tick, every stage applies its block stack and
+"enqueues" its activation to the next stage (token-threaded
+``ppermute`` — device-ordered, host never blocks, exactly the paper's
+offloading semantics). Backward is the AD transpose of the schedule
+(reverse permutes), so pipeline training is just ``jax.grad`` through the
+scan. Bubble fraction = (P-1)/(T) with T = n_micro + P - 1 ticks.
+
+Used by the llama3-405b hillclimb variant and ``examples/pipeline_train``;
+the 40-cell baseline uses DP×TP only.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.core.streams import new_token, serialize_on
+
+__all__ = ["gpipe_forward", "pipeline_loss_fn", "split_stages"]
+
+
+def gpipe_forward(stage_fn: Callable, stage_params, x_micro, axis_name: str):
+    """Run inside shard_map, ``axis_name`` = pipeline axis.
+
+    stage_fn(stage_params, x) -> y with y.shape == x.shape.
+    x_micro: (n_micro, mb, S, d) — microbatch activations fed to stage 0.
+    Returns (n_micro, mb, S, d) stage-(P-1) outputs (valid on last rank).
+    """
+    n_stages = lax.axis_size(axis_name)
+    rank = lax.axis_index(axis_name)
+    n_micro = x_micro.shape[0]
+    ticks = n_micro + n_stages - 1
+    fwd_perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def tick(carry, t):
+        buf, token = carry
+        idx = jnp.clip(t, 0, n_micro - 1)
+        x0 = x_micro[idx]
+        x_in = jnp.where(rank == 0, x0, buf)
+        y = stage_fn(stage_params, x_in)
+        # enqueue to the next stage: device-ordered, token-threaded
+        token, (y_s,) = serialize_on(token, y)
+        nxt = lax.ppermute(y_s, axis_name, fwd_perm)
+        return (nxt, token), y
+
+    (_, _), ys = lax.scan(tick, (jnp.zeros_like(x_micro[0]), new_token()), jnp.arange(ticks))
+    return ys[n_stages - 1 :]  # output for microbatch m at tick m + P - 1
+
+
+def split_stages(stacked_layer_params, n_stages: int):
+    """Reshape (L, ...) stacked layer params into (n_stages, L/P, ...)."""
+
+    def resh(a):
+        L = a.shape[0]
+        assert L % n_stages == 0, f"layers {L} not divisible by {n_stages} stages"
+        return a.reshape(n_stages, L // n_stages, *a.shape[1:])
+
+    return jax.tree.map(resh, stacked_layer_params)
+
+
+def pipeline_loss_fn(
+    cfg,
+    mesh,
+    pipe_axis: str,
+    n_micro: int,
+    embed_fn: Callable,
+    stage_fn: Callable,
+    head_loss_fn: Callable,
+):
+    """Build loss(params, batch) with the block stack pipelined over
+    ``pipe_axis``. Embedding + head are replicated (computed on every
+    rank; only the last rank's head result contributes via psum-mask).
+
+    params = {"embed": ..., "stages": (P, L/P, ...) stacked, "head": ...}
+    """
+
+    def loss(params, batch):
+        def inner(stage_params, tokens):
+            # drop the pipe-shard leading dim shard_map leaves on the stack
+            stage_params = jax.tree.map(lambda a: a[0], stage_params)
+            x = embed_fn(params["embed"], tokens)  # (B, S, d)
+            B = x.shape[0]
+            assert B % n_micro == 0
+            xm = x.reshape(n_micro, B // n_micro, *x.shape[1:])
+            outs = gpipe_forward(stage_fn, stage_params, xm, pipe_axis)
+            outs = outs.reshape(B, *outs.shape[2:])
+            rank = lax.axis_index(pipe_axis)
+            n_stages = lax.axis_size(pipe_axis)
+            l = head_loss_fn(params["head"], outs, tokens)
+            l = jnp.where(rank == n_stages - 1, l, 0.0)
+            return lax.psum(l, pipe_axis)
+
+        mapped = shard_map(
+            inner,
+            mesh=mesh,
+            in_specs=(P(pipe_axis), P()),
+            out_specs=P(),
+            check_vma=False,
+        )
+        return mapped(params["stages"], batch["tokens"])
+
+    return loss

@@ -1,0 +1,2 @@
+"""Batched serving engine over slotted KV caches."""
+from repro.serving.engine import ServeEngine, Request

@@ -1,0 +1,117 @@
+"""Batched serving engine: continuous batching over a slotted KV cache.
+
+Requests are admitted into free slots; each ``step()`` decodes one token
+for every active slot (a single jitted ``decode_step`` over the whole
+batch — per-slot positions are a (B,) vector, so ragged progress is
+native). Prefill runs per-request and its cache rows are spliced into the
+batch cache. Finished slots (EOS or max_new_tokens) are freed for the
+admission queue. Host-side bookkeeping (admission, completion callbacks)
+rides the progress engine like every other async task in the framework.
+"""
+
+from __future__ import annotations
+
+import collections
+import itertools
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ModelConfig
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1  # -1 = never
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 8, max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.cache = api.init_cache(cfg, max_batch, max_len)
+        self.pos = np.zeros((max_batch,), np.int32)
+        self.cur_tok = np.zeros((max_batch,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.queue: Deque[Request] = collections.deque()
+        self._rid = itertools.count()
+        self._decode = jax.jit(lambda p, c, t, pos: api.decode_step(cfg, p, c, t, pos))
+        self._prefill = jax.jit(
+            lambda p, b: api.prefill(cfg, p, b, max_len=max_len), static_argnames=()
+        )
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16, eos_id: int = -1) -> Request:
+        req = Request(next(self._rid), np.asarray(prompt, np.int32), max_new_tokens, eos_id)
+        self.queue.append(req)
+        return req
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            last_logits, cache1 = self._prefill(self.params, {"tokens": req.prompt[None, :]})
+            # splice the single-row cache into this slot (batch dim = axis 1
+            # for stacked caches, axis 0 inside per-layer leaves of dim B..)
+            self.cache = jax.tree.map(
+                lambda full, one: _splice(full, one, slot), self.cache, cache1
+            )
+            tok = int(np.argmax(np.asarray(last_logits[0])))
+            req.out_tokens.append(tok)
+            self.slot_req[slot] = req
+            self.pos[slot] = req.prompt.shape[0]
+            self.cur_tok[slot] = tok
+
+    # -- decode loop ----------------------------------------------------------
+    def step(self) -> int:
+        """Admit + decode one token for all active slots. Returns #active."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.cur_tok), jnp.asarray(self.pos)
+        )
+        next_tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for i in active:
+            req = self.slot_req[i]
+            tok = int(next_tok[i])
+            req.out_tokens.append(tok)
+            self.pos[i] += 1
+            self.cur_tok[i] = tok
+            if tok == req.eos_id or len(req.out_tokens) >= req.max_new_tokens or self.pos[i] >= self.max_len - 1:
+                req.done = True
+                self.slot_req[i] = None
+        return len(active)
+
+    def run_until_done(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and all(r is None for r in self.slot_req):
+                return
+            self.step()
+
+
+def _splice(full, one, slot: int):
+    """Insert a B=1 cache row into the batch cache at ``slot``. Caches are
+    stacked per layer on axis 0 with batch at axis 1 (transformer/jamba/
+    whisper/rwkv all follow this layout)."""
+    if full.ndim == one.ndim and one.shape[1] == 1:
+        return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype), slot, axis=1)
+    raise ValueError(f"unexpected cache leaf shapes {full.shape} vs {one.shape}")

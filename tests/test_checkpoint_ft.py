@@ -1,0 +1,171 @@
+"""Checkpoint store/manager + fault-tolerance substrates."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import iovec_store as store
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.progress import ProgressEngine
+from repro.ft.elastic import plan_remesh, reshard_plan, shard_slices
+from repro.ft.heartbeat import HeartbeatMonitor
+from repro.ft.straggler import StragglerMonitor
+
+
+# ------------------------------------------------------------- iovec store
+
+
+def _tree():
+    rng = np.random.default_rng(0)
+    return {
+        "a": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32),
+        "nested": {
+            "b": jnp.asarray(rng.standard_normal((4, 4, 4)), jnp.bfloat16),
+            "c": jnp.asarray(rng.integers(0, 100, (7,)), jnp.int32),
+        },
+        "scalar": jnp.float32(3.5),
+    }
+
+
+def test_store_roundtrip(tmp_path):
+    tree = _tree()
+    store.save_pytree(str(tmp_path / "ck"), tree, step=5)
+    loaded, step = store.load_pytree(str(tmp_path / "ck"), tree)
+    assert step == 5
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_store_incomplete_checkpoint_rejected(tmp_path):
+    d = tmp_path / "ck"
+    tree = _tree()
+    store.save_pytree(str(d), tree, step=1)
+    os.remove(store.manifest_path(str(d)))
+    with pytest.raises(FileNotFoundError):
+        store.load_pytree(str(d), tree)
+
+
+def test_manager_async_save_and_restore_latest(tmp_path):
+    eng = ProgressEngine()
+    mgr = CheckpointManager(str(tmp_path), eng, keep=2)
+    tree = _tree()
+    for s in (1, 2, 3):
+        scaled = jax.tree.map(lambda a: a if a.ndim == 0 else a * s, tree)
+        mgr.save_async(s, scaled)
+    assert mgr.wait_for_pending(timeout=30)
+    assert mgr.available_steps() == [2, 3]  # retention keeps newest 2
+    loaded, step = mgr.restore_latest(tree)
+    assert step == 3
+    np.testing.assert_allclose(np.asarray(loaded["a"]), np.asarray(tree["a"]) * 3)
+
+
+def test_manager_crash_midsave_falls_back(tmp_path):
+    eng = ProgressEngine()
+    mgr = CheckpointManager(str(tmp_path), eng, keep=5)
+    tree = _tree()
+    mgr.save_sync(1, tree)
+    # simulate a crash mid-save of step 2: tmp dir exists, no manifest
+    os.makedirs(str(tmp_path / "step_00000002.tmp"))
+    loaded, step = mgr.restore_latest(tree)
+    assert step == 1
+
+
+# ------------------------------------------------------------- elastic
+
+
+def test_plan_remesh_shrinks_dp_only():
+    plan = plan_remesh((2, 16, 16), ("pod", "data", "model"), n_failed=16)
+    assert plan.shape[2] == 16  # model untouched
+    assert plan.n_devices <= 2 * 16 * 16 - 16
+    with pytest.raises(RuntimeError):
+        plan_remesh((1, 1, 16), ("pod", "data", "model"), n_failed=15)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.sampled_from([(8, 16), (16, 16), (4, 4, 4)]),
+    st.sampled_from([(2,), (4,), (2, 2)]),
+)
+def test_reshard_plan_conserves_bytes(shape, grid1d):
+    grid = list(grid1d) + [1] * (len(shape) - len(grid1d))
+    if any(s % g for s, g in zip(shape, grid)):
+        return
+    plans = reshard_plan(shape, grid, itemsize=4)
+    total = sum(iov.length for iovs in plans.values() for iov in iovs)
+    assert total == int(np.prod(shape)) * 4
+    # segments across shards are disjoint
+    seen = []
+    for iovs in plans.values():
+        for iov in iovs:
+            seen.append((iov.offset, iov.offset + iov.length))
+    seen.sort()
+    for (s1, e1), (s2, e2) in zip(seen, seen[1:]):
+        assert e1 <= s2
+
+
+def test_restart_on_smaller_mesh_reads_same_bytes(tmp_path):
+    """The elastic story end-to-end: save on a '4-way' shard layout, read
+    shards for a 2-way layout straight from the same files."""
+    arr = np.arange(64, dtype=np.float32).reshape(8, 8)
+    store.save_pytree(str(tmp_path / "ck"), {"w": jnp.asarray(arr)}, step=0)
+    plans = reshard_plan((8, 8), (2, 1), itemsize=4)
+    raw = np.fromfile(str(tmp_path / "ck" / "w.bin"), dtype=np.float32)
+    for coord, iovs in plans.items():
+        sl = shard_slices((8, 8), (2, 1), coord)
+        expect = arr[sl].reshape(-1)
+        got = np.concatenate([raw[i.offset // 4 : (i.offset + i.length) // 4] for i in iovs])
+        np.testing.assert_array_equal(got, expect)
+
+
+# ------------------------------------------------------------- heartbeat
+
+
+def test_heartbeat_detects_silent_rank():
+    clock = {"t": 0.0}
+    eng = ProgressEngine()
+    failures = []
+    mon = HeartbeatMonitor(
+        ranks=[0, 1, 2],
+        timeout=10.0,
+        engine=eng,
+        on_failure=failures.append,
+        clock=lambda: clock["t"],
+    )
+    for t in (5.0, 9.0):
+        clock["t"] = t
+        mon.record(0)
+        mon.record(1)  # rank 2 silent
+        assert mon.check() == []
+    clock["t"] = 11.0
+    mon.record(0)
+    mon.record(1)
+    assert mon.check() == [2]
+    assert failures == [[2]]
+
+
+# ------------------------------------------------------------- straggler
+
+
+def test_straggler_advice_escalates():
+    mon = StragglerMonitor(ranks=[0, 1, 2, 3], window=4, threshold=1.4, evict_after=2)
+    for step in range(4):
+        mon.record_step({0: 1.0, 1: 1.0, 2: 1.0, 3: 2.0})
+    a1 = mon.check()
+    assert [x.rank for x in a1] == [3] and a1[0].action == "rebalance"
+    mon.record_step({0: 1.0, 1: 1.0, 2: 1.0, 3: 2.0})
+    a2 = mon.check()
+    assert a2[0].action == "evict"
+
+
+def test_straggler_rebalance_shares_inverse_speed():
+    mon = StragglerMonitor(ranks=[0, 1], window=4)
+    for _ in range(4):
+        mon.record_step({0: 1.0, 1: 3.0})
+    shares = mon.rebalance_shares(16)
+    assert shares[0] > shares[1]
+    assert sum(shares.values()) == 16

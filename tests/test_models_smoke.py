@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config,
+one forward/train step on CPU, output shapes + no NaNs; plus decode-vs-
+full-forward consistency for every cache family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import api
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.launch.train import make_train_step
+
+KEY = jax.random.key(0)
+
+
+def _batch(cfg, B=2, S=32):
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.vlm and cfg.n_img_tokens:
+        batch["img_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_img_tokens, cfg.d_model)), cfg.cdtype
+        )
+    if cfg.encdec:
+        batch["enc_frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_audio_ctx, cfg.d_model)), cfg.cdtype
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = api.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    loss, metrics = jax.jit(lambda p, b: api.loss_fn(cfg, p, b))(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt = adamw_init(opt_cfg, params)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    p2, opt2, m = step(params, opt, batch)
+    # params changed, all finite
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))), params, p2)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+    for leaf in jax.tree_util.tree_leaves(p2):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32)))), f"{arch}: NaN in params"
+    assert np.isfinite(float(m["loss"]))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_decode_matches_full_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    params = api.init_params(cfg, KEY)
+    B, S = 2, 16
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    batch = _batch(cfg, B, S)
+    batch["tokens"] = toks
+
+    n_img = cfg.n_img_tokens if cfg.vlm else 0  # positions include the prefix
+    pre = dict(batch)
+    pre["tokens"] = toks[:, : S - 1]
+    last, cache = api.prefill(cfg, params, pre, max_len=S + n_img)
+    pos = jnp.full((B,), n_img + S - 1, jnp.int32)
+    dec_logits, _ = api.decode_step(cfg, params, cache, toks[:, S - 1], pos)
+
+    full = dict(batch)
+    if cfg.encdec:
+        from repro.models import whisper as W
+
+        enc = W.encode(cfg, params, batch["enc_frames"])
+        ref = W._decode_full(cfg, params, toks, enc)[0][:, -1]
+    elif cfg.family == "ssm_rwkv":
+        from repro.models import rwkv6 as R
+
+        ref = R.rwkv_forward(cfg, params, full)[0][:, -1]
+    elif cfg.family == "hybrid":
+        from repro.models import jamba as J
+
+        ref = J._forward(cfg, params, toks)[0][:, -1]
+    else:
+        from repro.models import transformer as T
+
+        ref = T.lm_forward(cfg, params, full)[0][:, -1]
+    a = np.asarray(dec_logits, np.float32)
+    b = np.asarray(ref, np.float32)
+    rel = np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-9)
+    assert rel < 0.05, f"{arch}: decode/full mismatch rel={rel}"
+
+
+def test_full_configs_match_assignment_numbers():
+    """Spot-check the exact published numbers survive in full()."""
+    c = get_config("deepseek-v3-671b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab) == (61, 7168, 128, 129280)
+    assert c.moe.n_experts == 256 and c.moe.top_k == 8 and c.moe.n_shared == 1
+    assert c.mla.kv_lora_rank == 512 and c.mtp_depth == 1
+    c = get_config("llama3-405b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        126, 16384, 128, 8, 53248, 128256)
+    c = get_config("gemma3-4b")
+    assert c.local_global_pattern == 5 and c.vocab == 262144 and c.head_dim == 256
+    c = get_config("jamba-v0.1-52b")
+    assert c.hybrid_period == 8 and c.moe.n_experts == 16 and c.moe.top_k == 2
+    c = get_config("qwen1.5-0.5b")
+    assert c.qkv_bias and c.vocab == 151936
+    c = get_config("rwkv6-7b")
+    assert c.family == "ssm_rwkv" and c.d_model == 4096 and c.d_ff == 14336
+    c = get_config("whisper-tiny")
+    assert c.encdec and c.n_enc_layers == 4 and c.d_model == 384 and c.vocab == 51865
+    c = get_config("granite-moe-1b-a400m")
+    assert c.moe.n_experts == 32 and c.moe.top_k == 8 and c.vocab == 49155
+    c = get_config("internlm2-20b")
+    assert c.n_layers == 48 and c.d_model == 6144 and c.vocab == 92544
+    c = get_config("phi-3-vision-4.2b")
+    assert c.vlm and c.vocab == 32064 and c.n_img_tokens == 576
+
+
+def test_param_counts_sane():
+    """param_counts drives MODEL_FLOPS — sanity-band the headline sizes."""
+    n405 = get_config("llama3-405b").param_counts()["total"]
+    assert 3.7e11 < n405 < 4.4e11, n405
+    ds = get_config("deepseek-v3-671b").param_counts()
+    assert 6.0e11 < ds["total"] < 7.4e11, ds
+    assert 3.0e10 < ds["active"] < 4.5e10, ds  # ~37B active
+    rw = get_config("rwkv6-7b").param_counts()["total"]
+    assert 5e9 < rw < 9e9, rw
+    ja = get_config("jamba-v0.1-52b").param_counts()
+    assert 4.4e10 < ja["total"] < 6.0e10, ja
+    assert 0.9e10 < ja["active"] < 2.0e10, ja  # ~12B active

@@ -1,0 +1,29 @@
+"""Launch the 8-device checks in a subprocess so the forced device count
+never leaks into this pytest process."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+
+@pytest.mark.timeout(900)
+def test_multidevice_suite():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    env.pop("XLA_FLAGS", None)  # the script sets its own
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "multidevice_checks.py")],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=850,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}"
+    assert "MULTIDEVICE_OK" in proc.stdout
+    names = proc.stdout.split("MULTIDEVICE_OK", 1)[1].split()
+    assert len(names) >= 12, names

@@ -1,0 +1,67 @@
+"""§Perf variants must be REFACTORINGS, not approximations: every
+hillclimb knob (scatter-combine, save_acts remat, tp_strategy) has to
+produce the same loss as the baseline config on the same params/batch."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api
+
+KEY = jax.random.key(3)
+
+
+def _loss(cfg, params, batch):
+    return float(api.loss_fn(cfg, params, batch)[0])
+
+
+@pytest.mark.parametrize(
+    "arch,overrides",
+    [
+        ("granite-moe-1b-a400m", dict(moe_scatter_combine=True)),
+        ("granite-moe-1b-a400m", dict(moe_scatter_combine=True, moe_dispatch_sharding=True)),
+        ("deepseek-v3-671b", dict(moe_scatter_combine=True)),
+        ("jamba-v0.1-52b", dict(moe_scatter_combine=True)),
+        ("llama3-405b", dict(remat="save_acts")),
+        ("internlm2-20b", dict(remat="save_acts")),
+        ("granite-moe-1b-a400m", dict(tp_strategy="ep_only")),
+    ],
+)
+def test_variant_loss_equivalence(arch, overrides):
+    base = get_config(arch, smoke=True)
+    params = api.init_params(base, KEY)
+    batch = {"tokens": jax.random.randint(KEY, (2, 32), 0, base.vocab)}
+    l0 = _loss(base, params, batch)
+    l1 = _loss(base.replace(**overrides), params, batch)
+    assert abs(l1 - l0) / max(abs(l0), 1e-9) < 1e-3, (arch, overrides, l0, l1)
+
+
+@pytest.mark.parametrize("arch", ["llama3-405b", "internlm2-20b"])
+def test_save_acts_gradients_match(arch):
+    """The collective-saving remat policy must not change gradients."""
+    cfg = get_config(arch, smoke=True).replace(remat="full")
+    params = api.init_params(cfg, KEY)
+    batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab)}
+
+    def g(c):
+        return jax.grad(lambda p: api.loss_fn(c, p, batch)[0])(params)
+
+    g_full = g(cfg)
+    g_save = g(cfg.replace(remat="save_acts"))
+    for a, b in zip(jax.tree_util.tree_leaves(g_full), jax.tree_util.tree_leaves(g_save)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-3, rtol=1e-2
+        )
+
+
+def test_flash_attention_impl_matches_einsum():
+    """attn_impl='flash' (Pallas kernel path) is numerically equivalent to
+    the einsum path on full-seq causal self-attention."""
+    cfg = get_config("internlm2-20b", smoke=True)
+    params = api.init_params(cfg, KEY)
+    batch = {"tokens": jax.random.randint(KEY, (2, 128), 0, cfg.vocab)}
+    l_einsum = _loss(cfg, params, batch)
+    l_flash = _loss(cfg.replace(attn_impl="flash"), params, batch)
+    assert abs(l_flash - l_einsum) / max(abs(l_einsum), 1e-9) < 2e-3, (l_einsum, l_flash)

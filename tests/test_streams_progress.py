@@ -1,0 +1,164 @@
+"""MPIX streams (ext. 3) + generalized requests / general progress (1, 6)."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import progress as pg
+from repro.core import streams as ss
+
+
+# ---------------------------------------------------------------- streams
+
+
+def test_stream_pool_exhaustion_matches_mpich_contract():
+    pool = ss.StreamPool(max_channels=3)
+    a = pool.create()
+    b = pool.create()
+    c = pool.create()
+    assert {a.channel, b.channel, c.channel} == {0, 1, 2}
+    with pytest.raises(RuntimeError, match="out of communication channels"):
+        pool.create()
+    pool.free(b)
+    d = pool.create()  # freed endpoint is reusable
+    assert d.channel == b.channel
+
+
+def test_offload_streams_share_endpoints():
+    pool = ss.StreamPool(max_channels=2)
+    offs = [pool.create(info={"type": "cudaStream_t"}) for _ in range(5)]
+    assert all(o.is_offload for o in offs)  # never exhausts
+    assert len({o.channel for o in offs}) <= 2
+
+
+def test_info_set_hex_roundtrip():
+    info = {}
+    handle = (123456789).to_bytes(8, "little")
+    ss.info_set_hex(info, "value", handle)
+    assert bytes.fromhex(info["value"]) == handle
+
+
+def test_stream_comm_create_and_null_stream():
+    comm = ss.stream_comm_create(None, ("data",))
+    assert comm.stream.is_null  # reverts to conventional communicator
+    s = ss.stream_create(name="x")
+    mc = ss.stream_comm_create_multiplex(None, "data", [s, ss.STREAM_NULL])
+    assert mc.is_multiplex
+    assert ss.comm_get_stream(mc, 0) is s
+    assert ss.comm_get_stream(mc, 1).is_null
+    ss.stream_free(s)
+
+
+def test_double_free_raises():
+    s = ss.stream_create(name="df")
+    ss.stream_free(s)
+    with pytest.raises(RuntimeError):
+        ss.stream_free(s)
+
+
+# ---------------------------------------------------------------- progress
+
+
+def test_grequest_poll_fn_completion():
+    eng = pg.ProgressEngine()
+    state = {"n": 0}
+
+    def poll(st):
+        st["n"] += 1
+        return st["n"] >= 3
+
+    r = eng.grequest_start(poll_fn=poll, extra_state=state)
+    assert not r.done
+    assert not eng.test(r)
+    assert eng.wait(r, timeout=5)
+    assert state["n"] == 3
+
+
+def test_grequest_external_completion():
+    """The paper's CUDA pattern: an external thread calls
+    MPI_Grequest_complete; poll_fn only queries."""
+    eng = pg.ProgressEngine()
+    r = eng.grequest_start(poll_fn=lambda st: False)
+    threading.Timer(0.05, r.complete).start()
+    assert eng.wait(r, timeout=5)
+
+
+def test_waitall_mixed_requests_and_wait_fn():
+    """One MPI_Waitall over requests from different subsystems; batch
+    wait_fn used where supplied."""
+    eng = pg.ProgressEngine()
+    hit = {"wait_fn": 0}
+
+    def wait_fn(states, timeout):
+        hit["wait_fn"] += 1
+        for s in states:
+            s["done"] = True
+
+    def poll(st):
+        return st.get("done", False)
+
+    batch = [
+        eng.grequest_start(poll_fn=poll, wait_fn=wait_fn, extra_state={}) for _ in range(3)
+    ]
+    counter = {"n": 0}
+
+    def poll2(st):
+        st["n"] += 1
+        return st["n"] > 2
+
+    other = eng.grequest_start(poll_fn=poll2, extra_state=counter)
+    assert eng.wait_all(batch + [other], timeout=5)
+    assert hit["wait_fn"] == 1  # one batched wait for the group
+
+
+def test_per_stream_progress_isolation():
+    """progress(stream) must not poll other streams' queues — the per-VCI
+    lock story."""
+    pool = ss.StreamPool()
+    s1, s2 = pool.create(), pool.create()
+    eng = pg.ProgressEngine()
+    polled = {"s1": 0, "s2": 0}
+    r1 = eng.grequest_start(poll_fn=lambda st: polled.__setitem__("s1", polled["s1"] + 1) or False, stream=s1)
+    r2 = eng.grequest_start(poll_fn=lambda st: polled.__setitem__("s2", polled["s2"] + 1) or False, stream=s2)
+    eng.progress(s1)
+    eng.progress(s1)
+    assert polled == {"s1": 2, "s2": 0}
+    eng.progress(None)  # general progress hits all
+    assert polled["s2"] == 1
+    r1.complete(); r2.complete()
+    eng.progress(None)
+
+
+def test_progress_thread_spin_up_down():
+    pool = ss.StreamPool()
+    s = pool.create()
+    eng = pg.ProgressEngine()
+    done = threading.Event()
+
+    def poll(st):
+        return done.is_set()
+
+    r = eng.grequest_start(poll_fn=poll, stream=s)
+    eng.start_progress_thread(s, interval=0.001)
+    time.sleep(0.05)
+    assert not r.done
+    done.set()
+    t0 = time.monotonic()
+    while not r.done and time.monotonic() - t0 < 5:
+        time.sleep(0.005)
+    assert r.done  # background thread completed it — no main-thread polls
+    eng.stop_progress_thread(s)
+
+
+def test_global_lock_mode_still_correct():
+    eng = pg.ProgressEngine(global_lock=True)
+    rs = [eng.grequest_start(poll_fn=lambda st: True) for _ in range(4)]
+    assert eng.wait_all(rs, timeout=5)
+
+
+def test_cancel():
+    eng = pg.ProgressEngine()
+    r = eng.grequest_start(poll_fn=lambda st: False)
+    r.cancel()
+    assert r.done

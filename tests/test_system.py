@@ -1,0 +1,94 @@
+"""End-to-end behaviour: the fault-tolerant training loop with every
+substrate engaged (data prefetch, async checkpoints, heartbeats), plus
+the restart-determinism contract that makes checkpoint/restart correct."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.launch.train import Trainer
+from repro.optim.adamw import AdamWConfig
+
+
+def _trainer(ckpt_dir=None, steps_total=30):
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    return Trainer(
+        cfg,
+        AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=steps_total, clip_norm=1.0),
+        DataConfig(batch=4, seq=64, seed=7),
+        ckpt_dir=ckpt_dir,
+        ckpt_every=8,
+    )
+
+
+def test_loss_decreases_end_to_end():
+    tr = _trainer()
+    hist = tr.run(25, log_every=100)
+    early = float(np.mean(hist[:5]))
+    late = float(np.mean(hist[-5:]))
+    assert np.isfinite(late)
+    assert late < early, (early, late)
+
+
+def test_checkpoint_restart_resumes_identically(tmp_path):
+    """Train 20 steps straight vs 12 steps + crash + restore + 8 steps:
+    the loss streams must match exactly (deterministic data + state)."""
+    d1 = str(tmp_path / "a")
+    tr1 = _trainer(ckpt_dir=d1)
+    hist_full = tr1.run(20, log_every=100)
+
+    d2 = str(tmp_path / "b")
+    tr2 = _trainer(ckpt_dir=d2)
+    tr2.run(12, log_every=100)  # ends with a final save at step 11
+
+    tr3 = _trainer(ckpt_dir=d2)
+    tr3.maybe_restore()
+    assert tr3.start_step == 12
+    hist_resumed = tr3.run(8, log_every=100)
+
+    np.testing.assert_allclose(
+        np.array(hist_full[12:20]), np.array(hist_resumed), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_heartbeat_and_straggler_wired():
+    tr = _trainer()
+    tr.run(6, log_every=100)
+    assert tr.heartbeat.failed == []
+    assert 0 in tr.straggler.medians()
+
+
+def test_elastic_failure_recovery(tmp_path):
+    """Heartbeat-detected failure → re-mesh plan (DP shrunk, TP intact) +
+    rollback to the latest complete checkpoint."""
+    d = str(tmp_path / "ck")
+    tr = _trainer(ckpt_dir=d)
+    tr.run(10, log_every=100)  # saves at step 8 + final at 9
+    # mutate params to simulate divergence after a silent failure
+    import jax
+
+    tr.params = jax.tree.map(lambda a: a * 0, tr.params)
+    plan = tr.handle_failure([3, 7], mesh_shape=(2, 16, 16))
+    assert plan.shape[2] == 16  # model axis never shrinks
+    assert plan.n_devices <= 510
+    assert tr.start_step == 10  # rolled back to the step-9 checkpoint
+    # params restored (non-zero again)
+    leaf = jax.tree_util.tree_leaves(tr.params)[0]
+    import numpy as np
+
+    assert float(abs(np.asarray(leaf, dtype=np.float32)).max()) > 0
+
+
+def test_serve_driver_cli(capsys):
+    import sys
+    from repro.launch import serve
+
+    argv = sys.argv
+    sys.argv = ["serve", "--requests", "3", "--max-new", "4", "--max-batch", "2", "--max-len", "64"]
+    try:
+        serve.main()
+    finally:
+        sys.argv = argv
+    out = capsys.readouterr().out
+    assert "throughput" in out and "latency" in out
