@@ -15,6 +15,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel.pipeline import gpipe_forward, split_stages
+from repro.core.threadcomm import shard_map
 
 N_STAGES, LAYERS, D, MB, N_MICRO, VOCAB = 4, 8, 64, 4, 4, 512
 
@@ -56,7 +57,7 @@ def main():
             l = jnp.where(rank == N_STAGES - 1, -ll.mean(), 0.0)
             return jax.lax.psum(l, "pipe")
 
-        return jax.shard_map(
+        return shard_map(
             inner, mesh=mesh, in_specs=(P("pipe"), P()), out_specs=P(), check_vma=False
         )(params["stages"], tokens)
 

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Fast tier-1 split: everything except the multi-minute system/multidevice/
+# per-arch suites (run those nightly with: pytest -m slow).
+#
+# Uses the src/ layout directly via PYTHONPATH so CI needs no install step;
+# `pip install -e .[dev]` is the local-dev equivalent.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q -m "not slow" "$@"

@@ -25,7 +25,12 @@ import jax
 import numpy as np
 
 from repro.checkpoint import iovec_store as store
-from repro.core.progress import GeneralizedRequest, ProgressEngine, default_engine
+from repro.core.progress import (
+    GeneralizedRequest,
+    ProgressEngine,
+    default_engine,
+    join_thread_states,
+)
 from repro.core.streams import MPIXStream, STREAM_NULL
 
 __all__ = ["CheckpointManager"]
@@ -92,7 +97,12 @@ class CheckpointManager:
             return st["error"]
 
         req = self.engine.grequest_start(
-            poll_fn=poll, query_fn=query, extra_state=state, stream=self.stream, name=f"ckpt-{step}"
+            poll_fn=poll,
+            wait_fn=join_thread_states,
+            query_fn=query,
+            extra_state=state,
+            stream=self.stream,
+            name=f"ckpt-{step}",
         )
         self._pending.append(req)
         return req

@@ -27,6 +27,7 @@ motivation for getting the host out of the loop.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
@@ -112,10 +113,45 @@ def shift_enqueue(x, comm: StreamComm, shift: int = 1, token: Optional[Token] = 
 class EnqueuedRequest:
     """Host handle for an enqueued transfer: completion of the *dispatch*
     (host side), distinct from completion of the offload stream itself —
-    the paper's separation of the three contexts."""
+    the paper's separation of the three contexts.
+
+    ``wait`` goes through the engine's parking path: when a progress
+    thread covers the offload stream, the waiting host thread parks on the
+    stream's CV instead of spinning on ``is_ready``."""
 
     grequest: GeneralizedRequest
     token: Token
+    engine: Optional[ProgressEngine] = None
+
+    @property
+    def done(self) -> bool:
+        return self.grequest.done
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return (self.engine or default_engine()).wait(self.grequest, timeout)
+
+
+def _wait_dispatched(states, timeout) -> None:
+    """Batched ``wait_fn`` for enqueued transfers: block on every dispatched
+    array in the per-stream group (jax futures), honoring the engine's
+    deadline budget. Module-level so the engine batches all enqueued
+    requests of a stream into one call."""
+    deadline = None if timeout is None else time.monotonic() + timeout
+    for st in states:
+        arr = st["y"]
+        try:
+            if deadline is None:
+                if hasattr(arr, "block_until_ready"):
+                    arr.block_until_ready()
+                continue
+            # block_until_ready has no timeout: under a deadline, poll the
+            # future's readiness so the caller's wait_all contract holds
+            while time.monotonic() < deadline:
+                if not hasattr(arr, "is_ready") or arr.is_ready():
+                    break
+                time.sleep(0.0005)
+        except RuntimeError:
+            pass
 
 
 def isend_enqueue(
@@ -139,15 +175,17 @@ def isend_enqueue(
         except RuntimeError:
             return True
 
-    req = (engine or default_engine()).grequest_start(
+    eng = engine or default_engine()
+    req = eng.grequest_start(
         poll_fn=_poll,
+        wait_fn=_wait_dispatched,
         extra_state={"y": y},
         stream=comm.stream,
         name="isend_enqueue",
     )
-    return y, EnqueuedRequest(req, tok)
+    return y, EnqueuedRequest(req, tok, eng)
 
 
 def wait_enqueue(req: EnqueuedRequest, engine: Optional[ProgressEngine] = None) -> None:
     """``MPIX_Wait_enqueue``."""
-    (engine or default_engine()).wait(req.grequest)
+    (engine or req.engine or default_engine()).wait(req.grequest)

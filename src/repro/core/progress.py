@@ -14,27 +14,41 @@ This module is the host-side runtime of the framework. Consumers:
 * ``checkpoint.manager`` — async d2h + file writes as generalized requests,
 * ``data.pipeline``     — prefetch batches,
 * ``ft.heartbeat``      — failure-detector pings,
+* ``serving.engine``    — request-completion handles,
 * metric/trace flushing in ``launch.train``.
 
 All of them are completed by ONE engine: a single :func:`wait_all` over a
 mixed set of requests is the paper's "one MPI_Waitall for MPI and non-MPI
 work".
 
-Locking reproduces the MPICH VCI story literally: requests live on
-*per-stream queues with per-stream locks*; ``progress(stream)`` touches
-only that stream's lock. A global-critical-section mode is kept for the
-message-rate benchmark (paper Fig. 4's red curve).
+Locking is a sharded VCI runtime, the MPICH 4.x story:
+
+* a **fixed-size lock-striped channel table** built at engine creation —
+  channel → stripe is pure arithmetic, so the hot path (post, poll,
+  complete) never touches a registry lock;
+* each stripe carries a **condition variable**: ``wait``/``wait_all`` and
+  progress threads *park* on it instead of busy-spinning, and are woken
+  by ``grequest_start`` (new work) and request completion;
+* a **batched completion path**: requests sharing a ``wait_fn`` are waited
+  as whole per-stream batches in one call (``MPI_Waitall`` semantics);
+* engine-level **counters** (polls, completions, lock waits, park/wake
+  events) exposed via :meth:`ProgressEngine.stats` — the benchmarks print
+  their scaling numbers straight from these.
+
+A global-critical-section mode is kept for the message-rate benchmark
+(paper Fig. 4's red curve): every channel maps to stripe 0.
 """
 
 from __future__ import annotations
 
 import threading
 import time
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.streams import MPIXStream, STREAM_NULL
+from repro.core.streams import DEFAULT_NUM_CHANNELS, MPIXStream, STREAM_NULL
 
 __all__ = [
     "RequestState",
@@ -46,7 +60,31 @@ __all__ = [
     "stream_progress",
     "start_progress_thread",
     "stop_progress_thread",
+    "join_thread_states",
+    "DEFAULT_NUM_STRIPES",
 ]
+
+
+def join_thread_states(states, timeout) -> None:
+    """Deadline-aware batched ``wait_fn`` for worker-thread-backed requests
+    (``extra_state['thread']`` holding a ``threading.Thread``): joins the
+    whole per-stream batch in one call — the waiter parks in the OS join,
+    no host polling. Shared by checkpoint writers and data prefetchers."""
+    deadline = None if timeout is None else time.monotonic() + timeout
+    for st in states:
+        t = st["thread"]
+        if deadline is None:
+            t.join()
+        else:
+            t.join(max(0.0, deadline - time.monotonic()))
+
+#: Stripe-table width. Matches the stream pool's channel space so each
+#: compute stream lands on its own stripe (see ``streams.StreamPool``).
+DEFAULT_NUM_STRIPES = DEFAULT_NUM_CHANNELS
+
+# How long a parked thread sleeps before re-validating its park condition.
+# Wake-ups normally arrive via notify; this only bounds lost-wakeup risk.
+_PARK_RECHECK_S = 0.25
 
 
 class RequestState(Enum):
@@ -77,23 +115,52 @@ class GeneralizedRequest:
 
     _state: RequestState = field(default=RequestState.ACTIVE, init=False)
     _cv: threading.Condition = field(default_factory=threading.Condition, init=False)
+    _callbacks: List[Callable] = field(default_factory=list, init=False)
+    # retired = counted + free_fn run, exactly once (guarded by the stripe
+    # lock: both the progress sweep and the batched wait path may observe
+    # the completion first)
+    _retired: bool = field(default=False, init=False)
     n_polls: int = field(default=0, init=False)
 
     # -- completion ----------------------------------------------------
     def complete(self) -> None:
         """``MPI_Grequest_complete`` — may be called from any thread."""
-        with self._cv:
-            if self._state is RequestState.ACTIVE:
-                self._state = RequestState.COMPLETE
-                self._cv.notify_all()
+        self._finish(RequestState.COMPLETE)
 
     def cancel(self) -> None:
         if self.cancel_fn is not None:
             self.cancel_fn(self.extra_state, self.done)
+        self._finish(RequestState.CANCELLED)
+
+    def _finish(self, state: RequestState) -> None:
+        with self._cv:
+            if self._state is not RequestState.ACTIVE:
+                return
+            self._state = state
+            self._cv.notify_all()
+            callbacks = list(self._callbacks)
+            self._callbacks.clear()
+        for cb in callbacks:
+            cb(self)
+
+    def add_done_callback(self, cb: Callable) -> None:
+        """Run ``cb(request)`` on completion/cancellation; immediately if
+        already done. The engine uses this to wake parked waiters without
+        any polling."""
         with self._cv:
             if self._state is RequestState.ACTIVE:
-                self._state = RequestState.CANCELLED
-                self._cv.notify_all()
+                self._callbacks.append(cb)
+                return
+        cb(self)
+
+    def remove_done_callback(self, cb: Callable) -> None:
+        """Detach a callback (no-op if absent/fired): a timed-out waiter
+        must not leave its wake closure on a long-lived request."""
+        with self._cv:
+            try:
+                self._callbacks.remove(cb)
+            except ValueError:
+                pass
 
     @property
     def done(self) -> bool:
@@ -113,36 +180,105 @@ class GeneralizedRequest:
         return self.done
 
 
-class ProgressEngine:
-    """Per-stream request queues + pluggable progress threads."""
+class _Stripe:
+    """One slot of the lock-striped channel table: a lock, a CV, the
+    per-channel request queues homed here, and hot-path counters (all
+    mutated under the stripe lock)."""
 
-    def __init__(self, global_lock: bool = False):
+    __slots__ = (
+        "index",
+        "lock",
+        "cv",
+        "queues",
+        "polls",
+        "completions",
+        "lock_waits",
+        "parks",
+        "wakes",
+        "visits",
+        "enqueued",
+        "progress_calls",
+    )
+
+    def __init__(self, index: int):
+        self.index = index
+        # RLock: poll_fn → complete() → wake callbacks re-enter the stripe.
+        self.lock = threading.RLock()
+        self.cv = threading.Condition(self.lock)
+        self.queues: Dict[int, List[GeneralizedRequest]] = {}
+        self.polls = 0
+        self.completions = 0
+        self.lock_waits = 0
+        self.parks = 0
+        self.wakes = 0
+        self.visits = 0
+        self.enqueued = 0
+        self.progress_calls = 0
+
+    @contextmanager
+    def held(self):
+        """Acquire the stripe lock, counting contended acquisitions."""
+        if self.lock.acquire(blocking=False):
+            contended = False
+        else:
+            self.lock.acquire()
+            contended = True
+        try:
+            if contended:
+                self.lock_waits += 1
+            yield self
+        finally:
+            self.lock.release()
+
+    def needs_polling(self, channel: Optional[int]) -> bool:
+        """True if any queued (active) request here must be *polled* (has a
+        poll_fn) rather than being completed externally. Caller holds the
+        lock."""
+        queues = self.queues.values() if channel is None else [self.queues.get(channel, ())]
+        return any(r.poll_fn is not None and not r.done for q in queues for r in q)
+
+
+class ProgressEngine:
+    """Sharded VCI runtime: lock-striped channel table + parkable waits
+    and progress threads."""
+
+    def __init__(self, global_lock: bool = False, n_stripes: int = DEFAULT_NUM_STRIPES):
         # global_lock=True emulates the pre-4.0 MPICH global critical
         # section (benchmark baseline); False = per-VCI critical sections.
         self.global_lock_mode = global_lock
-        self._global_lock = threading.Lock()
-        self._queues: Dict[int, List[GeneralizedRequest]] = {}
-        self._locks: Dict[int, threading.Lock] = {}
-        self._registry_lock = threading.Lock()
+        self.n_stripes = 1 if global_lock else max(1, int(n_stripes))
+        # +1: the last stripe homes the implicit channel (STREAM_NULL, -1).
+        self._stripes: Tuple[_Stripe, ...] = tuple(
+            _Stripe(i) for i in range(self.n_stripes + 1)
+        )
         self._threads: Dict[int, "_ProgressThread"] = {}
-        self.poll_visits = 0  # instrumentation for benchmarks
+        self._threads_lock = threading.Lock()
+        # single-attribute mirror of "a NULL-stream thread is registered":
+        # read without _threads_lock on the enqueue hot path (benign
+        # staleness, bounded by the thread's _PARK_RECHECK_S fallback)
+        self._null_thread_active = False
+        # Waiter-side counters (cold path), guarded by _meta_lock; hot-path
+        # counters live on the stripes under their own locks.
+        self._meta_lock = threading.Lock()
+        self._waiter_parks = 0
+        self._waiter_wakes = 0
 
-    # -- queue plumbing --------------------------------------------------
-    def _lock_for(self, channel: int) -> threading.Lock:
+    # -- stripe table ----------------------------------------------------
+    def _stripe(self, channel: int) -> _Stripe:
         if self.global_lock_mode:
-            return self._global_lock
-        with self._registry_lock:
-            if channel not in self._locks:
-                self._locks[channel] = threading.Lock()
-                self._queues[channel] = []
-            return self._locks[channel]
+            return self._stripes[0]
+        if channel < 0:
+            return self._stripes[self.n_stripes]
+        return self._stripes[channel % self.n_stripes]
 
-    def _queue_for(self, channel: int) -> List[GeneralizedRequest]:
-        with self._registry_lock:
-            if channel not in self._queues:
-                self._locks.setdefault(channel, threading.Lock())
-                self._queues[channel] = []
-            return self._queues[channel]
+    def lock_for(self, channel: int) -> threading.RLock:
+        """The critical-section lock guarding ``channel`` — what an issue
+        path (NIC doorbell analogue) must hold. Pure arithmetic, no
+        registry lock."""
+        return self._stripe(channel).lock
+
+    # kept for callers of the pre-stripe API
+    _lock_for = lock_for
 
     # -- the MPIX API ------------------------------------------------------
     def grequest_start(
@@ -157,7 +293,8 @@ class ProgressEngine:
         stream: MPIXStream = STREAM_NULL,
         name: str = "grequest",
     ) -> GeneralizedRequest:
-        """``MPIX_Grequest_start``: create + enqueue on the stream's queue."""
+        """``MPIX_Grequest_start``: create + enqueue on the stream's queue,
+        then wake anything parked on the stripe (progress threads)."""
         req = GeneralizedRequest(
             poll_fn=poll_fn,
             wait_fn=wait_fn,
@@ -169,36 +306,86 @@ class ProgressEngine:
             name=name,
         )
         ch = stream.channel
-        lock = self._lock_for(ch)
-        with lock:
-            self._queue_for(ch).append(req)
+        stripe = self._stripe(ch)
+        # completion from any thread wakes parkers on this stripe
+        req.add_done_callback(lambda _r, _s=stripe: self._notify_stripe(_s))
+        with stripe.held():
+            # opportunistic sweep: retire + drop requests that completed
+            # externally (no poll_fn → no progress visit ever dequeues
+            # them), so a long-lived channel queue can't grow unboundedly
+            q = stripe.queues.setdefault(ch, [])
+            if q:
+                kept = []
+                for old in q:
+                    if old.done:
+                        self._retire_locked(stripe, old)
+                    else:
+                        kept.append(old)
+                q[:] = kept
+            q.append(req)
+            stripe.enqueued += 1
+            stripe.cv.notify_all()
+        if ch >= 0 and self._null_thread_active:
+            # a parked NULL-stream progress thread covers every channel but
+            # parks on the implicit stripe — wake it for the new work
+            self._notify_stripe(self._stripes[self.n_stripes])
         return req
+
+    def _notify_stripe(self, stripe: _Stripe) -> None:
+        with stripe.held():
+            stripe.cv.notify_all()
+
+    @staticmethod
+    def _retire_locked(stripe: _Stripe, r: GeneralizedRequest) -> bool:
+        """Count the completion + run free_fn exactly once. Caller holds the
+        stripe lock. Returns True only for the first retirement."""
+        if r._retired:
+            return False
+        r._retired = True
+        stripe.completions += 1
+        if r.free_fn is not None:
+            r.free_fn(r.extra_state)
+        return True
 
     def progress(self, stream: Optional[MPIXStream] = None) -> int:
         """``MPIX_Stream_progress``: poll the queue of ``stream`` only, or
         every queue for ``None``/STREAM_NULL ("invoke general progress on
         all implicit streams"). Returns #requests completed this call."""
         if stream is None or stream.is_null:
-            with self._registry_lock:
-                channels = list(self._queues.keys())
-        else:
-            channels = [stream.channel]
+            # the call itself is accounted to the implicit stripe
+            return sum(
+                self._progress_stripe(s, None, count_call=(s.index == self.n_stripes))
+                for s in self._stripes
+            )
+        return self._progress_stripe(self._stripe(stream.channel), stream.channel, count_call=True)
+
+    def _progress_stripe(
+        self, stripe: _Stripe, channel: Optional[int], count_call: bool = False
+    ) -> int:
         completed = 0
-        for ch in channels:
-            lock = self._lock_for(ch)
-            with lock:
-                q = self._queue_for(ch)
-                self.poll_visits += len(q)
+        with stripe.held():
+            stripe.visits += 1
+            if count_call:
+                stripe.progress_calls += 1
+            channels = list(stripe.queues) if channel is None else [channel]
+            for ch in channels:
+                q = stripe.queues.get(ch)
+                if not q:
+                    continue
                 still = []
                 for r in q:
+                    stripe.polls += 1
                     if r._poll():
-                        completed += 1
-                        if r.free_fn is not None:
-                            r.free_fn(r.extra_state)
-                        r._state = RequestState.FREED if r._state is RequestState.FREED else r._state
+                        if self._retire_locked(stripe, r):
+                            completed += 1
                     else:
                         still.append(r)
-                q[:] = still
+                if still:
+                    q[:] = still
+                else:
+                    del stripe.queues[ch]
+            if completed:
+                stripe.cv.notify_all()
         return completed
 
     def test(self, req: GeneralizedRequest) -> bool:
@@ -209,96 +396,313 @@ class ProgressEngine:
     def wait(self, req: GeneralizedRequest, timeout: Optional[float] = None) -> bool:
         return self.wait_all([req], timeout)
 
-    def wait_all(self, reqs: Sequence[GeneralizedRequest], timeout: Optional[float] = None) -> bool:
+    # -- waiting: batch wait_fn, then park or actively progress ------------
+    def wait_all(
+        self, reqs: Sequence[GeneralizedRequest], timeout: Optional[float] = None
+    ) -> bool:
         """MPI_Waitall over a *mixed* set of requests — the paper's selling
-        point. Uses batch ``wait_fn`` where available, else poll+progress."""
+        point. Batched ``wait_fn`` groups go first (whole per-stream batch,
+        one call); the remainder parks on a CV when nothing needs host
+        polling, else actively progresses the pending streams."""
+        reqs = list(reqs)
         deadline = None if timeout is None else time.monotonic() + timeout
-        # batch wait_fn hook: group by wait_fn identity
-        by_wait: Dict[int, List[GeneralizedRequest]] = {}
+
+        # batch wait_fn hook: one call per (wait_fn, stream-channel) batch
+        by_key: Dict[Tuple[int, int], List[GeneralizedRequest]] = {}
         for r in reqs:
             if r.wait_fn is not None and not r.done:
-                by_wait.setdefault(id(r.wait_fn), []).append(r)
-        for group in by_wait.values():
+                by_key.setdefault((id(r.wait_fn), r.stream.channel), []).append(r)
+        for group in by_key.values():
             remain = None if deadline is None else max(0.0, deadline - time.monotonic())
             group[0].wait_fn([g.extra_state for g in group], remain)
-            for g in group:
-                g._poll()
-        while not all(r.done for r in reqs):
+            ch = group[0].stream.channel
+            stripe = self._stripe(ch)
+            with stripe.held():
+                retired = []
+                for g in group:
+                    stripe.polls += 1
+                    if g._poll():
+                        self._retire_locked(stripe, g)
+                        retired.append(g)
+                if retired:
+                    # dequeue like a progress sweep would, so pending()
+                    # doesn't report already-done requests
+                    q = stripe.queues.get(ch)
+                    if q:
+                        done_ids = set(map(id, retired))
+                        q[:] = [r0 for r0 in q if id(r0) not in done_ids]
+                        if not q:
+                            del stripe.queues[ch]
+
+        if all(r.done for r in reqs):
+            return True
+
+        # park/poll loop: a per-wait CV is pinged by request completion
+        waiter_cv = threading.Condition()
+        woke = [False]
+
+        def _wake(_r):
+            with waiter_cv:
+                woke[0] = True
+                waiter_cv.notify_all()
+            with self._meta_lock:
+                self._waiter_wakes += 1
+
+        for r in reqs:
+            r.add_done_callback(_wake)
+
+        try:
+            while True:
+                pending = [r for r in reqs if not r.done]
+                if not pending:
+                    return True
+                if deadline is not None and time.monotonic() >= deadline:
+                    return False
+                if self._can_park(pending):
+                    slice_s = _PARK_RECHECK_S
+                    if deadline is not None:
+                        slice_s = min(slice_s, max(0.0, deadline - time.monotonic()))
+                    with waiter_cv:
+                        if not woke[0]:
+                            with self._meta_lock:
+                                self._waiter_parks += 1
+                            waiter_cv.wait(timeout=slice_s)
+                        woke[0] = False
+                else:
+                    seen = set()
+                    for r in pending:
+                        if r.stream.channel not in seen:
+                            seen.add(r.stream.channel)
+                            self.progress(r.stream)
+                    time.sleep(0)  # yield between active rounds
+        finally:
+            # a timed-out wait must not leave wake closures on requests
+            # that outlive it (e.g. a heartbeat polled with short timeouts)
             for r in reqs:
-                if not r.done:
-                    self.progress(r.stream)
-            if all(r.done for r in reqs):
-                break
-            if deadline is not None and time.monotonic() > deadline:
+                r.remove_done_callback(_wake)
+
+    def _can_park(self, pending: Sequence[GeneralizedRequest]) -> bool:
+        """A waiter may park iff no pending request depends on *us* to poll:
+        either it completes externally (no poll_fn) or a running progress
+        thread covers its stream."""
+        for r in pending:
+            if r.poll_fn is None:
+                continue
+            if not self._has_poller(r.stream.channel):
                 return False
-            time.sleep(0)  # yield
         return True
 
+    def _has_poller(self, channel: int) -> bool:
+        with self._threads_lock:
+            for key in (channel, STREAM_NULL.channel):
+                t = self._threads.get(key)
+                if t is not None and t.is_alive() and t.state == _ProgressThread.BUSY:
+                    return True
+        return False
+
     # -- progress threads (spin-up / spin-down) ---------------------------
-    def start_progress_thread(self, stream: MPIXStream = STREAM_NULL, interval: float = 0.0) -> None:
+    def start_progress_thread(
+        self, stream: MPIXStream = STREAM_NULL, interval: float = 0.0, park: bool = True
+    ) -> None:
         """``MPIX_Start_progress_thread``: background poller for one stream.
-        ``interval`` throttles polling (0 = busy poll), the user-controlled
-        knob the paper argues for."""
+        ``interval`` throttles polling; ``park=True`` (default) parks the
+        thread on the stripe CV whenever its queue needs no host polling —
+        the user-controlled knob the paper argues for. ``park=False`` with
+        ``interval=0`` reproduces the busy-spin ``MPIR_CVAR_ASYNC_PROGRESS``
+        baseline the benchmarks compare against."""
         key = stream.channel
-        if key in self._threads:
-            return
-        t = _ProgressThread(self, stream, interval)
-        self._threads[key] = t
+        with self._threads_lock:
+            if key in self._threads:
+                return
+            t = _ProgressThread(self, stream, interval, park)
+            self._threads[key] = t
+            if stream.is_null:
+                self._null_thread_active = True
         t.start()
 
     def stop_progress_thread(self, stream: MPIXStream = STREAM_NULL) -> None:
         """``MPIX_Stop_progress_thread``."""
-        t = self._threads.pop(stream.channel, None)
+        with self._threads_lock:
+            t = self._threads.pop(stream.channel, None)
+            if stream.is_null:
+                self._null_thread_active = False
         if t is not None:
             t.stop()
             t.join(timeout=5.0)
 
     def stop_all(self) -> None:
-        for ch in list(self._threads):
-            t = self._threads.pop(ch)
+        with self._threads_lock:
+            threads = list(self._threads.values())
+            self._threads.clear()
+            self._null_thread_active = False
+        for t in threads:
             t.stop()
+        for t in threads:
             t.join(timeout=5.0)
 
     def pending(self, stream: Optional[MPIXStream] = None) -> int:
-        with self._registry_lock:
-            if stream is None or stream.is_null:
-                return sum(len(q) for q in self._queues.values())
-            return len(self._queues.get(stream.channel, []))
+        if stream is None or stream.is_null:
+            n = 0
+            for s in self._stripes:
+                with s.held():
+                    n += sum(len(q) for q in s.queues.values())
+            return n
+        stripe = self._stripe(stream.channel)
+        with stripe.held():
+            return len(stripe.queues.get(stream.channel, ()))
+
+    # -- instrumentation ---------------------------------------------------
+    def stats(self, per_stripe: bool = False) -> dict:
+        """Engine counters. ``polls`` = request poll visits, ``visits`` =
+        stripe scans, ``lock_waits`` = contended stripe-lock acquisitions,
+        ``parks``/``wakes`` = CV park/wake events (waiter- and
+        progress-thread-side combined), ``thread_loops`` = progress-thread
+        loop iterations (the idle-CPU proxy)."""
+        out = {
+            "polls": 0,
+            "completions": 0,
+            "visits": 0,
+            "lock_waits": 0,
+            "parks": 0,
+            "wakes": 0,
+            "enqueued": 0,
+            "progress_calls": 0,
+        }
+        stripes = []
+        for s in self._stripes:
+            with s.held():
+                row = {
+                    "stripe": s.index,
+                    "polls": s.polls,
+                    "completions": s.completions,
+                    "visits": s.visits,
+                    "lock_waits": s.lock_waits,
+                    "parks": s.parks,
+                    "wakes": s.wakes,
+                    "enqueued": s.enqueued,
+                    "progress_calls": s.progress_calls,
+                    "pending": sum(len(q) for q in s.queues.values()),
+                }
+            stripes.append(row)
+            for k in (
+                "polls",
+                "completions",
+                "visits",
+                "lock_waits",
+                "parks",
+                "wakes",
+                "enqueued",
+                "progress_calls",
+            ):
+                out[k] += row[k]
+        with self._meta_lock:
+            out["parks"] += self._waiter_parks
+            out["wakes"] += self._waiter_wakes
+            out["waiter_parks"] = self._waiter_parks
+            out["waiter_wakes"] = self._waiter_wakes
+        with self._threads_lock:
+            out["thread_loops"] = sum(t.loops for t in self._threads.values())
+            out["n_progress_threads"] = len(self._threads)
+        if per_stripe:
+            out["stripes"] = stripes
+        return out
+
+    def reset_stats(self) -> None:
+        for s in self._stripes:
+            with s.held():
+                s.polls = s.completions = s.visits = 0
+                s.lock_waits = s.parks = s.wakes = 0
+                s.enqueued = s.progress_calls = 0
+        with self._meta_lock:
+            self._waiter_parks = self._waiter_wakes = 0
+
+    @property
+    def poll_visits(self) -> int:
+        """Pre-stripe name for the request-poll counter (benchmarks)."""
+        return self.stats()["polls"]
 
 
 class _ProgressThread(threading.Thread):
-    """PROGRESS_IDLE/BUSY/EXIT state machine from the paper's example."""
+    """PROGRESS_IDLE/BUSY/EXIT state machine from the paper's example,
+    extended with stripe-CV parking: when the covered queue has no
+    pollable work the thread sleeps on the CV and is woken by
+    ``grequest_start``/completion — near-zero idle CPU."""
 
     IDLE, BUSY, EXIT = 0, 1, 2
 
-    def __init__(self, engine: ProgressEngine, stream: MPIXStream, interval: float):
+    def __init__(
+        self, engine: ProgressEngine, stream: MPIXStream, interval: float, park: bool = True
+    ):
         super().__init__(name=f"progress-{stream.name}", daemon=True)
         self.engine = engine
         self.stream = stream
         self.interval = interval
+        self.park = park
         self.state = self.BUSY
+        self.loops = 0
 
     def spin_down(self):
         self.state = self.IDLE
+        self._kick()
 
     def spin_up(self):
         self.state = self.BUSY
+        self._kick()
 
     def stop(self):
         self.state = self.EXIT
+        self._kick()
+
+    def _kick(self):
+        """Wake the thread out of a CV park so state changes apply fast."""
+        if self.stream.is_null:
+            for s in self.engine._stripes:
+                self.engine._notify_stripe(s)
+        else:
+            self.engine._notify_stripe(self.engine._stripe(self.stream.channel))
 
     def run(self):
+        eng, stream = self.engine, self.stream
+        # a NULL-stream thread covers every stripe; park on the implicit one
+        # but re-check all (its _kick notifies every stripe).
+        stripe = eng._stripe(stream.channel)
+        channel = None if stream.is_null else stream.channel
         while True:
             if self.state == self.EXIT:
                 break
             if self.state == self.IDLE:
                 time.sleep(0.001)
                 continue
-            self.engine.progress(self.stream)
+            self.loops += 1
+            eng.progress(stream)
+            if self.park:
+                parked = False
+                with stripe.held():
+                    if self.state == self.BUSY and not self._work_ready(channel):
+                        stripe.parks += 1
+                        stripe.cv.wait(timeout=_PARK_RECHECK_S)
+                        stripe.wakes += 1
+                        parked = True
+                if not parked:
+                    # pollable work in flight: throttle like a normal poller
+                    time.sleep(self.interval if self.interval > 0 else 0)
+                continue
             if self.interval > 0:
                 time.sleep(self.interval)
             else:
                 time.sleep(0)  # busy-poll, but yield the GIL
+
+    def _work_ready(self, channel: Optional[int]) -> bool:
+        """Pollable work present? (Caller holds the park stripe's lock for
+        the single-stripe case; the NULL case takes each stripe's lock.)"""
+        eng = self.engine
+        if channel is not None:
+            return eng._stripe(channel).needs_polling(channel)
+        for s in eng._stripes:
+            with s.held():
+                if s.needs_polling(None):
+                    return True
+        return False
 
 
 # ----------------------------------------------------------------------
@@ -324,8 +728,13 @@ def stream_progress(stream: MPIXStream = STREAM_NULL, engine: Optional[ProgressE
     return (engine or _default_engine).progress(stream)
 
 
-def start_progress_thread(stream: MPIXStream = STREAM_NULL, interval: float = 0.0, engine: Optional[ProgressEngine] = None) -> None:
-    (engine or _default_engine).start_progress_thread(stream, interval)
+def start_progress_thread(
+    stream: MPIXStream = STREAM_NULL,
+    interval: float = 0.0,
+    engine: Optional[ProgressEngine] = None,
+    park: bool = True,
+) -> None:
+    (engine or _default_engine).start_progress_thread(stream, interval, park)
 
 
 def stop_progress_thread(stream: MPIXStream = STREAM_NULL, engine: Optional[ProgressEngine] = None) -> None:

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
+    "DEFAULT_NUM_CHANNELS",
     "MPIXStream",
     "STREAM_NULL",
     "StreamPool",
@@ -55,6 +56,19 @@ __all__ = [
 # ----------------------------------------------------------------------
 # Streams & the finite channel (VCI) pool
 # ----------------------------------------------------------------------
+
+#: Width of the channel space. The progress engine sizes its lock-stripe
+#: table to this, so with the default pool every compute stream's channel
+#: maps 1:1 onto its own stripe (no false lock sharing between streams).
+DEFAULT_NUM_CHANNELS = 64
+
+
+def axis_size(name):
+    """Size of a mapped mesh axis inside a shard_map region, portable
+    across jax versions (``lax.axis_size`` only exists in newer jax)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
 
 
 @dataclass(frozen=True)
@@ -87,7 +101,7 @@ class StreamPool:
     so applications get predictable channel isolation.
     """
 
-    def __init__(self, max_channels: int = 64):
+    def __init__(self, max_channels: int = DEFAULT_NUM_CHANNELS):
         self.max_channels = max_channels
         self._lock = threading.Lock()
         self._ids = itertools.count()
@@ -211,7 +225,7 @@ class StreamComm:
         """Flattened rank inside a shard_map region (traced value)."""
         r = jax.lax.axis_index(self.axes[0])
         for a in self.axes[1:]:
-            r = r * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            r = r * axis_size(a) + jax.lax.axis_index(a)
         return r
 
     def with_axes(self, axes: Sequence[str]) -> "StreamComm":
@@ -248,8 +262,10 @@ def comm_get_stream(comm: StreamComm, idx: int = 0) -> MPIXStream:
 def new_token():
     """A fresh dependency token (device scalar). Ops on the same stream are
     chained through their token; ops on different streams get different
-    tokens and may execute concurrently."""
-    return jnp.zeros((), dtype=jnp.int32)
+    tokens and may execute concurrently. float32 so the token stays an
+    ordinary zero under AD (an int token's float0 cotangent breaks older
+    shard_map transpose spec checks)."""
+    return jnp.zeros((), dtype=jnp.float32)
 
 
 def token_join(*tokens):
@@ -260,13 +276,29 @@ def token_join(*tokens):
     return out
 
 
+@jax.custom_jvp
+def _barrier(operands):
+    return jax.lax.optimization_barrier(operands)
+
+
+@_barrier.defjvp
+def _barrier_jvp(primals, tangents):
+    # the barrier is the identity for AD: tangents pass straight through
+    # (older jax has no differentiation rule for optimization_barrier, and
+    # custom_vjp trips shard_map's spec check there)
+    (operands,), (d_operands,) = primals, tangents
+    return _barrier(operands), d_operands
+
+
 def serialize_on(token, *arrays):
     """Tie ``arrays`` to ``token``: none of them may be reordered before the
     op that produced the token. Returns (new_token, arrays).
 
     Uses ``lax.optimization_barrier`` — the XLA-native way to impose
     ordering without data dependence (the TPU analogue of issuing on a
-    serial stream context).
+    serial stream context) — wrapped with an identity VJP so device-ordered
+    sends stay differentiable (pipeline backward = AD transpose of the
+    forward's enqueued ops) on jax versions without a built-in rule.
     """
-    sealed = jax.lax.optimization_barrier((token, *arrays))
+    sealed = _barrier((token, *arrays))
     return sealed[0], sealed[1:]

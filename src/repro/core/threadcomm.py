@@ -23,6 +23,7 @@ collectives in :mod:`repro.core.hierarchical`.
 
 from __future__ import annotations
 
+import inspect
 from dataclasses import dataclass
 from functools import partial
 from typing import Callable, Optional, Sequence, Tuple
@@ -31,11 +32,30 @@ import jax
 import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
-from repro.core.streams import StreamComm, MPIXStream, STREAM_NULL
+try:  # jax <= 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _jax_shard_map
+except ImportError:  # newer jax promoted it to the top level
+    from jax import shard_map as _jax_shard_map
+
+from repro.core.streams import StreamComm, MPIXStream, STREAM_NULL, axis_size
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_jax_shard_map).parameters)
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = False, **kw):
+    """Version-portable ``shard_map``: older jax spells the replication
+    check ``check_rep``, newer jax ``check_vma`` — translate to whichever
+    the installed version accepts."""
+    if "check_vma" in _SHARD_MAP_PARAMS:
+        kw["check_vma"] = check_vma
+    elif "check_rep" in _SHARD_MAP_PARAMS:
+        kw["check_rep"] = check_vma
+    return _jax_shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
 
 __all__ = [
+    "shard_map",
     "ThreadComm",
     "threadcomm_init",
     "threadcomm_free",
@@ -69,7 +89,7 @@ class ThreadComm:
         """Traced flattened rank; valid inside an active region only."""
         r = lax.axis_index(self.axes[0])
         for a in self.axes[1:]:
-            r = r * lax.axis_size(a) + lax.axis_index(a)
+            r = r * axis_size(a) + lax.axis_index(a)
         return r
 
     @property

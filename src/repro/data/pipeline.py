@@ -15,7 +15,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from repro.core.progress import ProgressEngine, default_engine
+from repro.core.progress import ProgressEngine, default_engine, join_thread_states
 from repro.core.streams import MPIXStream, STREAM_NULL
 from repro.models.config import ModelConfig
 
@@ -88,7 +88,11 @@ class SyntheticPipeline:
             return not st["thread"].is_alive()
 
         return self.engine.grequest_start(
-            poll_fn=poll, extra_state=state, stream=self.stream, name=f"prefetch-{step}"
+            poll_fn=poll,
+            wait_fn=join_thread_states,
+            extra_state=state,
+            stream=self.stream,
+            name=f"prefetch-{step}",
         )
 
     def get_batch(self, step: int) -> dict:

@@ -20,6 +20,23 @@ from repro.core.streams import MPIXStream, STREAM_NULL
 __all__ = ["HeartbeatMonitor"]
 
 
+def _wait_next_deadline(states, timeout) -> None:
+    """Batched ``wait_fn``: sleep until the earliest point any monitored
+    rank *could* time out (bounded by the engine's deadline budget) —
+    waiting on a heartbeat never busy-polls deadlines that cannot have
+    expired yet."""
+    delays = []
+    for mon in states:
+        h = mon._next_deadline()
+        if h is not None:
+            delays.append(max(0.0, h - mon.clock()))
+    delay = min(delays) if delays else 0.05
+    if timeout is not None:
+        delay = min(delay, max(0.0, timeout))
+    if delay > 0:
+        time.sleep(min(delay, 1.0))
+
+
 class HeartbeatMonitor:
     def __init__(
         self,
@@ -40,13 +57,24 @@ class HeartbeatMonitor:
         self._last: Dict[int, float] = {r: now for r in ranks}
         self._failed: List[int] = []
         self._req = self.engine.grequest_start(
-            poll_fn=self._poll, extra_state=None, stream=stream, name="heartbeat"
+            poll_fn=self._poll,
+            wait_fn=_wait_next_deadline,
+            extra_state=self,
+            stream=stream,
+            name="heartbeat",
         )
 
     def record(self, rank: int) -> None:
         with self._lock:
             if rank in self._last:
                 self._last[rank] = self.clock()
+
+    def _next_deadline(self) -> Optional[float]:
+        """Earliest absolute time a monitored rank could miss its deadline."""
+        with self._lock:
+            if not self._last:
+                return None
+            return min(self._last.values()) + self.timeout
 
     def _poll(self, _state) -> bool:
         """Completes (only) when failures were detected and reported."""
@@ -67,3 +95,8 @@ class HeartbeatMonitor:
         """Synchronous check (one progress visit)."""
         self.engine.progress(self.stream)
         return self.failed
+
+    def stop(self) -> None:
+        """Cancel the detector request (monitor shutdown): wakes any waiter
+        parked on it and lets the engine sweep it from the queue."""
+        self._req.cancel()

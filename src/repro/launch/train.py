@@ -147,6 +147,7 @@ class Trainer:
         self.straggler = StragglerMonitor(ranks=[0])
         self.heartbeat = HeartbeatMonitor(ranks=[0], timeout=3600.0, engine=self.engine)
         self.history = []
+        self.last_progress_stats: Optional[dict] = None
 
     def maybe_restore(self):
         if self.ckpt is None:
@@ -177,7 +178,8 @@ class Trainer:
 
     def run(self, steps: int, log_every: int = 10):
         # spin up background progress only while async work is in flight —
-        # the paper's control knob (ext. 6)
+        # the paper's control knob (ext. 6). Parked threads (default) sleep
+        # on the stream CV between bursts, so an idle stream costs ~0 CPU.
         self.engine.start_progress_thread(self.ckpt_stream, interval=0.01)
         self.engine.start_progress_thread(self.data_stream, interval=0.0)
         try:
@@ -209,7 +211,16 @@ class Trainer:
                 self.ckpt.save_async(final, {"params": self.params, "opt": self.opt_state})
                 self.ckpt.wait_for_pending()
         finally:
+            # progress threads are per-run; the heartbeat request stays live
+            # (heartbeat.stop() is for Trainer teardown, not between runs)
             self.engine.stop_all()
+            st = self.engine.stats()
+            self.last_progress_stats = st
+            print(
+                f"[trainer] progress engine: {st['completions']} completions, "
+                f"{st['polls']} polls, {st['lock_waits']} lock waits, "
+                f"{st['parks']} parks / {st['wakes']} wakes"
+            )
         return self.history
 
 

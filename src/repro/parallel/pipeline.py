@@ -23,9 +23,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
-from repro.core.streams import new_token, serialize_on
+from repro.core.streams import axis_size, new_token, serialize_on
+from repro.core.threadcomm import shard_map
 
 __all__ = ["gpipe_forward", "pipeline_loss_fn", "split_stages"]
 
@@ -37,7 +37,7 @@ def gpipe_forward(stage_fn: Callable, stage_params, x_micro, axis_name: str):
     x_micro: (n_micro, mb, S, d) — microbatch activations fed to stage 0.
     Returns (n_micro, mb, S, d) stage-(P-1) outputs (valid on last rank).
     """
-    n_stages = lax.axis_size(axis_name)
+    n_stages = axis_size(axis_name)
     rank = lax.axis_index(axis_name)
     n_micro = x_micro.shape[0]
     ticks = n_micro + n_stages - 1
@@ -96,7 +96,7 @@ def pipeline_loss_fn(
             outs = gpipe_forward(stage_fn, stage_params, xm, pipe_axis)
             outs = outs.reshape(B, *outs.shape[2:])
             rank = lax.axis_index(pipe_axis)
-            n_stages = lax.axis_size(pipe_axis)
+            n_stages = axis_size(pipe_axis)
             l = head_loss_fn(params["head"], outs, tokens)
             l = jnp.where(rank == n_stages - 1, l, 0.0)
             return lax.psum(l, pipe_axis)

@@ -6,7 +6,11 @@ batch — per-slot positions are a (B,) vector, so ragged progress is
 native). Prefill runs per-request and its cache rows are spliced into the
 batch cache. Finished slots (EOS or max_new_tokens) are freed for the
 admission queue. Host-side bookkeeping (admission, completion callbacks)
-rides the progress engine like every other async task in the framework.
+rides the progress engine like every other async task in the framework:
+pass ``progress_engine=`` and every submitted request carries a
+generalized request that completes (externally — parked waiters wake via
+the stream CV, zero polling) when decode finishes, so one
+``engine.wait_all`` can cover serving alongside checkpoints/prefetch.
 """
 
 from __future__ import annotations
@@ -20,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.progress import GeneralizedRequest, ProgressEngine
+from repro.core.streams import MPIXStream, STREAM_NULL
 from repro.models import api
 from repro.models.config import ModelConfig
 
@@ -34,14 +40,25 @@ class Request:
     eos_id: int = -1  # -1 = never
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    grequest: Optional[GeneralizedRequest] = None  # set when a progress engine is attached
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, max_batch: int = 8, max_len: int = 512):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        max_batch: int = 8,
+        max_len: int = 512,
+        progress_engine: Optional[ProgressEngine] = None,
+        stream: MPIXStream = STREAM_NULL,
+    ):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        self.progress_engine = progress_engine
+        self.stream = stream
         self.cache = api.init_cache(cfg, max_batch, max_len)
         self.pos = np.zeros((max_batch,), np.int32)
         self.cur_tok = np.zeros((max_batch,), np.int32)
@@ -56,8 +73,24 @@ class ServeEngine:
     # -- admission ---------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16, eos_id: int = -1) -> Request:
         req = Request(next(self._rid), np.asarray(prompt, np.int32), max_new_tokens, eos_id)
+        if self.progress_engine is not None:
+            # completion handle: externally completed by step() at EOS — no
+            # poll_fn, so a blocked wait_all parks on the CV instead of
+            # polling decode state
+            req.grequest = self.progress_engine.grequest_start(
+                extra_state=req,
+                stream=self.stream,
+                name=f"serve-{req.rid}",
+            )
         self.queue.append(req)
         return req
+
+    def wait(self, req: Request, timeout: Optional[float] = None) -> bool:
+        """Block until ``req`` finishes decoding, via the progress engine's
+        parking wait. Requires ``progress_engine``."""
+        if req.grequest is None:
+            raise ValueError("ServeEngine has no progress_engine attached")
+        return self.progress_engine.wait(req.grequest, timeout)
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -98,6 +131,8 @@ class ServeEngine:
             self.cur_tok[i] = tok
             if tok == req.eos_id or len(req.out_tokens) >= req.max_new_tokens or self.pos[i] >= self.max_len - 1:
                 req.done = True
+                if req.grequest is not None:
+                    req.grequest.complete()  # wakes parked waiters
                 self.slot_req[i] = None
         return len(active)
 

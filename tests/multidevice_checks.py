@@ -18,6 +18,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 import repro.core as C
+from repro.core.threadcomm import shard_map
 from repro.core import collectives as col
 from repro.core import enqueue as enq
 from repro.core.hierarchical import flat_all_reduce, hierarchical_all_reduce
@@ -139,7 +140,7 @@ def main():
             l = jnp.where(rank == P_STAGES - 1, l, 0.0)
             return jax.lax.psum(l, "pipe")
 
-        return jax.shard_map(
+        return shard_map(
             inner, mesh=pmesh, in_specs=(P("pipe"), P()), out_specs=P(), check_vma=False
         )(split_stages(Ws_stacked, P_STAGES), xs)
 

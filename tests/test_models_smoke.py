@@ -12,6 +12,9 @@ from repro.models import api
 from repro.optim.adamw import AdamWConfig, adamw_init
 from repro.launch.train import make_train_step
 
+
+pytestmark = pytest.mark.slow  # multi-minute: excluded from the fast tier-1 split
+
 KEY = jax.random.key(0)
 
 

@@ -7,6 +7,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute: excluded from the fast tier-1 split
+
 HERE = os.path.dirname(__file__)
 SRC = os.path.join(HERE, "..", "src")
 

@@ -1,0 +1,241 @@
+"""The sharded VCI runtime: lock striping under concurrency, batched
+wait_fn completion, CV parking (no busy-polling in blocked waits), and
+stats() counter correctness."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import progress as pg
+from repro.core import streams as ss
+
+
+# ------------------------------------------------------------- striping
+
+
+def test_stripe_table_is_fixed_and_channel_aligned():
+    eng = pg.ProgressEngine()
+    pool = ss.StreamPool()
+    streams = [pool.create() for _ in range(8)]
+    # default pool + default table: every compute stream on its own stripe
+    stripes = {id(eng.lock_for(s.channel)) for s in streams}
+    assert len(stripes) == 8
+    # the implicit channel has its own home, shared with no compute stream
+    assert id(eng.lock_for(ss.STREAM_NULL.channel)) not in stripes
+    # global-lock mode degenerates to one critical section
+    glob = pg.ProgressEngine(global_lock=True)
+    assert id(glob.lock_for(0)) == id(glob.lock_for(17)) == id(glob.lock_for(-1))
+
+
+def test_concurrent_start_and_progress_8_threads():
+    """8 threads hammer grequest_start + progress on their own streams;
+    every request completes exactly once and the counters add up."""
+    eng = pg.ProgressEngine()
+    pool = ss.StreamPool()
+    per_thread, n_threads = 50, 8
+    streams = [pool.create() for _ in range(n_threads)]
+    errors = []
+
+    def worker(stream):
+        try:
+            for _ in range(per_thread):
+                hits = {"n": 0}
+
+                def poll(st):
+                    st["n"] += 1
+                    return st["n"] >= 2
+
+                r = eng.grequest_start(poll_fn=poll, extra_state=hits, stream=stream)
+                while not r.done:
+                    eng.progress(stream)
+                assert hits["n"] == 2
+        except Exception as e:  # surfaced below; a daemon assert would vanish
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in streams]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    st = eng.stats(per_stripe=True)
+    total = per_thread * n_threads
+    assert st["completions"] == total
+    assert st["enqueued"] == total
+    assert st["polls"] == 2 * total
+    # striped: each thread's work stayed on its own stripe
+    busy = [row for row in st["stripes"] if row["completions"]]
+    assert len(busy) == n_threads
+    assert all(row["pending"] == 0 for row in st["stripes"])
+
+
+# ------------------------------------------------------------- batching
+
+
+def test_batched_wait_fn_per_stream_groups():
+    """Requests sharing a wait_fn are waited as whole per-stream batches:
+    one call per stream, covering all of that stream's states."""
+    eng = pg.ProgressEngine()
+    pool = ss.StreamPool()
+    s1, s2 = pool.create(), pool.create()
+    calls = []
+
+    def wait_fn(states, timeout):
+        calls.append(list(states))
+        for st in states:
+            st["done"] = True
+
+    def poll(st):
+        return st.get("done", False)
+
+    reqs = [
+        eng.grequest_start(poll_fn=poll, wait_fn=wait_fn, extra_state={"s": i}, stream=s)
+        for s in (s1, s2)
+        for i in range(3)
+    ]
+    assert eng.wait_all(reqs, timeout=5)
+    assert len(calls) == 2  # one batched call per stream
+    assert sorted(len(c) for c in calls) == [3, 3]
+    assert eng.stats()["completions"] == 6
+    assert eng.pending() == 0  # batch-retired requests are dequeued too
+
+
+# -------------------------------------------------------------- parking
+
+
+def test_blocked_wait_all_parks_instead_of_polling():
+    """A wait over externally-completed requests (no poll_fn) must not
+    spin: it parks on a CV and is woken by grequest_complete."""
+    eng = pg.ProgressEngine()
+    reqs = [eng.grequest_start() for _ in range(4)]
+
+    def completer():
+        time.sleep(0.15)
+        for r in reqs:
+            pg.grequest_complete(r)
+
+    threading.Thread(target=completer, daemon=True).start()
+    t0 = time.monotonic()
+    assert eng.wait_all(reqs, timeout=5)
+    assert time.monotonic() - t0 >= 0.1  # actually blocked
+    st = eng.stats()
+    assert st["waiter_parks"] >= 1  # the waiter parked...
+    assert st["waiter_wakes"] >= 1  # ...and was woken by completion
+    assert st["polls"] == 0  # with zero request polls
+
+
+def test_wait_parks_when_progress_thread_covers_stream():
+    """With a progress thread owning the stream, the waiting thread parks
+    even for poll_fn requests; the background thread does the polling."""
+    eng = pg.ProgressEngine()
+    pool = ss.StreamPool()
+    s = pool.create()
+    gate = threading.Event()
+    r = eng.grequest_start(poll_fn=lambda st: gate.is_set(), stream=s)
+    eng.start_progress_thread(s, interval=0.001)
+    try:
+        threading.Timer(0.1, gate.set).start()
+        assert eng.wait(r, timeout=5)
+        assert eng.stats()["waiter_parks"] >= 1
+    finally:
+        eng.stop_progress_thread(s)
+
+
+def test_parked_progress_thread_idles_and_wakes_on_enqueue():
+    """Empty queue → the thread parks on the stripe CV (near-zero loops);
+    a new request wakes it and gets completed promptly."""
+    eng = pg.ProgressEngine()
+    pool = ss.StreamPool()
+    s = pool.create()
+    eng.start_progress_thread(s, interval=0.0, park=True)
+    try:
+        time.sleep(0.3)
+        idle = eng.stats()
+        assert idle["progress_calls"] < 50  # busy-spin would be ~10k+
+        assert idle["parks"] >= 1
+        r = eng.grequest_start(poll_fn=lambda st: True, stream=s)
+        t0 = time.monotonic()
+        while not r.done and time.monotonic() - t0 < 5:
+            time.sleep(0.005)
+        assert r.done  # woken thread completed it; main thread never polled
+    finally:
+        eng.stop_progress_thread(s)
+
+
+# ---------------------------------------------------------------- stats
+
+
+def test_stats_counters_exact_sequence():
+    eng = pg.ProgressEngine()
+    pool = ss.StreamPool()
+    s = pool.create()
+    reqs = []
+    for _ in range(3):
+        state = {"n": 0}
+
+        def poll(st):
+            st["n"] += 1
+            return st["n"] >= 2
+
+        reqs.append(eng.grequest_start(poll_fn=poll, extra_state=state, stream=s))
+    eng.progress(s)  # visit 1: all three polled, none done
+    assert eng.stats()["completions"] == 0
+    eng.progress(s)  # visit 2: all three complete
+    st = eng.stats()
+    assert st["completions"] == 3
+    assert st["polls"] == 6
+    assert st["enqueued"] == 3
+    assert eng.pending(s) == 0
+    eng.reset_stats()
+    zeroed = eng.stats()
+    assert zeroed["polls"] == zeroed["completions"] == zeroed["parks"] == 0
+
+
+def test_externally_completed_requests_swept_on_enqueue():
+    """No progress() ever runs, yet a long-lived channel queue must not
+    grow without bound: enqueueing sweeps prior externally-completed
+    requests (the serving-engine usage pattern)."""
+    eng = pg.ProgressEngine()
+    pool = ss.StreamPool()
+    s = pool.create()
+    freed = []
+    for i in range(100):
+        r = eng.grequest_start(free_fn=freed.append, extra_state=i, stream=s)
+        r.complete()
+    assert eng.pending(s) <= 1  # only the newest may linger
+    assert eng.stats()["completions"] >= 99
+    assert freed == list(range(99))  # free_fn ran exactly once each, in order
+
+
+def test_timed_out_wait_leaves_no_callbacks():
+    """Repeated short-timeout waits on a long-lived request (heartbeat
+    pattern) must not accumulate wake closures."""
+    eng = pg.ProgressEngine()
+    r = eng.grequest_start()  # never completes
+    for _ in range(20):
+        assert not eng.wait(r, timeout=0.001)
+    # only the engine's own stripe-notify callback remains
+    assert len(r._callbacks) == 1
+    r.cancel()
+
+
+def test_lock_waits_counted_under_contention():
+    eng = pg.ProgressEngine(global_lock=True)
+    stop = threading.Event()
+
+    def holder():
+        while not stop.is_set():
+            with eng.lock_for(0):
+                time.sleep(0.002)
+
+    t = threading.Thread(target=holder, daemon=True)
+    t.start()
+    try:
+        for _ in range(20):
+            eng.progress()
+            time.sleep(0.001)
+    finally:
+        stop.set()
+        t.join(timeout=2)
+    assert eng.stats()["lock_waits"] >= 1

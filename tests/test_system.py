@@ -10,6 +10,8 @@ from repro.data.pipeline import DataConfig
 from repro.launch.train import Trainer
 from repro.optim.adamw import AdamWConfig
 
+pytestmark = pytest.mark.slow  # multi-minute: excluded from the fast tier-1 split
+
 
 def _trainer(ckpt_dir=None, steps_total=30):
     cfg = get_config("qwen1.5-0.5b", smoke=True)
