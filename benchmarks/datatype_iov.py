@@ -1,10 +1,20 @@
 """Paper §Derived Datatypes analogue: O(1) descriptors vs brute-force
 segment listing (the paper's core argument: a YZ surface is Ny·Nz
-segments but constant descriptor cost), plus pack-path throughput.
+segments but constant descriptor cost), plus host pack-engine throughput
+across its three tiers:
+
+* ``naive``      — per-segment Python loop (``dt.pack_naive``, the old engine)
+* ``coalesced``  — per-*run* loop over ``dt.iter_runs`` (merged segments)
+* ``vectorized`` — ``dt.pack`` (strided-window / gather-index numpy engine)
+
+Results are also emitted machine-readably to ``BENCH_datatype.json`` so
+the perf trajectory is trackable across PRs; ``--smoke`` shrinks sizes
+for the CI smoke invocation (scripts/ci.sh).
 """
 
 from __future__ import annotations
 
+import json
 import time
 
 import numpy as np
@@ -12,10 +22,33 @@ import numpy as np
 import repro.core.datatype as dt
 
 
-def bench():
+def _mbps(fn, nbytes: int, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return nbytes / best / 1e6
+
+
+def _pack_coalesced(buf: np.ndarray, d: dt.Datatype) -> np.ndarray:
+    """Mid-tier engine: slice-copy per maximal run (no index build)."""
+    flat = buf.view(np.uint8).reshape(-1)
+    out = np.empty(d.size, np.uint8)
+    pos = 0
+    for off, ln in dt.iter_runs(d):
+        out[pos : pos + ln] = flat[off : off + ln]
+        pos += ln
+    return out
+
+
+def bench(smoke: bool = False, json_path: str | None = "BENCH_datatype.json"):
     rows = []
-    # descriptor + count cost vs brute force listing for growing volumes
-    for n in (32, 64, 128):
+    data: dict = {"smoke": smoke, "workloads": {}}
+
+    # -- descriptor + count cost vs brute force listing for growing volumes
+    desc = {}
+    for n in (32,) if smoke else (32, 64, 128):
         t0 = time.perf_counter()
         sub = dt.subarray([n, n, n], [n // 2, n // 2, n // 2], [n // 4, n // 4, n // 4], dt.predefined(8))
         nseg, _ = dt.type_iov_len(sub, -1)
@@ -23,6 +56,7 @@ def bench():
         t0 = time.perf_counter()
         _ = sub.iovs()  # brute-force enumeration of all segments
         t_enum = time.perf_counter() - t0
+        desc[f"n{n}"] = {"descriptor_us": t_desc * 1e6, "enumerate_us": t_enum * 1e6, "nseg": nseg}
         rows.append(
             (
                 f"dt_iov/desc_n{n}",
@@ -30,24 +64,79 @@ def bench():
                 f"{nseg} segs; enumerate={t_enum*1e6:.1f}us ({t_enum/max(t_desc,1e-9):.0f}x)",
             )
         )
-    # random segment access is O(depth), independent of index
-    sub = dt.subarray([256, 256, 256], [128, 128, 128], [64, 64, 64], dt.predefined(8))
-    for idx in (0, 8000, 16000):
+    data["descriptor_vs_enumerate"] = desc
+
+    # -- random segment access is O(depth), independent of index
+    m = 64 if smoke else 256
+    sub = dt.subarray([m, m, m], [m // 2, m // 2, m // 2], [m // 4, m // 4, m // 4], dt.predefined(8))
+    for idx in (0, sub.num_segments // 2, sub.num_segments - 1):
         t0 = time.perf_counter()
         for _ in range(1000):
             sub.segment(idx)
         t = (time.perf_counter() - t0) / 1000
         rows.append((f"dt_iov/segment[{idx}]", t * 1e6, "O(depth) random access"))
-    # pack throughput (host engine)
-    buf = np.random.default_rng(0).integers(0, 255, 64 * 1024 * 64, dtype=np.uint8)
-    v = dt.vector(4096, 16, 64, dt.predefined(4))
-    t0 = time.perf_counter()
-    packed = dt.pack(buf, v)
-    t = time.perf_counter() - t0
-    rows.append(("dt_pack/host", t * 1e6, f"{packed.nbytes/t/1e6:.0f} MB/s"))
+
+    # -- pack engine tiers over three layout families
+    rng = np.random.default_rng(0)
+    nseg = 1024 if smoke else 4096
+    nb = nseg // 4
+    # touching blocks in groups of ~4: coalescing merges segments into runs
+    run_gaps = [0 if i % 4 else 128 for i in range(1, nb)]
+    # random gaps: nothing merges, only the gather path applies
+    irr_gaps = [64 + int(g) for g in rng.integers(1, 32, nb - 1)]
+    workloads = {
+        # the ROADMAP/acceptance workload: uniform vector (halo-exchange shape)
+        "vector": dt.vector(nseg, 16, 64, dt.predefined(4)),
+        # 3-D volume surface: two-level stride, regular but NOT uniform
+        "surface": dt.subarray([64, 64, 64], [32, 64, 32], [16, 0, 16], dt.predefined(4)),
+        "runs": dt.hindexed([16] * nb, list(np.cumsum([0] + [64 + g for g in run_gaps])), dt.predefined(4)),
+        "irregular": dt.hindexed([16] * nb, list(np.cumsum([0] + irr_gaps)), dt.predefined(4)),
+    }
+    for name, d in workloads.items():
+        buf = rng.integers(0, 255, d.lb + d.extent, dtype=np.uint8)
+        ref = dt.pack_naive(buf, d)
+        naive = _mbps(lambda: dt.pack_naive(buf, d), d.size)
+        coal = _mbps(lambda: _pack_coalesced(buf, d), d.size)
+        vect = _mbps(lambda: dt.pack(buf, d), d.size)
+        assert np.array_equal(dt.pack(buf, d), ref) and np.array_equal(_pack_coalesced(buf, d), ref)
+        out = np.zeros_like(buf)
+        unp = _mbps(lambda: dt.unpack(ref, d, out), d.size)
+        info = dt.pack_info(d)
+        data["workloads"][name] = {
+            "bytes": d.size,
+            "nseg": d.num_segments,
+            "nruns": len(dt.coalesced_iovs(d)),
+            "uniform": info is not None,
+            "pack_MBps": {"naive": naive, "coalesced": coal, "vectorized": vect},
+            "unpack_MBps": {"vectorized": unp},
+            "speedup_vectorized_over_naive": vect / naive,
+        }
+        rows.append(
+            (
+                f"dt_pack/{name}",
+                d.size / max(vect, 1e-9),  # us per vectorized pack
+                f"naive={naive:.0f} coalesced={coal:.0f} vectorized={vect:.0f} MB/s "
+                f"({vect/naive:.0f}x; {d.num_segments} segs -> {len(dt.coalesced_iovs(d))} runs)",
+            )
+        )
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(data, f, indent=2)
     return rows
 
 
 if __name__ == "__main__":
-    for r in bench():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small sizes for CI")
+    args = ap.parse_args()
+    # the smoke run must not clobber the committed full-size record
+    path = "BENCH_datatype.smoke.json" if args.smoke else "BENCH_datatype.json"
+    for r in bench(smoke=args.smoke, json_path=path):
         print(",".join(map(str, r)))
+    with open(path) as f:
+        d = json.load(f)
+    ratio = d["workloads"]["vector"]["speedup_vectorized_over_naive"]
+    print(f"# vectorized/naive on vector workload: {ratio:.1f}x (target >= 10x)")

@@ -7,7 +7,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * threadcomm_latency— paper Fig. 7 (threadcomm vs MPI-everywhere) +
                         multi-pod all-reduce byte model
   * progress_overlap  — paper §General Progress RMA example
-  * datatype_iov      — paper §Derived Datatypes iovec costs
+  * datatype_iov      — paper §Derived Datatypes iovec costs + the host
+                        pack-engine tiers (naive/coalesced/vectorized);
+                        also writes ``BENCH_datatype.json`` (machine-
+                        readable MB/s + descriptor-vs-enumerate latency)
   * kernels_bench     — Pallas kernels vs references (interpret mode)
   * roofline_table    — §Roofline summary from the dry-run artifacts
 """

@@ -8,4 +8,8 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -q -m "not slow" "$@"
+python -m pytest -q -m "not slow" "$@"
+
+# datatype-bench smoke: exercises the pack-engine tiers end to end and
+# refreshes BENCH_datatype.json (machine-readable perf trajectory)
+python -m benchmarks.datatype_iov --smoke

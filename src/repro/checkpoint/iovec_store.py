@@ -2,8 +2,10 @@
 
 Layout: one binary file per pytree leaf holding the GLOBAL logical array;
 every shard describes its slice as a ``subarray`` datatype of the global
-shape and writes exactly its iovec segments at their global byte offsets
-(``pwrite`` per segment). No gather, no per-shard files to merge, and a
+shape and writes exactly its iovec runs at their global byte offsets —
+adjacent gap-free segments are coalesced first (``dt.iter_runs``), so a
+shard whose inner dims are dense issues ONE seek+write instead of one
+per segment. No gather, no per-shard files to merge, and a
 restart on a DIFFERENT mesh just queries different subarrays over the
 same files — this is the paper's "datatypes as a general-purpose layout
 API" made load-bearing: the store knows nothing about meshes, only about
@@ -98,9 +100,10 @@ def save_pytree(ckpt_dir: str, tree, step: int = 0, extra: Optional[dict] = None
                 raw = data.tobytes()  # C-order shard bytes
                 dtt = shard_subarray(global_shape, sh.index, itemsize)
                 # shard bytes are contiguous in shard-local order == the
-                # order iovec segments enumerate the subarray
+                # order coalesced runs enumerate the subarray; one
+                # seek+write per maximal run (not per segment)
                 pos = 0
-                for off, ln in dtt.iovs():
+                for off, ln in dt.iter_runs(dtt, max_bytes=64 << 20):
                     f.seek(off)
                     f.write(raw[pos : pos + ln])
                     pos += ln

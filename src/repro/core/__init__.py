@@ -19,12 +19,15 @@ from repro.core.datatype import (
     INT32,
     Datatype,
     Iov,
+    coalesced_iovs,
     contiguous,
     hindexed,
     hvector,
     indexed,
+    iter_runs,
     pack,
     pack_info,
+    pack_naive,
     predefined,
     resized,
     struct,
@@ -34,6 +37,7 @@ from repro.core.datatype import (
     type_iov_len,
     type_size,
     unpack,
+    unpack_naive,
     vector,
 )
 from repro.core.progress import (

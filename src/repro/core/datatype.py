@@ -17,6 +17,33 @@ This module is a faithful port of that algebra:
   ``[iov_offset, iov_offset + max_iov_len)`` in O(depth + n), *not*
   O(total_segments).
 
+On top of the segment algebra sits the host datatype *engine*:
+
+* ``coalesced_iovs(dt, count)`` / ``iter_runs(dt, max_bytes, count)``
+  merge adjacent gap-free segments into maximal contiguous runs (the
+  unit consumed by the checkpoint writer — one seek+write per run — and
+  the elastic reshard planner);
+* ``pack_info(dt)`` is an *exact*, descriptor-derived uniform-layout
+  probe: it returns ``(nseg, seg_bytes, stride_bytes, disp0)`` iff every
+  segment ``i`` is ``Iov(disp0 + i*stride_bytes, seg_bytes)``, computed
+  structurally from the descriptor tree (no sampling — the previous
+  first/middle/last spot checks misclassified adversarial ``hindexed``
+  layouts and corrupted dense-kernel packs);
+* ``pack``/``unpack`` are vectorized: uniform layouts go through a
+  ``np.lib.stride_tricks`` window copy, irregular ones through a single
+  numpy gather/scatter index built from coalesced runs, and ``count > 1``
+  replicates by extent shift without re-enumerating ``iovs()``.
+  ``pack_naive``/``unpack_naive`` keep the per-segment reference loop as
+  the test oracle and benchmark baseline.
+
+Buffer-origin semantics: MPI lets a datatype address bytes *below* the
+buffer pointer (``lb < 0``, e.g. negative ``hindexed`` displacements or a
+``resized`` lower bound). A numpy buffer has no bytes below index 0, so
+the engine rebases: **byte 0 of the buffer corresponds to the type's
+lowest addressed byte** when that is negative (otherwise offsets are used
+as-is). Out-of-range accesses raise ``ValueError`` instead of silently
+wrapping to the buffer tail, which is what the pre-rebase engine did.
+
 Consumers inside the framework: the sharded checkpoint store (each shard
 is a ``subarray`` of the global array), the gradient bucketizer (a
 ``struct`` over flattened parameter groups), and the ``dt_pack`` Pallas
@@ -30,7 +57,7 @@ from __future__ import annotations
 import bisect
 import math
 from dataclasses import dataclass, field
-from typing import List, Sequence, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -50,8 +77,12 @@ __all__ = [
     "type_extent",
     "type_iov_len",
     "type_iov",
+    "coalesced_iovs",
+    "iter_runs",
     "pack",
     "unpack",
+    "pack_naive",
+    "unpack_naive",
     "pack_info",
 ]
 
@@ -276,12 +307,20 @@ class _Blocks(Datatype):
             raise ValueError("blocks must be parallel lists")
         seg_prefix = [0]
         byte_prefix = [0]
-        for c, ch in zip(self.counts, self.children):
+        lo = hi = None  # lb/ub computed in the same pass (O(1) properties:
+        # the pack engine reads them per call, so recomputing per access
+        # would cost O(blocks) on every pack)
+        for d, c, ch in zip(self.displs, self.counts, self.children):
             rep = _HVector(c, 1, ch.extent, ch) if c != 1 else ch
             seg_prefix.append(seg_prefix[-1] + (rep.num_segments if c > 0 else 0))
             byte_prefix.append(byte_prefix[-1] + c * ch.size)
+            if c > 0 and ch.size > 0:
+                lo = d + rep.lb if lo is None else min(lo, d + rep.lb)
+                hi = d + rep.ub if hi is None else max(hi, d + rep.ub)
         object.__setattr__(self, "_seg_prefix", tuple(seg_prefix))
         object.__setattr__(self, "_byte_prefix", tuple(byte_prefix))
+        object.__setattr__(self, "_lb", 0 if lo is None else lo)
+        object.__setattr__(self, "_ub", 0 if hi is None else hi)
 
     def _rep(self, b: int) -> Datatype:
         c, ch = self.counts[b], self.children[b]
@@ -293,21 +332,11 @@ class _Blocks(Datatype):
 
     @property
     def lb(self) -> int:  # type: ignore[override]
-        cands = [
-            d + self._rep(b).lb
-            for b, d in enumerate(self.displs)
-            if self.counts[b] > 0 and self.children[b].size > 0
-        ]
-        return min(cands) if cands else 0
+        return self._lb
 
     @property
     def extent(self) -> int:  # type: ignore[override]
-        cands = [
-            d + self._rep(b).ub
-            for b, d in enumerate(self.displs)
-            if self.counts[b] > 0 and self.children[b].size > 0
-        ]
-        return (max(cands) - self.lb) if cands else 0
+        return self._ub - self._lb
 
     @property
     def num_segments(self) -> int:
@@ -528,36 +557,109 @@ def type_iov(dt: Datatype, iov_offset: int, max_iov_len: int) -> List[Iov]:
 
 
 # ----------------------------------------------------------------------
-# Host-side pack/unpack (numpy) — the classic MPI datatype engine
+# Exact uniform-layout analysis (descriptor-derived, no sampling)
 # ----------------------------------------------------------------------
 
 
-def pack(buf: np.ndarray, dt: Datatype, count: int = 1) -> np.ndarray:
-    """Gather ``count`` elements of ``dt`` from byte-buffer ``buf`` into a
-    contiguous uint8 array (MPI_Pack). Reference path for the ``dt_pack``
-    Pallas kernel and the checkpoint writer."""
-    flat = np.ascontiguousarray(buf).view(np.uint8).reshape(-1)
-    out = np.empty(count * dt.size, dtype=np.uint8)
-    pos = 0
-    for rep in range(count):
-        basedisp = rep * dt.extent
-        for off, ln in dt.iovs():
-            out[pos : pos + ln] = flat[basedisp + off : basedisp + off + ln]
-            pos += ln
-    return out
+def _memo(dt: Datatype, key: str, fn):
+    """Per-descriptor memoization (the engine analogue of MPICH caching a
+    compiled dataloop on the type object).  Keyed by identity, not value:
+    ``lru_cache`` would hash/compare the whole descriptor tree — O(blocks)
+    per lookup — on every pack call."""
+    cache = dt.__dict__.get("_engine_cache")
+    if cache is None:
+        cache = {}
+        object.__setattr__(dt, "_engine_cache", cache)
+    if key not in cache:
+        cache[key] = fn()
+    return cache[key]
 
 
-def unpack(packed: np.ndarray, dt: Datatype, out: np.ndarray, count: int = 1) -> np.ndarray:
-    """Scatter a contiguous buffer back through the datatype (MPI_Unpack)."""
-    flat = out.view(np.uint8).reshape(-1)
-    src = packed.view(np.uint8).reshape(-1)
-    pos = 0
-    for rep in range(count):
-        basedisp = rep * dt.extent
-        for off, ln in dt.iovs():
-            flat[basedisp + off : basedisp + off + ln] = src[pos : pos + ln]
-            pos += ln
-    return out
+def _uniform(dt: Datatype) -> Optional[Tuple[int, int, int, int]]:
+    return _memo(dt, "uniform", lambda: _uniform_impl(dt))
+
+
+def _uniform_impl(dt: Datatype) -> Optional[Tuple[int, int, int, int]]:
+    """Exact structural uniformity: ``(n, seg_bytes, stride, disp0)`` iff
+    segment ``i`` is ``Iov(disp0 + i*stride, seg_bytes)`` for all ``i``,
+    else ``None``.  Mirrors each node's ``segment()`` decomposition, so it
+    agrees with enumeration by construction — a non-affine layout can
+    never slip through (the sampled predecessor probed only
+    first/second/middle/last segments).
+    """
+    if isinstance(dt, _Primitive):
+        return (1, dt.size, 0, 0) if dt.size > 0 else None
+    if isinstance(dt, _Resized):
+        return _uniform(dt.base)
+    if isinstance(dt, _Shifted):
+        u = _uniform(dt.base)
+        if u is None:
+            return None
+        n, seg, stride, d0 = u
+        return (n, seg, stride, d0 + dt.disp)
+    if isinstance(dt, _HVector):
+        if dt.count == 0 or dt.blocklength == 0 or dt.base.size == 0:
+            return None
+        if dt._fully_merged:
+            return (1, dt.size, 0, dt.base.lb)
+        if dt._base_dense:
+            # one segment of _block_bytes per block, blocks at stride_bytes
+            if dt.count == 1:  # defensive: count==1 implies _fully_merged
+                return (1, dt._block_bytes, 0, dt.base.lb)
+            return (dt.count, dt._block_bytes, dt.stride_bytes, dt.base.lb)
+        u = _uniform(dt.base)
+        if u is None:
+            return None
+        m, seg, s, d0 = u
+        # segment (block b, rep j, inner i) sits at
+        #   b*stride_bytes + j*base.extent + d0 + i*s
+        # affine overall iff every boundary gap equals the inner stride
+        need = []
+        if m > 1:
+            need.append(s)
+        if dt.blocklength > 1:
+            need.append(dt.base.extent - (m - 1) * s)
+        if dt.count > 1:
+            need.append(dt.stride_bytes - (dt.blocklength - 1) * dt.base.extent - (m - 1) * s)
+        if not need:  # single segment overall
+            return (1, seg, 0, d0)
+        stride = need[0]
+        if any(g != stride for g in need):
+            return None
+        return (dt.count * dt.blocklength * m, seg, stride, d0)
+    if isinstance(dt, _Blocks):
+        parts = []  # (displ, uniform-info) per non-empty block, list order
+        for b in range(len(dt.displs)):
+            if dt.counts[b] <= 0 or dt.children[b].size == 0:
+                continue
+            u = _uniform(dt._rep(b))
+            if u is None:
+                return None
+            parts.append((dt.displs[b], u))
+        if not parts:
+            return None
+        seg = parts[0][1][1]
+        if any(u[1] != seg for _, u in parts):
+            return None
+        stride = None
+        for _, (m, _seg, s, _d0) in parts:
+            if m > 1:
+                if stride is None:
+                    stride = s
+                elif s != stride:
+                    return None
+        for (dp, (mp, _sp, sp, d0p)), (dn, (_mn, _sn, _snn, d0n)) in zip(parts, parts[1:]):
+            gap = (dn + d0n) - (dp + d0p + (mp - 1) * sp)
+            if stride is None:
+                stride = gap
+            elif gap != stride:
+                return None
+        n = sum(m for _, (m, _seg2, _s2, _d2) in parts)
+        d0 = parts[0][0] + parts[0][1][3]
+        if n == 1:
+            return (1, seg, 0, d0)
+        return (n, seg, stride, d0)
+    return None  # unknown subclass: conservatively irregular
 
 
 def pack_info(dt: Datatype):
@@ -565,27 +667,267 @@ def pack_info(dt: Datatype):
     constant stride), return ``(nseg, seg_bytes, stride_bytes, disp0)`` so a
     device kernel can pack it without a segment list; else ``None``.
 
-    This is the TPU adaptation of the datatype engine hot loop: the
-    dominant HPC layouts (array surfaces/halos) are uniform, and a blocked
-    Pallas gather handles them at memory-bandwidth; irregular layouts fall
-    back to the host iovec path.
+    Exact: derived structurally from the descriptor tree (see
+    :func:`_uniform`), never sampled.  A returned tuple is a *proof* that
+    segment ``i`` equals ``Iov(disp0 + i*stride_bytes, seg_bytes)``; the
+    ``dt_pack`` Pallas kernel and ``ops.pack_datatype`` rely on that.
+    Irregular layouts fall back to the host engine (:func:`pack`).
     """
-    n = dt.num_segments
-    if n == 0:
+    if dt.num_segments == 0:
         return None
-    s0 = dt.segment(0)
-    if n == 1:
-        return (1, s0.length, 0, s0.offset)
-    s1 = dt.segment(1)
-    stride = s1.offset - s0.offset
-    if s1.length != s0.length:
-        return None
-    last = dt.segment(n - 1)
-    if last.length != s0.length or last.offset != s0.offset + (n - 1) * stride:
-        return None
-    # spot-check a middle segment (uniform types are affine; blocks types
-    # may coincidentally match ends)
-    mid = dt.segment(n // 2)
-    if mid.length != s0.length or mid.offset != s0.offset + (n // 2) * stride:
-        return None
-    return (n, s0.length, stride, s0.offset)
+    return _uniform(dt)
+
+
+# ----------------------------------------------------------------------
+# Contiguous-run coalescing (the unit of checkpoint I/O and replanning)
+# ----------------------------------------------------------------------
+
+
+def _runs_one(dt: Datatype) -> Tuple[Iov, ...]:
+    """Maximal contiguous runs of ONE element of ``dt`` (adjacent gap-free
+    segments merged), in pack order.  Memoized: descriptors are frozen."""
+    return _memo(dt, "runs", lambda: _runs_one_impl(dt))
+
+
+def _runs_one_impl(dt: Datatype) -> Tuple[Iov, ...]:
+    u = _uniform(dt)
+    if u is not None:
+        n, seg, stride, d0 = u
+        if n == 1 or stride == seg:  # touching segments: one run
+            return (Iov(d0, n * seg),)
+        if stride > seg:  # constant gap: nothing merges
+            return tuple(Iov(d0 + i * stride, seg) for i in range(n))
+    runs: List[Iov] = []
+    end = None
+    for i in range(dt.num_segments):
+        s = dt.segment(i)
+        if s.length == 0:
+            continue
+        if end is not None and s.offset == end:
+            last = runs[-1]
+            runs[-1] = Iov(last.offset, last.length + s.length)
+        else:
+            runs.append(s)
+        end = runs[-1].offset + runs[-1].length
+    return tuple(runs)
+
+
+def iter_runs(
+    dt: Datatype, max_bytes: Optional[int] = None, count: int = 1
+) -> Iterator[Iov]:
+    """Stream the maximal contiguous runs of ``count`` elements of ``dt``.
+
+    Adjacent gap-free segments are merged — including across repetition
+    boundaries (a dense type replicated at its extent yields ONE run of
+    ``count * size`` bytes).  The single-element run structure is computed
+    once and replayed shifted by ``rep * extent``; ``iovs()`` is never
+    re-enumerated per repetition.  If ``max_bytes`` is given, runs longer
+    than it are split so every yielded :class:`Iov` fits the budget
+    (bounded staging buffers for the checkpoint writer).
+    """
+    if max_bytes is not None and max_bytes <= 0:
+        raise ValueError("max_bytes must be positive")
+    if count <= 0 or dt.size == 0:
+        return
+    base_runs = _runs_one(dt)
+    pend_off = pend_len = 0
+    have = False
+    for rep in range(count):
+        shift = rep * dt.extent
+        for r in base_runs:
+            off = r.offset + shift
+            if have and off == pend_off + pend_len:
+                pend_len += r.length
+                continue
+            if have:
+                yield from _split_run(pend_off, pend_len, max_bytes)
+            pend_off, pend_len, have = off, r.length, True
+    if have:
+        yield from _split_run(pend_off, pend_len, max_bytes)
+
+
+def _split_run(off: int, ln: int, max_bytes: Optional[int]) -> Iterator[Iov]:
+    if max_bytes is None or ln <= max_bytes:
+        yield Iov(off, ln)
+        return
+    p = 0
+    while p < ln:
+        step = min(max_bytes, ln - p)
+        yield Iov(off + p, step)
+        p += step
+
+
+def coalesced_iovs(dt: Datatype, count: int = 1) -> List[Iov]:
+    """Maximal contiguous runs of ``count`` elements of ``dt`` (list form
+    of :func:`iter_runs`).  Checkpoint writes and reshard plans operate on
+    these instead of raw segments: one seek+write per run."""
+    return list(iter_runs(dt, None, count))
+
+
+# ----------------------------------------------------------------------
+# Host-side pack/unpack (numpy) — the vectorized MPI datatype engine
+# ----------------------------------------------------------------------
+
+
+def _true_bounds(dt: Datatype) -> Tuple[int, int]:
+    """(lowest, highest+1) byte actually addressed by one element — may
+    differ from (lb, ub) under ``resized``, which can claim any window."""
+
+    def compute():
+        runs = _runs_one(dt)
+        if not runs:
+            return (0, 0)
+        return (min(r.offset for r in runs), max(r.offset + r.length for r in runs))
+
+    return _memo(dt, "bounds", compute)
+
+
+def _origin_shift(dt: Datatype) -> int:
+    """Rebase applied to all offsets: with a negative lower bound the
+    buffer's byte 0 stands for the lowest addressed byte (MPI lets data
+    live below the buffer pointer; numpy cannot index below 0)."""
+    lo = min(dt.lb, _true_bounds(dt)[0])
+    return -lo if lo < 0 else 0
+
+
+def _check_bounds(dt: Datatype, count: int, shift: int, bufsize: int, op: str) -> None:
+    t_lo, t_hi = _true_bounds(dt)
+    step = (count - 1) * dt.extent
+    lo = shift + t_lo + min(0, step)
+    hi = shift + t_hi + max(0, step)
+    if lo < 0 or hi > bufsize:
+        raise ValueError(
+            f"{op}: {count} element(s) of the datatype address bytes "
+            f"[{lo - shift}, {hi - shift}) relative to the type origin, but the "
+            f"buffer holds {bufsize} bytes (buffer byte 0 maps to offset "
+            f"{-shift}; negative lower bounds are rebased to it). The old "
+            f"engine silently wrapped such accesses to the buffer tail."
+        )
+
+
+# don't pin indices bigger than this on the descriptor: the index costs
+# sizeof(intp) per packed byte, so a 100 MB layout would cache ~800 MB
+_GATHER_MEMO_MAX_BYTES = 4 << 20
+
+
+def _gather_index(dt: Datatype, shift: int) -> np.ndarray:
+    """Byte gather index for one element, in pack order (built from
+    coalesced runs: one ``arange`` per run, not per segment).  Memoized on
+    the descriptor so repeated packs skip the index build — except for
+    very large layouts, where the memory cost outweighs the rebuild."""
+
+    def compute():
+        idx = np.empty(dt.size, dtype=np.intp)
+        p = 0
+        for off, ln in _runs_one(dt):
+            idx[p : p + ln] = np.arange(off + shift, off + shift + ln, dtype=np.intp)
+            p += ln
+        idx.setflags(write=False)
+        return idx
+
+    if dt.size > _GATHER_MEMO_MAX_BYTES:
+        return compute()
+    return _memo(dt, f"gather@{shift}", compute)
+
+
+def pack(buf: np.ndarray, dt: Datatype, count: int = 1) -> np.ndarray:
+    """Gather ``count`` elements of ``dt`` from byte-buffer ``buf`` into a
+    contiguous uint8 array (MPI_Pack) — vectorized.
+
+    Uniform layouts copy through a zero-copy strided window
+    (``np.lib.stride_tricks``); irregular layouts build one gather index
+    from the coalesced runs and fancy-index all ``count`` repetitions at
+    once.  Reference path for the ``dt_pack`` Pallas kernel and the
+    checkpoint writer; bounds are checked exactly (see module docstring
+    for the negative-``lb`` rebase).
+    """
+    flat = np.ascontiguousarray(buf).view(np.uint8).reshape(-1)
+    out = np.empty(count * dt.size, dtype=np.uint8)
+    if count <= 0 or dt.size == 0:
+        return out
+    shift = _origin_shift(dt)
+    _check_bounds(dt, count, shift, flat.size, "pack")
+    u = pack_info(dt)
+    if u is not None:
+        n, seg, stride, d0 = u
+        if stride >= 0 and (count == 1 or dt.extent >= 0):
+            window = np.lib.stride_tricks.as_strided(
+                flat[shift + d0 :], shape=(count, n, seg), strides=(dt.extent, stride, 1)
+            )
+            out.reshape(count, n, seg)[...] = window
+            return out
+    idx = _gather_index(dt, shift)
+    if count == 1:
+        np.take(flat, idx, out=out)
+    else:
+        reps = np.arange(count, dtype=np.intp) * dt.extent
+        out.reshape(count, dt.size)[...] = flat[idx[None, :] + reps[:, None]]
+    return out
+
+
+def unpack(packed: np.ndarray, dt: Datatype, out: np.ndarray, count: int = 1) -> np.ndarray:
+    """Scatter a contiguous buffer back through the datatype (MPI_Unpack)
+    — vectorized mirror of :func:`pack`.  ``out`` must be contiguous."""
+    flat = out.view(np.uint8).reshape(-1)
+    src = np.ascontiguousarray(packed).view(np.uint8).reshape(-1)
+    need = count * dt.size
+    if src.size < need:
+        raise ValueError(f"unpack: packed buffer holds {src.size} bytes, need {need}")
+    if count <= 0 or dt.size == 0:
+        return out
+    shift = _origin_shift(dt)
+    _check_bounds(dt, count, shift, flat.size, "unpack")
+    u = pack_info(dt)
+    if u is not None:
+        n, seg, stride, d0 = u
+        # strided-view writes need non-overlapping targets
+        if stride >= seg and (count == 1 or dt.extent >= (n - 1) * stride + seg):
+            window = np.lib.stride_tricks.as_strided(
+                flat[shift + d0 :], shape=(count, n, seg), strides=(dt.extent, stride, 1)
+            )
+            window[...] = src[:need].reshape(count, n, seg)
+            return out
+    idx = _gather_index(dt, shift)
+    if count == 1:
+        flat[idx] = src[: dt.size]
+    else:
+        reps = np.arange(count, dtype=np.intp) * dt.extent
+        flat[idx[None, :] + reps[:, None]] = src[:need].reshape(count, dt.size)
+    return out
+
+
+def pack_naive(buf: np.ndarray, dt: Datatype, count: int = 1) -> np.ndarray:
+    """Per-segment reference loop (the pre-vectorization engine): the test
+    oracle and the benchmark baseline.  Same rebase/bounds semantics."""
+    flat = np.ascontiguousarray(buf).view(np.uint8).reshape(-1)
+    out = np.empty(count * dt.size, dtype=np.uint8)
+    if count <= 0 or dt.size == 0:
+        return out
+    shift = _origin_shift(dt)
+    _check_bounds(dt, count, shift, flat.size, "pack")
+    segs = dt.iovs()
+    pos = 0
+    for rep in range(count):
+        basedisp = rep * dt.extent + shift
+        for off, ln in segs:
+            out[pos : pos + ln] = flat[basedisp + off : basedisp + off + ln]
+            pos += ln
+    return out
+
+
+def unpack_naive(packed: np.ndarray, dt: Datatype, out: np.ndarray, count: int = 1) -> np.ndarray:
+    """Per-segment reference loop for :func:`unpack`."""
+    flat = out.view(np.uint8).reshape(-1)
+    src = np.ascontiguousarray(packed).view(np.uint8).reshape(-1)
+    if count <= 0 or dt.size == 0:
+        return out
+    shift = _origin_shift(dt)
+    _check_bounds(dt, count, shift, flat.size, "unpack")
+    segs = dt.iovs()
+    pos = 0
+    for rep in range(count):
+        basedisp = rep * dt.extent + shift
+        for off, ln in segs:
+            flat[basedisp + off : basedisp + off + ln] = src[pos : pos + ln]
+            pos += ln
+    return out

@@ -27,6 +27,7 @@ motivation for getting the host out of the loop.
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
@@ -135,23 +136,53 @@ def _wait_dispatched(states, timeout) -> None:
     """Batched ``wait_fn`` for enqueued transfers: block on every dispatched
     array in the per-stream group (jax futures), honoring the engine's
     deadline budget. Module-level so the engine batches all enqueued
-    requests of a stream into one call."""
+    requests of a stream into one call.
+
+    Arrays exposing ``is_ready`` are polled so a deadline can cut the wait
+    short; backends without it fall back to ``block_until_ready`` bounded
+    by the remaining budget (run on a daemon helper joined for the
+    remainder, since ``block_until_ready`` itself has no timeout) — the
+    old path treated such arrays as already complete and returned
+    instantly, breaking ``wait_all``'s contract. ``RuntimeError`` from the
+    runtime (deleted/donated array) means there is nothing left to wait on
+    and is confined to that array, not the whole batch."""
     deadline = None if timeout is None else time.monotonic() + timeout
     for st in states:
         arr = st["y"]
+        remaining = None if deadline is None else deadline - time.monotonic()
+        if remaining is not None and remaining <= 0:
+            return  # budget exhausted; the engine recomputes remaining time
         try:
-            if deadline is None:
+            if not hasattr(arr, "is_ready"):
+                if not hasattr(arr, "block_until_ready"):
+                    continue  # plain host value: nothing to wait on
+                if remaining is None:
+                    arr.block_until_ready()
+                else:
+                    t = threading.Thread(target=_swallow_runtime_error(arr.block_until_ready), daemon=True)
+                    t.start()
+                    t.join(remaining)
+                continue
+            if remaining is None:
                 if hasattr(arr, "block_until_ready"):
                     arr.block_until_ready()
                 continue
             # block_until_ready has no timeout: under a deadline, poll the
             # future's readiness so the caller's wait_all contract holds
-            while time.monotonic() < deadline:
-                if not hasattr(arr, "is_ready") or arr.is_ready():
-                    break
+            while time.monotonic() < deadline and not arr.is_ready():
                 time.sleep(0.0005)
         except RuntimeError:
-            pass
+            continue  # deleted/donated array counts as complete
+
+
+def _swallow_runtime_error(fn):
+    def run():
+        try:
+            fn()
+        except RuntimeError:
+            pass  # deleted/donated array counts as complete
+
+    return run
 
 
 def isend_enqueue(

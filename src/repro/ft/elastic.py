@@ -3,10 +3,11 @@
 ``plan_remesh`` maps a failed-device set to the largest viable mesh
 (shrinking the data-parallel axes first — the model axes carry TP/EP
 state that would need weight resharding). ``reshard_plan`` computes, per
-NEW shard, the iovec segments to read from the iovec-store checkpoint
-files — because the store addresses the GLOBAL array (see
-checkpoint/iovec_store.py), restarting on a different mesh is just a
-different set of subarray queries. No shard-merging step, ever.
+NEW shard, the *coalesced* iovec runs to read from the iovec-store
+checkpoint files (adjacent gap-free segments merged, so a shard with
+dense inner dims is one pread) — because the store addresses the GLOBAL
+array (see checkpoint/iovec_store.py), restarting on a different mesh is
+just a different set of subarray queries. No shard-merging step, ever.
 """
 
 from __future__ import annotations
@@ -73,15 +74,16 @@ def reshard_plan(
     new_grid: Sequence[int],
     itemsize: int,
 ) -> Dict[Tuple[int, ...], List[dt.Iov]]:
-    """Per-new-shard iovec read lists against the global checkpoint file.
+    """Per-new-shard coalesced read-run lists against the global file.
 
-    Returns {coord: [Iov, ...]}. Total bytes across shards == array bytes
-    (verified by the property test) — the conservation law that makes the
-    restart correct by construction.
+    Returns {coord: [Iov, ...]} where each Iov is a maximal contiguous
+    run (adjacent gap-free subarray segments merged). Total bytes across
+    shards == array bytes (verified by the property test) — the
+    conservation law that makes the restart correct by construction.
     """
     plans: Dict[Tuple[int, ...], List[dt.Iov]] = {}
     for coord in np.ndindex(*new_grid):
         idx = shard_slices(global_shape, new_grid, coord)
         sub = shard_subarray(tuple(global_shape), idx, itemsize)
-        plans[tuple(coord)] = sub.iovs()
+        plans[tuple(coord)] = dt.coalesced_iovs(sub)
     return plans

@@ -11,6 +11,12 @@ irregular path stays on the host iovec engine).
 Source viewed as (nseg, stride) elements; output (nseg, seg_len):
 out[i, :] = src[i, :seg_len]. Block over segments so VMEM holds
 (block_seg × stride) elements.
+
+Blocking is two-level: the block size is chosen purely by VMEM budget
+(no search for a divisor of nseg) — the divisible prefix runs on the
+blocked grid and the remainder segments run as one tail block. The old
+single-level path shrank the block until it divided nseg, which
+degenerated to block=1 (one grid step per segment) for prime nseg.
 """
 
 from __future__ import annotations
@@ -38,17 +44,11 @@ def unpack_kernel(packed_ref, out_ref, *, seg_len):
 
 def _block_segs(nseg: int, stride: int, itemsize: int, vmem_budget: int = 4 << 20) -> int:
     per_seg = stride * itemsize
-    b = max(1, vmem_budget // max(per_seg, 1))
-    while nseg % b:
-        b -= 1
-    return b
+    return max(1, min(nseg, vmem_budget // max(per_seg, 1)))
 
 
-def dt_pack(src, seg_len: int, *, interpret: bool = True):
-    """src (nseg, stride) → (nseg, seg_len): gather strided segments."""
+def _pack_call(src, seg_len: int, bs: int, interpret: bool):
     nseg, stride = src.shape
-    assert seg_len <= stride
-    bs = _block_segs(nseg, stride, src.dtype.itemsize)
     kernel = functools.partial(pack_kernel, seg_len=seg_len)
     return pl.pallas_call(
         kernel,
@@ -60,11 +60,23 @@ def dt_pack(src, seg_len: int, *, interpret: bool = True):
     )(src)
 
 
-def dt_unpack(packed, stride: int, *, interpret: bool = True):
-    """packed (nseg, seg_len) → (nseg, stride): scatter back (gaps zeroed)."""
-    nseg, seg_len = packed.shape
+def dt_pack(src, seg_len: int, *, interpret: bool = True):
+    """src (nseg, stride) → (nseg, seg_len): gather strided segments."""
+    nseg, stride = src.shape
     assert seg_len <= stride
-    bs = _block_segs(nseg, stride, packed.dtype.itemsize)
+    bs = _block_segs(nseg, stride, src.dtype.itemsize)
+    main = (nseg // bs) * bs
+    if main == nseg:
+        return _pack_call(src, seg_len, bs, interpret)
+    parts = []
+    if main:
+        parts.append(_pack_call(src[:main], seg_len, bs, interpret))
+    parts.append(_pack_call(src[main:], seg_len, nseg - main, interpret))
+    return jnp.concatenate(parts, axis=0)
+
+
+def _unpack_call(packed, stride: int, bs: int, interpret: bool):
+    nseg, seg_len = packed.shape
     kernel = functools.partial(unpack_kernel, seg_len=seg_len)
     return pl.pallas_call(
         kernel,
@@ -74,3 +86,18 @@ def dt_unpack(packed, stride: int, *, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((nseg, stride), packed.dtype),
         interpret=interpret,
     )(packed)
+
+
+def dt_unpack(packed, stride: int, *, interpret: bool = True):
+    """packed (nseg, seg_len) → (nseg, stride): scatter back (gaps zeroed)."""
+    nseg, seg_len = packed.shape
+    assert seg_len <= stride
+    bs = _block_segs(nseg, stride, packed.dtype.itemsize)
+    main = (nseg // bs) * bs
+    if main == nseg:
+        return _unpack_call(packed, stride, bs, interpret)
+    parts = []
+    if main:
+        parts.append(_unpack_call(packed[:main], stride, bs, interpret))
+    parts.append(_unpack_call(packed[main:], stride, nseg - main, interpret))
+    return jnp.concatenate(parts, axis=0)

@@ -43,16 +43,42 @@ def wkv6(w, r, k, v, bonus, state0, chunk=64, interpret=True):
     return _wkv.wkv6_chunked(w, r, k, v, bonus, state0, chunk=chunk, interpret=interpret)
 
 
-def pack_datatype(buf_flat, dtype_descr: dt.Datatype, *, interpret: bool = True):
+def _kernel_info(dtype_descr: dt.Datatype, info, itemsize: int):
+    """Resolve + validate the exact uniform descriptor for the dense
+    kernel.  ``pack_info`` is structurally exact (a returned tuple proves
+    segment i == disp0 + i*stride), so a non-None info can be trusted;
+    layouts the (nseg, stride)-window kernel cannot express — descending
+    or overlapping strides — are rejected with a clear redirect to the
+    host engine rather than corrupting the window math."""
+    if info is None:
+        info = dt.pack_info(dtype_descr)
+    if info is None:
+        raise ValueError("irregular datatype: use core.datatype.pack/unpack (host path)")
+    nseg, seg_bytes, stride_bytes, disp = info
+    if nseg > 1 and stride_bytes < seg_bytes:
+        raise ValueError(
+            "uniform layout with descending/overlapping stride "
+            f"(stride {stride_bytes} < segment {seg_bytes}): use the host path"
+        )
+    if disp < 0:
+        raise ValueError("negative displacement (lb < 0): use the host path, which rebases")
+    if seg_bytes % itemsize or stride_bytes % itemsize or disp % itemsize:
+        raise ValueError(
+            f"descriptor bytes ({seg_bytes}/{stride_bytes}/{disp}) not divisible "
+            f"by element size {itemsize}"
+        )
+    return nseg, seg_bytes, stride_bytes, disp
+
+
+def pack_datatype(buf_flat, dtype_descr: dt.Datatype, *, info=None, interpret: bool = True):
     """Pack a uniform-strided datatype from a flat element buffer using the
     Pallas kernel; raises on irregular layouts (host iovec path covers
-    those — see core.datatype.pack)."""
-    info = dt.pack_info(dtype_descr)
-    if info is None:
-        raise ValueError("irregular datatype: use core.datatype.pack (host path)")
-    nseg, seg_bytes, stride_bytes, disp = info
+    those — see core.datatype.pack).  ``info`` accepts a precomputed
+    ``pack_info`` tuple so batch callers resolve the descriptor once."""
+    nseg, seg_bytes, stride_bytes, disp = _kernel_info(
+        dtype_descr, info, buf_flat.dtype.itemsize
+    )
     item = buf_flat.dtype.itemsize
-    assert seg_bytes % item == 0 and stride_bytes % max(item, 1) == 0 and disp % item == 0
     seg_len = seg_bytes // item
     if nseg == 1:
         return jax.lax.dynamic_slice(buf_flat, (disp // item,), (seg_len,))
@@ -64,12 +90,13 @@ def pack_datatype(buf_flat, dtype_descr: dt.Datatype, *, interpret: bool = True)
     return _dtp.dt_pack(src, seg_len, interpret=interpret).reshape(-1)
 
 
-def unpack_datatype(packed_flat, dtype_descr: dt.Datatype, out_len: int, *, interpret: bool = True):
+def unpack_datatype(
+    packed_flat, dtype_descr: dt.Datatype, out_len: int, *, info=None, interpret: bool = True
+):
     """Inverse of pack_datatype into a zeroed flat buffer of out_len elems."""
-    info = dt.pack_info(dtype_descr)
-    if info is None:
-        raise ValueError("irregular datatype: use core.datatype.unpack (host path)")
-    nseg, seg_bytes, stride_bytes, disp = info
+    nseg, seg_bytes, stride_bytes, disp = _kernel_info(
+        dtype_descr, info, packed_flat.dtype.itemsize
+    )
     item = packed_flat.dtype.itemsize
     seg_len = seg_bytes // item
     if nseg == 1:

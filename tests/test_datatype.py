@@ -3,7 +3,14 @@
 The oracle for every property is brute-force segment enumeration through
 ``numpy`` pack; the implementation must agree while keeping O(1)
 descriptors and O(depth) random access.
+
+Two layers of randomized coverage: a seeded ``random``-based suite
+(always runs — hypothesis is optional in this container) generating
+vector/hvector/indexed/struct/subarray/resized composition trees, plus
+hypothesis properties when the real library is installed.
 """
+
+import random
 
 import numpy as np
 import pytest
@@ -84,6 +91,274 @@ def test_pack_info_uniform():
     assert info == (4, 16, 40, (2 * 10 + 2) * 4)
 
 
+def test_pack_info_adversarial_affine_probes():
+    """Regression: hindexed segment offsets 0,10,25,30,40,50 pass the old
+    sampling heuristic's first/second/middle/last probes (middle = index 3
+    → 30 == 3·10, last = 50 == 5·10) yet segment 2 sits at 25 ≠ 20 — the
+    sampled pack_info returned (6, 2, 10, 0) and the dense kernel packed
+    bytes 20..21 where the layout holds 25..26. The exact structural
+    check must classify it irregular."""
+    adv = dt.hindexed([1] * 6, [0, 10, 25, 30, 40, 50], dt.predefined(2))
+    assert dt.pack_info(adv) is None
+    # and the host engine packs it correctly
+    buf = np.arange(60, dtype=np.uint8)
+    expect = np.concatenate([buf[o : o + l] for o, l in adv.iovs()])
+    np.testing.assert_array_equal(dt.pack(buf, adv), expect)
+
+
+def test_pack_info_uniform_hindexed_still_fast():
+    """Exactness must not lose genuinely affine block layouts."""
+    uh = dt.hindexed([2, 2, 2, 2], [0, 12, 24, 36], dt.predefined(4))
+    assert dt.pack_info(uh) == (4, 8, 12, 0)
+    # touching blocks (stride == segment) are uniform too
+    touch = dt.hindexed([2, 2], [0, 8], dt.predefined(4))
+    assert dt.pack_info(touch) == (2, 8, 8, 0)
+    assert dt.coalesced_iovs(touch) == [dt.Iov(0, 16)]
+
+
+# ----------------------------------------------------------------------
+# negative lower bounds: rebase instead of numpy wraparound corruption
+# ----------------------------------------------------------------------
+
+
+def test_pack_negative_lb_rebased():
+    """Regression: offsets below 0 used to wrap to the buffer tail
+    (flat[-8:-4]) and silently pack the wrong bytes. With the buffer-origin
+    rebase, buffer byte 0 corresponds to the type's lowest byte."""
+    neg = dt.hindexed([4, 4], [-8, 0], dt.predefined(1))
+    assert neg.lb == -8
+    buf = np.arange(16, dtype=np.uint8)
+    packed = dt.pack(buf, neg)
+    # offset -8 → buf[0:4], offset 0 → buf[8:12]
+    np.testing.assert_array_equal(packed, np.r_[buf[0:4], buf[8:12]])
+    np.testing.assert_array_equal(dt.pack_naive(buf, neg), packed)
+
+
+def test_unpack_negative_lb_rebased():
+    neg = dt.hindexed([4, 4], [-8, 0], dt.predefined(1))
+    packed = np.arange(8, dtype=np.uint8) + 100
+    out = np.zeros(16, np.uint8)
+    dt.unpack(packed, neg, out)
+    expect = np.zeros(16, np.uint8)
+    expect[0:4] = packed[0:4]
+    expect[8:12] = packed[4:8]
+    np.testing.assert_array_equal(out, expect)
+    out2 = np.zeros(16, np.uint8)
+    dt.unpack_naive(packed, neg, out2)
+    np.testing.assert_array_equal(out2, expect)
+
+
+def test_negative_resized_lb_roundtrip():
+    r = dt.resized(dt.contiguous(2, dt.predefined(4)), -4, 16)
+    assert r.lb == -4
+    c = dt.contiguous(3, r)  # reps tile at extent 16 from lb -4
+    buf = np.random.default_rng(1).integers(1, 255, 64, dtype=np.uint8)
+    packed = dt.pack(buf, c)
+    np.testing.assert_array_equal(packed, dt.pack_naive(buf, c))
+    out = np.zeros_like(buf)
+    dt.unpack(packed, c, out)
+    out_naive = np.zeros_like(buf)
+    dt.unpack_naive(packed, c, out_naive)
+    np.testing.assert_array_equal(out, out_naive)
+
+
+def test_pack_buffer_too_small_raises():
+    """The old engine silently produced garbage (numpy slice clamping) —
+    now an exact bounds check raises."""
+    v = dt.vector(4, 1, 4, dt.predefined(4))  # spans 52 bytes
+    with pytest.raises(ValueError, match="buffer holds"):
+        dt.pack(np.zeros(16, np.uint8), v)
+    with pytest.raises(ValueError, match="buffer holds"):
+        dt.unpack(np.zeros(v.size, np.uint8), v, np.zeros(16, np.uint8))
+
+
+# ----------------------------------------------------------------------
+# coalesced runs / iter_runs
+# ----------------------------------------------------------------------
+
+
+def _merge_ref(iovs):
+    out = []
+    for off, ln in iovs:
+        if ln == 0:
+            continue
+        if out and out[-1].offset + out[-1].length == off:
+            out[-1] = dt.Iov(out[-1].offset, out[-1].length + ln)
+        else:
+            out.append(dt.Iov(off, ln))
+    return out
+
+
+def test_coalesced_iovs_merges_across_reps():
+    dense = dt.contiguous(4, dt.predefined(4))
+    assert dt.coalesced_iovs(dense, 5) == [dt.Iov(0, 80)]
+    gappy = dt.vector(3, 1, 2, dt.predefined(4))
+    assert len(dt.coalesced_iovs(gappy)) == 3
+    # resized padding keeps reps apart
+    padded = dt.resized(dt.contiguous(2, dt.predefined(4)), 0, 12)
+    assert dt.coalesced_iovs(padded, 3) == [dt.Iov(0, 8), dt.Iov(12, 8), dt.Iov(24, 8)]
+
+
+def test_iter_runs_max_bytes_splits():
+    dense = dt.contiguous(8, dt.predefined(4))
+    runs = list(dt.iter_runs(dense, max_bytes=10, count=2))
+    assert all(r.length <= 10 for r in runs)
+    assert _merge_ref(runs) == [dt.Iov(0, 64)]
+    with pytest.raises(ValueError):
+        next(dt.iter_runs(dense, max_bytes=0))
+
+
+# ----------------------------------------------------------------------
+# randomized round-trip suite (seeded; runs without hypothesis)
+# ----------------------------------------------------------------------
+
+
+def _random_datatype(rng: random.Random, depth: int) -> dt.Datatype:
+    """Random vector/hvector/indexed/struct/subarray/resized composition
+    with lb >= 0 and non-overlapping segments (standard MPI usage; the
+    negative-lb cases have dedicated unit tests)."""
+    if depth == 0:
+        return dt.predefined(rng.choice([1, 2, 4, 8]))
+    kind = rng.choice(
+        ["contig", "vector", "hvector", "indexed", "hindexed", "struct", "subarray", "resized"]
+    )
+    if kind == "subarray":  # base must be dense: build from a primitive
+        ndims = rng.randint(1, 3)
+        sizes, subsizes, starts = [], [], []
+        for _ in range(ndims):
+            sub = rng.randint(1, 3)
+            start = rng.randint(0, 2)
+            sizes.append(start + sub + rng.randint(0, 2))
+            subsizes.append(sub)
+            starts.append(start)
+        return dt.subarray(sizes, subsizes, starts, dt.predefined(rng.choice([1, 4])))
+    inner = _random_datatype(rng, depth - 1)
+    if kind == "contig":
+        return dt.contiguous(rng.randint(1, 4), inner)
+    if kind == "vector":
+        bl = rng.randint(1, 3)
+        return dt.vector(rng.randint(1, 4), bl, bl + rng.randint(0, 3), inner)
+    if kind == "hvector":
+        bl = rng.randint(1, 3)
+        stride = bl * inner.extent + rng.randint(0, 16)
+        return dt.hvector(rng.randint(1, 4), bl, stride, inner)
+    if kind == "indexed":
+        nb = rng.randint(1, 3)
+        lens, displs, off = [], [], 0
+        for _ in range(nb):
+            ln = rng.randint(1, 2)
+            displs.append(off)
+            off += ln + rng.randint(0, 2)  # gap 0 exercises coalescing
+            lens.append(ln)
+        return dt.indexed(lens, displs, inner)
+    if kind == "hindexed":
+        nb = rng.randint(1, 3)
+        lens, displs, off = [], [], 0
+        for _ in range(nb):
+            c = rng.randint(1, 2)
+            displs.append(off)
+            # block span ≤ c*extent + lb; step past it (gap 0 included)
+            off += c * inner.extent + max(inner.lb, 0) + rng.randint(0, 8)
+            lens.append(c)
+        return dt.hindexed(lens, displs, inner)
+    if kind == "struct":
+        a = inner
+        b = _random_datatype(rng, depth - 1)
+        ca, cb = rng.randint(1, 2), rng.randint(1, 2)
+        d2 = ca * a.extent + a.extent + rng.randint(0, 8)  # safely past a's span
+        return dt.struct([ca, cb], [0, d2], [a, b])
+    # resized: lb 0, extent ≥ span (padding) or == span
+    span = inner.lb + inner.extent
+    return dt.resized(inner, 0, span + rng.choice([0, 0, 3, 8]))
+
+
+def _affine_ref(segs):
+    """Reference uniformity: exactly what pack_info promises."""
+    if not segs:
+        return None
+    L = segs[0].length
+    if any(s.length != L for s in segs):
+        return None
+    if len(segs) == 1:
+        return (1, L, 0, segs[0].offset)
+    S = segs[1].offset - segs[0].offset
+    if any(segs[i].offset != segs[0].offset + i * S for i in range(len(segs))):
+        return None
+    return (len(segs), L, S, segs[0].offset)
+
+
+@pytest.mark.parametrize("seed", range(60))
+def test_randomized_roundtrip_against_reference(seed):
+    rng = random.Random(seed)
+    d = _random_datatype(rng, rng.randint(1, 3))
+    count = rng.randint(1, 3)
+    segs = d.iovs()
+
+    # -- iov algebra vs brute force
+    assert sum(s.length for s in segs) == d.size == dt.type_iov_len(d, -1)[1]
+    assert len(segs) == d.num_segments
+    for i in (0, len(segs) // 2, len(segs) - 1):
+        assert d.segment(i) == segs[i]
+
+    # -- type_iov_len bisection == linear prefix scan, random budgets
+    for _ in range(5):
+        budget = rng.randint(0, d.size + 4)
+        n, b = dt.type_iov_len(d, budget)
+        acc = k = 0
+        for s in segs:
+            if acc + s.length > budget:
+                break
+            acc += s.length
+            k += 1
+        assert (n, b) == (k, acc)
+
+    # -- pack_info is EXACT both ways
+    assert dt.pack_info(d) == _affine_ref(segs)
+
+    # -- coalesced runs == brute-force merge over count reps
+    all_segs = [
+        dt.Iov(s.offset + r * d.extent, s.length) for r in range(count) for s in segs
+    ]
+    expect_runs = _merge_ref(all_segs)
+    assert dt.coalesced_iovs(d, count) == expect_runs
+    mb = rng.choice([3, 7, 64])
+    split = list(dt.iter_runs(d, max_bytes=mb, count=count))
+    assert all(r.length <= mb for r in split)
+    assert _merge_ref(split) == expect_runs
+
+    # -- vectorized pack == numpy brute-force gather == naive engine
+    t_hi = max(s.offset + s.length for s in segs)
+    need = (count - 1) * d.extent + t_hi
+    buf = np.frombuffer(rng.randbytes(max(need, 1)), dtype=np.uint8).copy()
+    expect = (
+        np.concatenate(
+            [buf[r * d.extent + s.offset : r * d.extent + s.offset + s.length]
+             for r in range(count) for s in segs]
+        )
+        if segs
+        else np.empty(0, np.uint8)
+    )
+    packed = dt.pack(buf, d, count)
+    np.testing.assert_array_equal(packed, expect)
+    np.testing.assert_array_equal(dt.pack_naive(buf, d, count), expect)
+
+    # -- unpack scatters every byte back to its source offset
+    ref = np.zeros_like(buf)
+    pos = 0
+    for r in range(count):
+        for s in segs:
+            ref[r * d.extent + s.offset : r * d.extent + s.offset + s.length] = packed[
+                pos : pos + s.length
+            ]
+            pos += s.length
+    out = np.zeros_like(buf)
+    dt.unpack(packed, d, out, count)
+    np.testing.assert_array_equal(out, ref)
+    out_n = np.zeros_like(buf)
+    dt.unpack_naive(packed, d, out_n, count)
+    np.testing.assert_array_equal(out_n, ref)
+
+
 # ----------------------------------------------------------------------
 # property tests (hypothesis): random nested descriptors vs numpy oracle
 # ----------------------------------------------------------------------
@@ -95,7 +370,17 @@ base_strategy = st.sampled_from([1, 2, 4, 8]).map(lambda n: dt.predefined(n))
 def datatype_strategy(draw, depth=2):
     if depth == 0:
         return draw(base_strategy)
-    kind = draw(st.sampled_from(["contig", "vector", "hvector", "indexed", "base"]))
+    kind = draw(
+        st.sampled_from(
+            ["contig", "vector", "hvector", "indexed", "struct", "subarray", "resized", "base"]
+        )
+    )
+    if kind == "subarray":  # base must be dense: draw a primitive
+        ndims = draw(st.integers(1, 2))
+        subsizes = [draw(st.integers(1, 3)) for _ in range(ndims)]
+        starts = [draw(st.integers(0, 2)) for _ in range(ndims)]
+        sizes = [s + st_ + draw(st.integers(0, 2)) for s, st_ in zip(subsizes, starts)]
+        return dt.subarray(sizes, subsizes, starts, draw(base_strategy))
     inner = draw(datatype_strategy(depth=depth - 1))
     if kind == "base":
         return inner
@@ -111,13 +396,22 @@ def datatype_strategy(draw, depth=2):
         blocklen = draw(st.integers(1, 3))
         stride = draw(st.integers(blocklen * inner.extent, blocklen * inner.extent + 16))
         return dt.hvector(count, blocklen, stride, inner)
-    # indexed: displacements strictly increasing with room for blocks
+    if kind == "struct":
+        other = draw(datatype_strategy(depth=depth - 1))
+        ca, cb = draw(st.integers(1, 2)), draw(st.integers(1, 2))
+        d2 = ca * inner.extent + inner.extent + draw(st.integers(0, 8))
+        return dt.struct([ca, cb], [0, d2], [inner, other])
+    if kind == "resized":
+        span = inner.lb + inner.extent
+        return dt.resized(inner, 0, span + draw(st.sampled_from([0, 0, 3, 8])))
+    # indexed: displacements increasing with room for blocks (gap 0 allowed
+    # so coalescing paths are exercised)
     nb = draw(st.integers(1, 3))
     lens = [draw(st.integers(1, 2)) for _ in range(nb)]
     displs, off = [], 0
     for ln in lens:
         displs.append(off)
-        off += ln + draw(st.integers(1, 2))
+        off += ln + draw(st.integers(0, 2))
     return dt.indexed(lens, displs, inner)
 
 

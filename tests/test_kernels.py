@@ -122,6 +122,8 @@ def test_wkv6_model_integration():
     (128, 16, 64, jnp.float32),
     (256, 4, 8, jnp.bfloat16),
     (32, 32, 32, jnp.float32),  # dense: seg == stride
+    (61, 8, 16, jnp.float32),   # odd nseg, fits one block
+    (300, 16, 4096, jnp.float32),  # nseg % vmem-block != 0: main+tail path
 ])
 def test_dt_pack_sweep(nseg, seg, stride, dtype):
     src = jax.random.normal(KEY, (nseg, stride), jnp.float32).astype(dtype)
@@ -144,3 +146,22 @@ def test_pack_datatype_rejects_irregular():
     irr = dt.indexed([1, 2, 1], [0, 3, 9], dt.predefined(4))
     with pytest.raises(ValueError, match="irregular"):
         ops.pack_datatype(jnp.zeros(64, jnp.float32), irr)
+
+
+def test_pack_datatype_rejects_adversarial_affine_probes():
+    """Regression: the sampled pack_info routed this hindexed layout
+    (first/middle/last segments affine, segment 2 off-grid) to the dense
+    kernel, which packed the wrong bytes. The exact check must refuse."""
+    adv = dt.hindexed([1] * 6, [0, 40, 100, 120, 160, 200], dt.predefined(8))
+    with pytest.raises(ValueError, match="irregular"):
+        ops.pack_datatype(jnp.zeros(64, jnp.float32), adv)
+
+
+def test_pack_datatype_accepts_precomputed_info():
+    v = dt.vector(8, 2, 4, dt.predefined(4))
+    buf = jnp.arange(8 * 4, dtype=jnp.float32)
+    info = dt.pack_info(v)
+    np.testing.assert_array_equal(
+        np.asarray(ops.pack_datatype(buf, v, info=info)),
+        np.asarray(ops.pack_datatype(buf, v)),
+    )

@@ -239,3 +239,81 @@ def test_lock_waits_counted_under_contention():
         stop.set()
         t.join(timeout=2)
     assert eng.stats()["lock_waits"] >= 1
+
+
+# ------------------------------------------- enqueue wait_fn deadline fallback
+
+
+class _NoProbe:
+    """Backend array without is_ready: only block_until_ready."""
+
+    def __init__(self):
+        self.blocked = 0
+
+    def block_until_ready(self):
+        self.blocked += 1
+
+
+class _Deleted:
+    def block_until_ready(self):
+        raise RuntimeError("array deleted")
+
+    def is_ready(self):
+        raise RuntimeError("array deleted")
+
+
+def test_wait_dispatched_blocks_backends_without_is_ready():
+    """Regression: with a deadline set, arrays lacking ``is_ready`` were
+    treated as already complete and the wait returned instantly, breaking
+    wait_all's completion contract on such backends."""
+    from repro.core.enqueue import _wait_dispatched
+
+    arr = _NoProbe()
+    _wait_dispatched([{"y": arr}], timeout=0.5)
+    assert arr.blocked == 1  # actually waited (block_until_ready fallback)
+    arr2 = _NoProbe()
+    _wait_dispatched([{"y": arr2}], timeout=None)
+    assert arr2.blocked == 1
+
+
+def test_wait_dispatched_deadline_bounds_blocking_backend():
+    """A hung backend without is_ready must not pin a finite-timeout wait
+    forever: the block_until_ready fallback is joined for the remaining
+    budget only."""
+    from repro.core.enqueue import _wait_dispatched
+
+    class _Hung:
+        def block_until_ready(self):
+            time.sleep(5.0)
+
+    t0 = time.monotonic()
+    _wait_dispatched([{"y": _Hung()}], timeout=0.2)
+    assert time.monotonic() - t0 < 2.0
+
+
+def test_wait_dispatched_respects_exhausted_budget():
+    from repro.core.enqueue import _wait_dispatched
+
+    arr = _NoProbe()
+    _wait_dispatched([{"y": arr}], timeout=-0.01)  # budget already gone
+    assert arr.blocked == 0
+
+
+def test_wait_dispatched_deadline_accounting_spans_batch():
+    """The deadline is a batch budget: once spent, later states are not
+    blocked on; a RuntimeError (deleted array) is confined to its array."""
+    from repro.core.enqueue import _wait_dispatched
+
+    class _NeverReady:
+        def is_ready(self):
+            return False
+
+    tail = _NoProbe()
+    t0 = time.monotonic()
+    _wait_dispatched([{"y": _NeverReady()}, {"y": tail}], timeout=0.05)
+    assert time.monotonic() - t0 < 1.0
+    assert tail.blocked == 0  # budget consumed by the first array
+    # deleted arrays complete the batch rather than aborting it
+    tail2 = _NoProbe()
+    _wait_dispatched([{"y": _Deleted()}, {"y": tail2}], timeout=None)
+    assert tail2.blocked == 1
