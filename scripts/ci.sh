@@ -10,6 +10,12 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -q -m "not slow" "$@"
 
-# datatype-bench smoke: exercises the pack-engine tiers end to end and
-# refreshes BENCH_datatype.json (machine-readable perf trajectory)
+# bench smokes: exercise the pack-engine tiers and the enqueue-window
+# depth scaling end to end (each asserts its acceptance invariant and
+# writes BENCH_*.smoke.json — never the committed full-size records)
 python -m benchmarks.datatype_iov --smoke
+python -m benchmarks.enqueue_window --smoke
+
+# docs step: every fenced Python snippet in README.md and docs/ must
+# execute cleanly (the documentation is part of the test surface)
+python scripts/run_doc_snippets.py

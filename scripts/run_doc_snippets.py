@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Execute every fenced ```python snippet in README.md and docs/**/*.md.
+
+The documentation's code is part of the test surface: each file's
+snippets run top-to-bottom in one shared namespace (so a later snippet
+may build on an earlier import), and any exception fails CI with the
+file, block index, and source line of the offending block. A fence
+tagged ``python no-run`` is displayed-only and skipped.
+
+Usage: python scripts/run_doc_snippets.py [file.md ...]
+(defaults to README.md + docs/**/*.md relative to the repo root)
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+import textwrap
+import traceback
+
+_FENCE = re.compile(r"^```(\S*)[ \t]*(.*)$")
+
+
+def extract_blocks(path: str):
+    """Yield (start_line, source) for each runnable python fence."""
+    blocks = []
+    lang = None
+    buf: list[str] = []
+    start = 0
+    skip = False
+    with open(path, encoding="utf-8") as f:
+        for i, line in enumerate(f, 1):
+            m = _FENCE.match(line.strip())
+            if m and lang is None:
+                lang, rest = m.group(1).lower(), m.group(2).lower()
+                skip = "no-run" in rest
+                buf, start = [], i + 1
+                continue
+            if line.strip() == "```" and lang is not None:
+                if lang == "python" and not skip:
+                    # dedent: fences may sit inside list items
+                    blocks.append((start, textwrap.dedent("".join(buf))))
+                lang = None
+                continue
+            if lang is not None:
+                buf.append(line)
+    if lang is not None:
+        raise SystemExit(f"{path}: unterminated ``` fence")
+    return blocks
+
+
+def run_file(path: str) -> int:
+    blocks = extract_blocks(path)
+    ns: dict = {"__name__": "__doc_snippet__", "__file__": path}
+    for k, (start, src) in enumerate(blocks):
+        try:
+            code = compile(src, f"{path}:snippet[{k}]@line{start}", "exec")
+            exec(code, ns)
+        except Exception:
+            print(f"[docs] FAIL {path} snippet {k} (starts at line {start}):", file=sys.stderr)
+            print("".join(f"    {l}" for l in src.splitlines(keepends=True)), file=sys.stderr)
+            traceback.print_exc()
+            raise SystemExit(1)
+    print(f"[docs] OK {path}: {len(blocks)} snippet(s)")
+    return len(blocks)
+
+
+def main(argv):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    os.chdir(root)
+    sys.path.insert(0, os.path.join(root, "src"))
+    files = argv or ["README.md", *sorted(glob.glob("docs/**/*.md", recursive=True))]
+    total = 0
+    for p in files:
+        total += run_file(p)
+    print(f"[docs] all snippets pass ({total} across {len(files)} files)")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,6 +1,6 @@
 """repro — "Designing and Prototyping Extensions to MPI in MPICH"
 (Zhou et al., 2024) reproduced as a multi-pod JAX training/serving
-framework. See DESIGN.md for the paper→TPU mapping and README.md for
-entry points."""
+framework. See docs/ARCHITECTURE.md for the paper→TPU mapping and
+README.md for entry points."""
 
 __version__ = "1.0.0"

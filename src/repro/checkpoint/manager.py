@@ -7,6 +7,11 @@ training loop keeps stepping while the progress thread (ext. 6) retires
 the I/O. ``wait_for_pending`` is the single ``MPI_Waitall`` that covers
 checkpoint + data-prefetch + heartbeat requests together.
 
+``max_inflight > 0`` bounds concurrent saves with an
+:class:`~repro.core.enqueue.OffloadWindow`: ``save_async`` backpressures
+(parks on the engine's stripe CV) instead of stacking unbounded d2h
+snapshots in host memory when the writer falls behind the step rate.
+
 Fault-tolerance contract: a checkpoint directory is valid iff its
 manifest exists and says ``complete`` (written atomically, last);
 ``restore_latest`` scans for the newest valid step, so a crash mid-save
@@ -25,6 +30,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import iovec_store as store
+from repro.core.enqueue import OffloadWindow
 from repro.core.progress import (
     GeneralizedRequest,
     ProgressEngine,
@@ -45,11 +51,18 @@ class CheckpointManager:
         engine: Optional[ProgressEngine] = None,
         stream: MPIXStream = STREAM_NULL,
         keep: int = 3,
+        max_inflight: int = 0,
     ):
         self.base_dir = base_dir
         self.engine = engine or default_engine()
         self.stream = stream
         self.keep = keep
+        # 0 = unbounded (legacy); >0 = window-backpressured saves
+        self._window = (
+            OffloadWindow(stream, depth=max_inflight, engine=self.engine, name="ckpt")
+            if max_inflight > 0
+            else None
+        )
         self._pending: List[GeneralizedRequest] = []
         os.makedirs(base_dir, exist_ok=True)
 
@@ -70,7 +83,20 @@ class CheckpointManager:
 
     # -- save -------------------------------------------------------------
     def save_async(self, step: int, tree, extra: Optional[dict] = None) -> GeneralizedRequest:
-        """Snapshot to host, then write asynchronously."""
+        """Snapshot to host, then write asynchronously. With
+        ``max_inflight`` set, blocks here — before taking the d2h
+        snapshot — until a save slot frees."""
+        if self._window is None:
+            req = self._dispatch_save(step, tree, extra)
+        else:
+            with self._window.issue() as submit:
+                req = self._dispatch_save(step, tree, extra)
+                submit(req)
+            self._window.reap()  # keep the completed-slot deque bounded
+        self._pending.append(req)
+        return req
+
+    def _dispatch_save(self, step: int, tree, extra: Optional[dict]) -> GeneralizedRequest:
         host_tree = jax.tree.map(lambda a: np.asarray(a), tree)  # d2h barrier
         tmp_dir = self._dir_for(step) + ".tmp"
         final_dir = self._dir_for(step)
@@ -96,7 +122,7 @@ class CheckpointManager:
         def query(st):
             return st["error"]
 
-        req = self.engine.grequest_start(
+        return self.engine.grequest_start(
             poll_fn=poll,
             wait_fn=join_thread_states,
             query_fn=query,
@@ -104,8 +130,6 @@ class CheckpointManager:
             stream=self.stream,
             name=f"ckpt-{step}",
         )
-        self._pending.append(req)
-        return req
 
     def save_sync(self, step: int, tree, extra: Optional[dict] = None) -> None:
         req = self.save_async(step, tree, extra)

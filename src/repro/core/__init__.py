@@ -40,6 +40,17 @@ from repro.core.datatype import (
     unpack_naive,
     vector,
 )
+from repro.core.enqueue import (
+    EnqueuedRequest,
+    OffloadWindow,
+    WindowSlot,
+    dispatch_enqueue,
+    isend_enqueue,
+    pack_send,
+    send_enqueue,
+    shift_enqueue,
+    wait_enqueue,
+)
 from repro.core.progress import (
     GeneralizedRequest,
     ProgressEngine,

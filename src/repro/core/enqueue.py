@@ -10,13 +10,33 @@ stream:
 * ``send_enqueue``/``recv_enqueue`` return immediately with a token
   (host-async, like the paper's CUDA example that never calls
   ``cudaStreamSynchronize``);
-* ``wait_enqueued`` materializes the dependency (the analogue of the
+* ``wait_enqueue`` materializes the dependency (the analogue of the
   stream completing);
 * the non-blocking pair (``isend_enqueue``) returns an
   :class:`EnqueuedRequest` whose completion is a *host-side* generalized
   request — the paper's three-contexts point (offload stream / host
   start-complete / actual transfer) maps to (XLA dataflow / host dispatch
   / ICI transfer).
+
+The host side is a **depth-N in-flight window transport**, not a
+one-token serial model: a per-stream :class:`OffloadWindow` admits up to
+``depth`` outstanding enqueued transfers and *backpressures* the issue
+path when full by parking on the progress engine's per-stripe condition
+variables (never busy-spinning — completion wakes the parked issuer).
+Completion is tracked in **completion order**, not issue order: a late
+arrival never blocks an earlier completion from being reaped, so the
+1F1B pipeline schedule keeps ``depth`` microbatch boundary sends in
+flight and reaps whichever lands first. ``OffloadWindow.stats()``
+(admitted / reaped / backpressure parks / max depth seen) sits alongside
+the engine counters.
+
+Send buffers may be **datatype-described**: ``send_enqueue`` /
+``isend_enqueue`` accept ``datatype=`` (an MPI derived datatype from
+:mod:`repro.core.datatype`) and pack *on stream* via the
+``kernels/ops.pack_datatype`` device kernel when the exact ``pack_info``
+proof says the layout is uniform, falling back to the vectorized host
+engine for irregular layouts — pipeline and halo sends describe layouts
+instead of materializing contiguous staging copies.
 
 This module is the transport of pipeline parallelism
 (:mod:`repro.parallel.pipeline`): microbatch activations are "enqueued"
@@ -27,17 +47,31 @@ motivation for getting the host out of the loop.
 
 from __future__ import annotations
 
+import itertools
 import threading
 import time
+from collections import deque
+from contextlib import contextmanager
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from functools import lru_cache
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as _P
 
 from repro.core import collectives
+from repro.core import datatype as dtt
 from repro.core.progress import GeneralizedRequest, ProgressEngine, default_engine
-from repro.core.streams import MPIXStream, StreamComm, new_token, serialize_on
+from repro.core.streams import (
+    MPIXStream,
+    STREAM_NULL,
+    StreamComm,
+    new_token,
+    serialize_on,
+)
 
 __all__ = [
     "send_enqueue",
@@ -47,9 +81,17 @@ __all__ = [
     "wait_enqueue",
     "EnqueuedRequest",
     "shift_enqueue",
+    "dispatch_enqueue",
+    "pack_send",
+    "OffloadWindow",
+    "WindowSlot",
 ]
 
 Token = jax.Array
+
+# Park slice while the window itself must drive progress (no covering
+# progress thread): matches _wait_dispatched's readiness-poll granularity.
+_SELF_PROGRESS_PARK_S = 0.0005
 
 
 def _require_offload(comm: StreamComm) -> None:
@@ -58,6 +100,58 @@ def _require_offload(comm: StreamComm) -> None:
             "enqueue ops need an offload stream (create with "
             "info={'type': 'tpu_stream'}) or STREAM_NULL for implicit mode"
         )
+
+
+# ----------------------------------------------------------------------
+# Datatype-described send buffers
+# ----------------------------------------------------------------------
+
+
+def pack_send(x, datatype: dtt.Datatype, count: int = 1, *, interpret: bool = True):
+    """Materialize the packed payload of a ``(buffer, Datatype)`` send.
+
+    ``x`` is the flat(tenable) element buffer the datatype addresses.
+    When ``pack_info`` *proves* the layout uniform and the dense kernel
+    can express it (non-negative displacement, non-overlapping stride,
+    element-aligned bytes), the pack runs **on stream** through
+    :func:`repro.kernels.ops.pack_datatype` — device work ordered by the
+    send's token like any other enqueued op. Otherwise the vectorized
+    host engine (:func:`repro.core.datatype.pack`) gathers the bytes; the
+    two paths are byte-identical for any layout both accept.
+
+    Traced buffers (inside ``shard_map``/``jit``) can only take the
+    device path; an irregular layout there raises with a pointer at the
+    host path rather than silently breaking tracing.
+    """
+    from repro.kernels import ops  # deferred: kernels import jax pallas
+
+    if count != 1 and datatype.extent < 0:
+        raise ValueError("pack_send: count>1 with negative extent is ambiguous")
+    flat = x.reshape(-1)
+    info = dtt.pack_info(datatype)
+    device_err: Optional[Exception] = None
+    if info is not None and count == 1:
+        try:
+            return ops.pack_datatype(flat, datatype, info=info, interpret=interpret)
+        except ValueError as e:  # kernel-inexpressible uniform layout
+            device_err = e
+    if isinstance(flat, jax.core.Tracer):
+        raise ValueError(
+            "pack_send: irregular/kernel-inexpressible datatype on a traced "
+            "buffer — the host engine cannot run under tracing. Pre-pack on "
+            "the host (core.datatype.pack) or use a uniform layout."
+        ) from device_err
+    host = np.asarray(flat)
+    packed = dtt.pack(host, datatype, count)  # uint8, count*size bytes
+    item = host.dtype.itemsize
+    if packed.size % item == 0:
+        return jnp.asarray(packed.view(host.dtype))
+    return jnp.asarray(packed)
+
+
+# ----------------------------------------------------------------------
+# Stream-enqueued transfers (SPMD ppermute with token ordering)
+# ----------------------------------------------------------------------
 
 
 def sendrecv_enqueue(
@@ -77,12 +171,123 @@ def sendrecv_enqueue(
     return y, token
 
 
-def send_enqueue(x, comm: StreamComm, dest_offset: int, token: Optional[Token] = None):
+def send_enqueue(
+    x,
+    comm: StreamComm,
+    dest_offset: int,
+    token: Optional[Token] = None,
+    *,
+    datatype: Optional[dtt.Datatype] = None,
+    count: int = 1,
+    window: Optional["OffloadWindow"] = None,
+):
     """``MPIX_Send_enqueue`` to ``rank + dest_offset`` on a ring (SPMD: the
-    matching recv is implied on the destination)."""
+    matching recv is implied on the destination).
+
+    ``datatype=`` describes a non-contiguous send buffer: ``x`` is the
+    flat element buffer and the payload is packed on stream (device
+    kernel for proven-uniform layouts, host engine otherwise — see
+    :func:`pack_send`) instead of the caller materializing a staging copy.
+
+    ``window=`` routes the send through an :class:`OffloadWindow`: the
+    call *backpressures* (parks on the engine's stripe CV) while the
+    window holds ``depth`` incomplete transfers, then dispatches and
+    registers the new one. Windowed sends are **host-side** (the window
+    is host state): the call builds the SPMD ring-send program itself, so
+    ``x`` must be the concrete *global* buffer with leading dim = ring
+    size (per-rank payloads stacked), not a traced per-shard value, and
+    tokens do not apply — passing one raises, and the returned token is
+    None (ordering comes from dataflow + the window). Without a window
+    the call is the per-shard fire-and-forget form usable inside
+    ``shard_map``, exactly as before."""
+    if window is None:
+        if datatype is not None:
+            x = pack_send(x, datatype, count)
+        return sendrecv_enqueue(x, comm, _ring_perm(comm, dest_offset), token)
+    if token is not None:
+        raise ValueError(
+            "windowed sends build their own program; an input token cannot "
+            "be threaded through — order host-issued sends via dataflow "
+            "(feed y into the next send) or drop the window"
+        )
+    y, _ = _windowed_isend(x, comm, dest_offset, datatype, count, window)
+    return y, None
+
+
+def _windowed_isend(x, comm, dest_offset, datatype, count, window):
+    """Host-side windowed ring send shared by send_enqueue/isend_enqueue."""
+    if isinstance(x, jax.core.Tracer):
+        raise ValueError(
+            "windowed enqueue sends are host-side (window backpressure "
+            "cannot run under tracing); call outside shard_map/jit with "
+            "the global buffer, or drop the window inside traced code"
+        )
+    _require_offload(comm)
+    if window.stream.sid != comm.stream.sid:
+        raise ValueError(
+            f"window is bound to stream {window.stream.name!r} but the comm "
+            f"sends on {comm.stream.name!r}: the window parks on and "
+            "progresses its own stream's channel, so a mismatch would "
+            "deadlock backpressure — build the window on the comm's stream"
+        )
     n = comm.mesh.shape[comm.axes[0]]
+    x = jnp.asarray(x)
+    if x.shape[0] != n:
+        raise ValueError(
+            f"windowed send: leading dim {x.shape[0]} != ring size {n} "
+            "(stack each rank's payload)"
+        )
+    if datatype is not None:
+        x = _pack_stacked(x, datatype, count, n)
+    with window.issue() as submit:
+        y = _mapped_ring_send(comm.mesh, comm.axes, dest_offset)(x)
+        req = dispatch_enqueue(y, stream=comm.stream, engine=window.engine, name="isend_enqueue")
+        submit(req, value=y)
+    return y, req
+
+
+def _pack_stacked(x, datatype: dtt.Datatype, count: int, n: int):
+    """Pack each of the ``n`` stacked per-rank payloads. Multi-rank sends
+    pack all rows in ONE vectorized host call when the layout fits inside
+    a row (the type resized to the row stride, replicated ``n`` times by
+    extent shift) — per-rank kernel launches on the issue hot path would
+    scale O(n) per send. The single-rank case keeps the on-stream device
+    path of :func:`pack_send`; both produce identical bytes."""
+    row_bytes = 0 if x.ndim < 2 else int(x.dtype.itemsize * np.prod(x.shape[1:]))
+    if n > 1 and count == 1 and datatype.lb >= 0 and datatype.ub <= row_bytes:
+        host = np.asarray(x)
+        rowed = dtt.resized(datatype, datatype.lb, row_bytes)
+        packed = dtt.pack(host, rowed, count=n)
+        item = host.dtype.itemsize
+        if datatype.size % item == 0:
+            return jnp.asarray(packed.view(host.dtype).reshape(n, -1))
+        return jnp.asarray(packed.reshape(n, -1))
+    return jnp.stack([pack_send(x[i], datatype, count) for i in range(n)])
+
+
+@lru_cache(maxsize=None)
+def _mapped_ring_send(mesh, axes: Tuple[str, ...], dest_offset: int):
+    """Jitted SPMD ring-send program for host-issued (windowed) enqueues:
+    one token-sealed ppermute over ``axes[0]``. Cached per (mesh, axes,
+    offset) so steady-state windowed sends hit the jit cache."""
+    from repro.core.threadcomm import shard_map  # deferred: import order
+
+    axis = axes[0]
+    n = mesh.shape[axis]
     perm = [(i, (i + dest_offset) % n) for i in range(n)]
-    return sendrecv_enqueue(x, comm, perm, token)
+
+    def per_shard(xs):
+        token, (x_s,) = serialize_on(new_token(), xs[0])
+        return lax.ppermute(x_s, axis, perm)[None]
+
+    return jax.jit(
+        shard_map(per_shard, mesh=mesh, in_specs=_P(axis), out_specs=_P(axis), check_vma=False)
+    )
+
+
+def _ring_perm(comm: StreamComm, dest_offset: int) -> List[Tuple[int, int]]:
+    n = comm.mesh.shape[comm.axes[0]]
+    return [(i, (i + dest_offset) % n) for i in range(n)]
 
 
 def recv_enqueue(x_buffer, comm: StreamComm, src_offset: int, token: Optional[Token] = None):
@@ -121,7 +326,7 @@ class EnqueuedRequest:
     stream's CV instead of spinning on ``is_ready``."""
 
     grequest: GeneralizedRequest
-    token: Token
+    token: Optional[Token] = None
     engine: Optional[ProgressEngine] = None
 
     @property
@@ -185,17 +390,18 @@ def _swallow_runtime_error(fn):
     return run
 
 
-def isend_enqueue(
-    x,
-    comm: StreamComm,
-    dest_offset: int,
-    token: Optional[Token] = None,
+def dispatch_enqueue(
+    y,
+    stream: MPIXStream = STREAM_NULL,
     engine: Optional[ProgressEngine] = None,
-) -> Tuple[jax.Array, EnqueuedRequest]:
-    """Non-blocking enqueue: returns (result, request). The request
-    completes when the dispatched device work is done (poll_fn queries the
-    device future, like cudaEventQuery in the paper's grequest example)."""
-    y, tok = send_enqueue(x, comm, dest_offset, token)
+    token: Optional[Token] = None,
+    name: str = "enqueue",
+) -> EnqueuedRequest:
+    """Register already-dispatched device work ``y`` as an enqueued
+    transfer: a generalized request whose ``poll_fn`` queries the device
+    future (the ``cudaEventQuery`` analogue) and whose batched ``wait_fn``
+    blocks on the per-stream group. The building block under
+    :func:`isend_enqueue` and :class:`OffloadWindow`."""
 
     def _poll(state) -> bool:
         arr = state["y"]
@@ -211,12 +417,318 @@ def isend_enqueue(
         poll_fn=_poll,
         wait_fn=_wait_dispatched,
         extra_state={"y": y},
-        stream=comm.stream,
-        name="isend_enqueue",
+        stream=stream,
+        name=name,
     )
-    return y, EnqueuedRequest(req, tok, eng)
+    return EnqueuedRequest(req, token, eng)
+
+
+def isend_enqueue(
+    x,
+    comm: StreamComm,
+    dest_offset: int,
+    token: Optional[Token] = None,
+    engine: Optional[ProgressEngine] = None,
+    *,
+    datatype: Optional[dtt.Datatype] = None,
+    count: int = 1,
+    window: Optional["OffloadWindow"] = None,
+) -> Tuple[jax.Array, EnqueuedRequest]:
+    """Non-blocking enqueue: returns (result, request). The request
+    completes when the dispatched device work is done (poll_fn queries the
+    device future, like cudaEventQuery in the paper's grequest example).
+    ``datatype=``/``window=`` behave as in :func:`send_enqueue` — with a
+    window, the call is host-side (global stacked buffer, no input token,
+    see :func:`send_enqueue`), backpressures while ``depth`` transfers
+    are in flight, and the request is tracked in the window."""
+    if window is not None:
+        if token is not None:
+            raise ValueError(
+                "windowed sends build their own program; an input token "
+                "cannot be threaded through — order host-issued sends via "
+                "dataflow or drop the window"
+            )
+        if engine is not None and engine is not window.engine:
+            raise ValueError(
+                "isend_enqueue: the window carries its own engine; a "
+                "different engine= alongside it would be silently ignored"
+            )
+        return _windowed_isend(x, comm, dest_offset, datatype, count, window)
+    if datatype is not None:
+        x = pack_send(x, datatype, count)
+    y, tok = sendrecv_enqueue(x, comm, _ring_perm(comm, dest_offset), token)
+    req = dispatch_enqueue(y, stream=comm.stream, engine=engine or default_engine(), token=tok, name="isend_enqueue")
+    return y, req
 
 
 def wait_enqueue(req: EnqueuedRequest, engine: Optional[ProgressEngine] = None) -> None:
     """``MPIX_Wait_enqueue``."""
     (engine or req.engine or default_engine()).wait(req.grequest)
+
+
+# ----------------------------------------------------------------------
+# Depth-N in-flight windows
+# ----------------------------------------------------------------------
+
+
+@dataclass
+class WindowSlot:
+    """One admitted transfer. ``completion_index`` is assigned the moment
+    the request completes — the window's global completion order, which is
+    NOT issue order: slot 3 may carry completion_index 0."""
+
+    request: GeneralizedRequest
+    issue_index: int
+    value: object = None
+    token: Optional[Token] = None
+    completion_index: Optional[int] = None
+
+    @property
+    def done(self) -> bool:
+        return self.request.done
+
+
+class OffloadWindow:
+    """Bounded in-flight window over one stream's enqueued transfers.
+
+    Admits up to ``depth`` *incomplete* transfers. ``reserve`` (the
+    backpressure point, called by ``send_enqueue``/``isend_enqueue`` with
+    ``window=``) blocks while the window is full by parking on the
+    progress engine's per-stripe condition variable for the stream's
+    channel — request completion notifies that stripe, so a parked issuer
+    wakes immediately; there is no busy-spin. If no progress thread
+    covers the channel, the window drives ``engine.progress(stream)``
+    itself between short parks (the engine's ``wait_all`` discipline).
+
+    Completions are tracked in **completion order**: whichever transfer
+    lands first is reapable first, regardless of issue order — a late
+    arrival never holds up earlier ones. ``reap`` drains completed slots;
+    ``wait_all`` drains the whole window (one batched ``MPI_Waitall``
+    through the engine).
+
+    The window is transport-agnostic: any
+    :class:`~repro.core.progress.GeneralizedRequest` can be admitted, so
+    checkpoint saves and reshard reads reuse the same backpressure (see
+    ``checkpoint.manager`` / ``ft.elastic``).
+    """
+
+    def __init__(
+        self,
+        stream: Union[MPIXStream, StreamComm] = STREAM_NULL,
+        depth: int = 2,
+        engine: Optional[ProgressEngine] = None,
+        name: str = "window",
+    ):
+        if isinstance(stream, StreamComm):
+            stream = stream.stream
+        if depth < 1:
+            raise ValueError(f"OffloadWindow depth must be >= 1, got {depth}")
+        self.stream = stream
+        self.depth = depth
+        self.engine = engine or default_engine()
+        self.name = name
+        self._lock = threading.Lock()
+        self._issue_seq = itertools.count()
+        self._completion_seq = itertools.count()
+        self._in_flight: Dict[int, WindowSlot] = {}
+        self._reserved = 0  # slots claimed by reserve() awaiting register()
+        self._completed: deque = deque()  # completion order
+        self._admitted = 0
+        self._reaped = 0
+        self._parks = 0
+        self._max_depth_seen = 0
+
+    # -- admission (the backpressure point) -----------------------------
+    def _free_slots(self) -> int:
+        with self._lock:
+            return self.depth - len(self._in_flight) - self._reserved
+
+    def reserve(self, timeout: Optional[float] = None) -> bool:
+        """Claim one window slot, blocking while ``depth`` transfers are
+        incomplete. Parks on the stream channel's stripe CV (woken by any
+        completion); never busy-spins. Returns False only on timeout. Call
+        before dispatching, then :meth:`register` the request — or use
+        :meth:`admit` when the request already exists."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        ch = self.stream.channel
+        while True:
+            with self._lock:
+                if self.depth - len(self._in_flight) - self._reserved > 0:
+                    self._reserved += 1
+                    return True
+            if deadline is not None and time.monotonic() >= deadline:
+                return False
+            remaining = None if deadline is None else max(0.0, deadline - time.monotonic())
+            with self._lock:
+                self._parks += 1
+            if self.engine.has_poller(ch):
+                # a progress thread retires our requests: park until a
+                # completion wakes us (bounded slices so a poller that
+                # stops mid-park can't strand us — the loop re-checks)
+                slice_s = 0.05
+                if remaining is not None:
+                    slice_s = min(slice_s, remaining)
+                self.engine.park_on_channel(ch, lambda: self._free_slots() > 0, slice_s)
+            else:
+                # nobody else polls this stream: drive progress ourselves,
+                # parking briefly between sweeps (readiness granularity)
+                self.engine.progress(self.stream)
+                if self._free_slots() > 0:
+                    continue
+                slice_s = _SELF_PROGRESS_PARK_S
+                if remaining is not None:
+                    slice_s = min(slice_s, remaining)
+                self.engine.park_on_channel(ch, lambda: self._free_slots() > 0, slice_s)
+
+    def unreserve(self) -> None:
+        """Release a slot claimed by :meth:`reserve` without registering a
+        request — the cleanup path when dispatch fails between the two
+        (otherwise the slot would leak and eventually deadlock reserve).
+        Wakes parked reservers."""
+        with self._lock:
+            if self._reserved <= 0:
+                raise RuntimeError("unreserve() without a matching reserve()")
+            self._reserved -= 1
+        self.engine.notify_channel(self.stream.channel)
+
+    def register(
+        self,
+        request: Union[GeneralizedRequest, EnqueuedRequest],
+        value: object = None,
+        token: Optional[Token] = None,
+    ) -> WindowSlot:
+        """Attach a dispatched request to a slot claimed by
+        :meth:`reserve`. Completion (from any thread) assigns the slot its
+        completion index, frees the window slot, and wakes parked
+        reservers via the stripe CV."""
+        if isinstance(request, EnqueuedRequest):
+            if token is None:
+                token = request.token
+            request = request.grequest
+        with self._lock:
+            if self._reserved <= 0:
+                raise RuntimeError("register() without a matching reserve()")
+            self._reserved -= 1
+            slot = WindowSlot(
+                request=request, issue_index=next(self._issue_seq), value=value, token=token
+            )
+            self._in_flight[slot.issue_index] = slot
+            self._admitted += 1
+            depth_now = len(self._in_flight) + self._reserved
+            if depth_now > self._max_depth_seen:
+                self._max_depth_seen = depth_now
+        request.add_done_callback(lambda _r, _s=slot: self._on_done(_s))
+        return slot
+
+    def admit(
+        self,
+        request: Union[GeneralizedRequest, EnqueuedRequest],
+        value: object = None,
+        token: Optional[Token] = None,
+        timeout: Optional[float] = None,
+    ) -> Optional[WindowSlot]:
+        """``reserve`` + ``register`` for an already-dispatched request.
+        Returns None on reserve timeout."""
+        if not self.reserve(timeout):
+            return None
+        return self.register(request, value=value, token=token)
+
+    @contextmanager
+    def issue(self, timeout: Optional[float] = None):
+        """The safe issue bracket: reserve a slot, yield a
+        ``submit(request, value=None, token=None)`` callable for the
+        dispatched work, and give the slot back if the body exits —
+        normally or exceptionally — without submitting. Use this instead
+        of hand-rolling reserve/register so a failed dispatch can never
+        leak the slot (a leaked slot eventually deadlocks ``reserve``).
+
+            with window.issue() as submit:
+                y = dispatch_device_work()
+                submit(dispatch_enqueue(y, ...), value=y)
+        """
+        if not self.reserve(timeout):
+            raise TimeoutError(f"OffloadWindow({self.name}): reserve timed out")
+        submitted: List[WindowSlot] = []
+
+        def submit(request, value=None, token=None) -> WindowSlot:
+            slot = self.register(request, value=value, token=token)
+            submitted.append(slot)
+            return slot
+
+        try:
+            yield submit
+        finally:
+            if not submitted:
+                self.unreserve()
+
+    def _on_done(self, slot: WindowSlot) -> None:
+        with self._lock:
+            if slot.completion_index is not None:
+                return
+            slot.completion_index = next(self._completion_seq)
+            self._in_flight.pop(slot.issue_index, None)
+            self._completed.append(slot)
+        # free slot → wake reservers parked on the stream's stripe
+        self.engine.notify_channel(self.stream.channel)
+
+    # -- the reap side ---------------------------------------------------
+    def reap(self) -> List[WindowSlot]:
+        """Drain every completed slot, in **completion order** (the order
+        transfers actually landed, not the order they were issued)."""
+        with self._lock:
+            out = list(self._completed)
+            self._completed.clear()
+            self._reaped += len(out)
+        return out
+
+    def in_flight(self) -> int:
+        with self._lock:
+            return len(self._in_flight)
+
+    def wait_all(self, timeout: Optional[float] = None) -> bool:
+        """Drain the window: one batched ``MPI_Waitall`` over every
+        incomplete transfer (engine-side wait_fn batching + parking).
+        Returns only after each of those transfers' completions has been
+        *recorded* (completion index assigned, slot reapable) — a request
+        flips done before its callbacks run, so waiting on doneness alone
+        could let a reap race the recording thread."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            slots = list(self._in_flight.values())
+        if not self.engine.wait_all([s.request for s in slots], timeout):
+            return False
+        remaining = None if deadline is None else max(0.0, deadline - time.monotonic())
+        return self.engine.park_on_channel(
+            self.stream.channel,
+            lambda: all(s.completion_index is not None for s in slots),
+            remaining,
+        )
+
+    def drain(self, timeout: Optional[float] = None) -> List[WindowSlot]:
+        """``wait_all`` then ``reap``: every remaining completion, in
+        completion order. Raises on timeout (partial completions stay
+        reapable)."""
+        if not self.wait_all(timeout):
+            raise TimeoutError(f"OffloadWindow({self.name}): drain timed out")
+        return self.reap()
+
+    # -- instrumentation -------------------------------------------------
+    def stats(self, engine: bool = True) -> dict:
+        """Window counters, with the engine's beside them (``engine=False``
+        omits the engine block): ``admitted``/``reaped`` totals,
+        ``backpressure_parks`` (reserve() park events), ``max_depth_seen``
+        (high-water in-flight count), current ``in_flight`` and
+        ``completed_unreaped``."""
+        with self._lock:
+            out = {
+                "depth": self.depth,
+                "admitted": self._admitted,
+                "reaped": self._reaped,
+                "backpressure_parks": self._parks,
+                "max_depth_seen": self._max_depth_seen,
+                "in_flight": len(self._in_flight),
+                "completed_unreaped": len(self._completed),
+            }
+        if engine:
+            out["engine"] = self.engine.stats()
+        return out

@@ -28,7 +28,10 @@ Locking is a sharded VCI runtime, the MPICH 4.x story:
   complete) never touches a registry lock;
 * each stripe carries a **condition variable**: ``wait``/``wait_all`` and
   progress threads *park* on it instead of busy-spinning, and are woken
-  by ``grequest_start`` (new work) and request completion;
+  by ``grequest_start`` (new work) and request completion; the same CVs
+  serve issue-path backpressure (:meth:`ProgressEngine.park_on_channel` /
+  :meth:`ProgressEngine.notify_channel`) — a full
+  :class:`~repro.core.enqueue.OffloadWindow` parks its issuer here;
 * a **batched completion path**: requests sharing a ``wait_fn`` are waited
   as whole per-stream batches in one call (``MPI_Waitall`` semantics);
 * engine-level **counters** (polls, completions, lock waits, park/wake
@@ -334,6 +337,51 @@ class ProgressEngine:
     def _notify_stripe(self, stripe: _Stripe) -> None:
         with stripe.held():
             stripe.cv.notify_all()
+
+    def notify_channel(self, channel: int) -> None:
+        """Wake everything parked on ``channel``'s stripe CV (progress
+        threads, :meth:`park_on_channel` waiters). External completion
+        paths — e.g. an :class:`~repro.core.enqueue.OffloadWindow` freeing
+        a slot — call this so backpressured issuers resume immediately
+        instead of riding out the park-recheck timeout."""
+        self._notify_stripe(self._stripe(channel))
+
+    def park_on_channel(
+        self,
+        channel: int,
+        predicate: Callable[[], bool],
+        timeout: Optional[float] = None,
+    ) -> bool:
+        """Park the calling thread on ``channel``'s stripe CV until
+        ``predicate()`` holds (checked with the stripe lock held, re-checked
+        on every wake and at least every ``_PARK_RECHECK_S``). Returns the
+        final predicate value; ``False`` only on timeout.
+
+        This is the engine-side half of issue-path backpressure: a full
+        enqueue window parks here instead of busy-spinning, and is woken by
+        request completion (``grequest_start``'s done callback notifies the
+        stripe) or :meth:`notify_channel`. ``predicate`` must not touch this
+        stripe's lock-ordered resources beyond its own state."""
+        stripe = self._stripe(channel)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            with stripe.held():
+                if predicate():
+                    return True
+                if deadline is not None and time.monotonic() >= deadline:
+                    return False
+                slice_s = _PARK_RECHECK_S
+                if deadline is not None:
+                    slice_s = min(slice_s, max(0.0, deadline - time.monotonic()))
+                stripe.parks += 1
+                stripe.cv.wait(timeout=slice_s)
+                stripe.wakes += 1
+
+    def has_poller(self, channel: int) -> bool:
+        """True iff a live, spun-up progress thread covers ``channel``
+        (directly or via a NULL-stream thread). Waiters use this to choose
+        between parking (someone else polls) and actively progressing."""
+        return self._has_poller(channel)
 
     @staticmethod
     def _retire_locked(stripe: _Stripe, r: GeneralizedRequest) -> bool:

@@ -3,7 +3,7 @@
 An :class:`MPIXStream` is an *explicit execution context*: a named, serial
 communication context that the runtime maps onto a dedicated channel
 ("VCI" in MPICH terms). On TPU there are no host-side network endpoints —
-the adaptation (see DESIGN.md §2) is:
+the adaptation (see docs/ARCHITECTURE.md §3) is:
 
 * each stream owns a **channel id** drawn from a finite pool (mirroring
   MPICH's finite network endpoints: creation *fails* when the pool is

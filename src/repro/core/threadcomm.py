@@ -5,7 +5,7 @@ processes × M threads, so code written against MPI ranks runs unchanged
 over the whole hierarchy (MPI×Threads), and a single collective replaces
 the "sandwich" (per-level nested) pattern.
 
-TPU adaptation (DESIGN.md §2): the hierarchy levels are MESH AXES —
+TPU adaptation (docs/ARCHITECTURE.md §5): the hierarchy levels are MESH AXES —
 ``pod`` ("process") × intra-pod ranks ("threads"). A :class:`ThreadComm`
 *flattens* an ordered axis tuple into one communicator:
 

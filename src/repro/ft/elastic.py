@@ -8,19 +8,30 @@ checkpoint files (adjacent gap-free segments merged, so a shard with
 dense inner dims is one pread) — because the store addresses the GLOBAL
 array (see checkpoint/iovec_store.py), restarting on a different mesh is
 just a different set of subarray queries. No shard-merging step, ever.
+
+``execute_reshard`` turns a plan into bytes: every run becomes an
+enqueued read request streamed through a depth-bounded
+:class:`~repro.core.enqueue.OffloadWindow` — at most ``depth`` reads in
+flight, the issuer backpressured on the engine's stripe CV, completions
+reaped in completion order. The restart shifts its shards through the
+same windowed transport as the pipeline's microbatch sends.
 """
 
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.checkpoint.iovec_store import shard_subarray
 from repro.core import datatype as dt
+from repro.core.enqueue import OffloadWindow
+from repro.core.progress import ProgressEngine, default_engine, join_thread_states
+from repro.core.streams import MPIXStream, STREAM_NULL
 
-__all__ = ["MeshPlan", "plan_remesh", "reshard_plan", "shard_slices"]
+__all__ = ["MeshPlan", "plan_remesh", "reshard_plan", "execute_reshard", "shard_slices"]
 
 
 @dataclass(frozen=True)
@@ -87,3 +98,56 @@ def reshard_plan(
         sub = shard_subarray(tuple(global_shape), idx, itemsize)
         plans[tuple(coord)] = dt.coalesced_iovs(sub)
     return plans
+
+
+def execute_reshard(
+    plans: Dict[Tuple[int, ...], List[dt.Iov]],
+    read_run: Callable[[dt.Iov], bytes],
+    depth: int = 4,
+    engine: ProgressEngine = None,
+    stream: MPIXStream = STREAM_NULL,
+) -> Tuple[Dict[Tuple[int, ...], bytes], dict]:
+    """Stream a :func:`reshard_plan` through a depth-bounded window.
+
+    ``read_run(iov) -> bytes`` performs one read against the global file
+    (a pread in production; any callable in tests). Each run is issued as
+    a thread-backed generalized request and admitted to an
+    :class:`~repro.core.enqueue.OffloadWindow` — the issue loop
+    backpressures at ``depth`` outstanding reads instead of spawning one
+    thread per run, and the final drain is one batched waitall. Returns
+    ``({coord: shard_bytes}, window_stats)``; per-shard bytes concatenate
+    the runs in plan order regardless of the order reads completed.
+    """
+    eng = engine or default_engine()
+    win = OffloadWindow(stream, depth=depth, engine=eng, name="reshard")
+    parts: Dict[Tuple[int, ...], List[bytes]] = {
+        coord: [b""] * len(runs) for coord, runs in plans.items()
+    }
+    errors: List[BaseException] = []
+    for coord, runs in plans.items():
+        for j, run in enumerate(runs):
+            state = {"thread": None}
+
+            def work(coord=coord, j=j, run=run):
+                try:
+                    parts[coord][j] = bytes(read_run(run))
+                except BaseException as e:  # surfaced after the drain
+                    errors.append(e)
+
+            with win.issue() as submit:
+                t = threading.Thread(target=work, daemon=True, name=f"reshard-{coord}-{j}")
+                state["thread"] = t
+                t.start()
+                submit(
+                    eng.grequest_start(
+                        poll_fn=lambda st: not st["thread"].is_alive(),
+                        wait_fn=join_thread_states,
+                        extra_state=state,
+                        stream=stream,
+                        name="reshard-read",
+                    )
+                )
+    win.drain()
+    if errors:
+        raise errors[0]
+    return {coord: b"".join(p) for coord, p in parts.items()}, win.stats(engine=False)

@@ -194,7 +194,7 @@ def run_cells(archs, shapes, pods, out_path=None, stop_on_error=False):
         valid = registry.applicable_shapes(cfg)
         for shape in shapes:
             if shape not in valid:
-                print(f"[dryrun] SKIP {arch} × {shape} (see DESIGN.md §Arch-applicability)")
+                print(f"[dryrun] SKIP {arch} × {shape} (arch-applicability constraint)")
                 results.append({"arch": arch, "shape": shape, "skipped": True})
                 continue
             for mp in pods:

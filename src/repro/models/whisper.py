@@ -5,7 +5,7 @@ precomputed frame embeddings (B, n_audio_ctx, d_model) directly into the
 encoder. LayerNorm everywhere, GELU MLPs, bias on QKV. Positions are
 sinusoidal for the encoder (faithful) and sinusoidal for the decoder too
 (adaptation: the real model's learned 448-entry table can't cover the
-assigned 32k decode shapes — recorded in DESIGN.md).
+assigned 32k decode shapes — see docs/ARCHITECTURE.md).
 """
 
 from __future__ import annotations

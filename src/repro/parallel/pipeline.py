@@ -1,13 +1,22 @@
 """Pipeline parallelism over an explicit mesh axis, transported by the
 enqueue extension (paper ext. 4).
 
-GPipe-style schedule expressed as a ``lax.scan`` over clock ticks inside a
-``shard_map`` region: each tick, every stage applies its block stack and
-"enqueues" its activation to the next stage (token-threaded
-``ppermute`` — device-ordered, host never blocks, exactly the paper's
-offloading semantics). Backward is the AD transpose of the schedule
-(reverse permutes), so pipeline training is just ``jax.grad`` through the
-scan. Bubble fraction = (P-1)/(T) with T = n_micro + P - 1 ticks.
+Two schedules share the stage math:
+
+* :func:`gpipe_forward` — the whole schedule as a ``lax.scan`` over clock
+  ticks inside one ``shard_map`` region: each tick, every stage applies
+  its block stack and "enqueues" its activation to the next stage
+  (token-threaded ``ppermute`` — device-ordered, host never blocks).
+  Backward is the AD transpose of the schedule (reverse permutes), so
+  pipeline training is just ``jax.grad`` through the scan. Bubble
+  fraction = (P-1)/(T) with T = n_micro + P - 1 ticks.
+* :func:`gpipe_forward_host` — the host-driven 1F1B-style variant: one
+  jitted tick per clock step, with the boundary send of each tick
+  registered in a per-stream :class:`~repro.core.enqueue.OffloadWindow`
+  so up to ``depth`` microbatch sends stay outstanding per stage
+  boundary. The host only blocks when the window backpressures (parking
+  on the engine's stripe CV), which is exactly the paper's
+  get-the-host-out-of-the-loop shape for stream-offloaded communication.
 
 Used by the llama3-405b hillclimb variant and ``examples/pipeline_train``;
 the 40-cell baseline uses DP×TP only.
@@ -16,7 +25,7 @@ the 40-cell baseline uses DP×TP only.
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,10 +33,11 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.streams import axis_size, new_token, serialize_on
+from repro.core.enqueue import OffloadWindow, dispatch_enqueue
+from repro.core.streams import StreamComm, axis_size, new_token, serialize_on
 from repro.core.threadcomm import shard_map
 
-__all__ = ["gpipe_forward", "pipeline_loss_fn", "split_stages"]
+__all__ = ["gpipe_forward", "gpipe_forward_host", "pipeline_loss_fn", "split_stages"]
 
 
 def gpipe_forward(stage_fn: Callable, stage_params, x_micro, axis_name: str):
@@ -56,6 +66,82 @@ def gpipe_forward(stage_fn: Callable, stage_params, x_micro, axis_name: str):
 
     (_, _), ys = lax.scan(tick, (jnp.zeros_like(x_micro[0]), new_token()), jnp.arange(ticks))
     return ys[n_stages - 1 :]  # output for microbatch m at tick m + P - 1
+
+
+def gpipe_forward_host(
+    stage_fn: Callable,
+    stage_params,
+    x_micro,
+    comm: StreamComm,
+    depth: Optional[int] = None,
+    engine=None,
+    window: Optional[OffloadWindow] = None,
+):
+    """Host-driven pipeline forward with a depth-N boundary-send window.
+
+    Same schedule as :func:`gpipe_forward`, but each clock tick is its own
+    jitted ``shard_map`` program dispatched from the host; the tick's
+    stage-boundary send is registered in an
+    :class:`~repro.core.enqueue.OffloadWindow` on ``comm``'s offload
+    stream. Up to ``depth`` microbatch sends stay in flight — the host
+    keeps issuing (jax dispatch is async) and only blocks when the window
+    backpressures, so issue overhead of tick t+1 overlaps device work of
+    tick t. Completions are reaped in completion order; the final
+    ``drain`` is the schedule's flush.
+
+    ``stage_params``: the (P, L/P, ...) stacked stage stack (global view,
+    sharded over ``comm.axes[0]``). ``x_micro``: (n_micro, mb, S, d) fed
+    to stage 0, replicated. Returns ``(outs, window)`` with ``outs`` the
+    (n_micro, mb, S, d) stage-(P-1) outputs. ``depth`` defaults to 2;
+    pass either your own ``window`` or ``depth``/``engine``, not both.
+    """
+    if window is not None and (depth is not None or engine is not None):
+        raise ValueError(
+            "gpipe_forward_host: an explicit window carries its own depth "
+            "and engine; passing depth=/engine= alongside it would be "
+            "silently ignored"
+        )
+    mesh = comm.mesh
+    axis = comm.axes[0]
+    n_stages = mesh.shape[axis]
+    n_micro = x_micro.shape[0]
+    ticks = n_micro + n_stages - 1
+    fwd_perm = [(i, i + 1) for i in range(n_stages - 1)]
+    win = window or OffloadWindow(
+        comm.stream, depth=2 if depth is None else depth, engine=engine, name="pipe-1f1b"
+    )
+
+    def tick(sp, buf, x0):
+        sp = jax.tree.map(lambda a: a[0], sp)  # drop the pipe-shard dim
+        rank = lax.axis_index(axis)
+        x_in = jnp.where(rank == 0, x0, buf[0])
+        y = stage_fn(sp, x_in)
+        # the boundary send: device-ordered, token-threaded (enqueue ext.)
+        token, (y_s,) = serialize_on(new_token(), y)
+        nxt = lax.ppermute(y_s, axis, fwd_perm)
+        return nxt[None], y[None]
+
+    tick_jit = jax.jit(
+        shard_map(
+            tick,
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P()),
+            out_specs=(P(axis), P(axis)),
+            check_vma=False,
+        )
+    )
+
+    buf = jnp.zeros((n_stages,) + tuple(x_micro.shape[1:]), x_micro.dtype)
+    outs = []
+    for t in range(ticks):
+        # backpressure bracket: at most `depth` boundary sends in flight
+        with win.issue() as submit:
+            buf, y = tick_jit(stage_params, buf, x_micro[min(t, n_micro - 1)])
+            submit(dispatch_enqueue(y, stream=win.stream, engine=win.engine, name="pipe-tick"), value=t)
+        if t >= n_stages - 1:  # microbatch t-(P-1) lands on the last stage
+            outs.append(y[n_stages - 1])  # keep only the last stage's row
+    win.drain()
+    return jnp.stack(outs), win
 
 
 def split_stages(stacked_layer_params, n_stages: int):

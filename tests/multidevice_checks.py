@@ -162,6 +162,24 @@ def main():
     gerr = float(jnp.max(jnp.abs(gp - gs_)) / (jnp.max(jnp.abs(gs_)) + 1e-9))
     check("gpipe_backward", gerr < 1e-4)
 
+    # host-driven windowed 1F1B: depth boundary sends in flight, same math
+    from repro.core.progress import ProgressEngine
+    from repro.parallel.pipeline import gpipe_forward_host
+
+    pipe_mesh = jax.make_mesh((4,), ("pipe",))
+    off_pipe = C.stream_create(info={"type": "tpu_stream"}, name="pipe-off")
+    pipe_comm = C.stream_comm_create(pipe_mesh, ("pipe",), off_pipe)
+    outs_w, win = gpipe_forward_host(
+        stage_fn, split_stages(Ws, P_STAGES), xs, pipe_comm, depth=3, engine=ProgressEngine()
+    )
+    ref_seq = jnp.stack(
+        [jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), xs[m], Ws)[0] for m in range(NM)]
+    )
+    wstats = win.stats(engine=False)
+    check("gpipe_windowed_forward", bool(jnp.allclose(outs_w, ref_seq, atol=1e-4)))
+    check("gpipe_windowed_depth", wstats["max_depth_seen"] == 3 and wstats["in_flight"] == 0)
+    C.stream_free(off_pipe)
+
     # distributed one-step training on a (2,2,2) pod mesh via the real
     # train-step builder + sharding rules
     from repro.configs import get_config
