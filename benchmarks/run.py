@@ -29,11 +29,13 @@ def main() -> None:
         progress_overlap,
         roofline_table,
         threadcomm_latency,
+        threadcomm_rate,
     )
 
     modules = [
         ("message_rate", message_rate),
         ("threadcomm_latency", threadcomm_latency),
+        ("threadcomm_rate", threadcomm_rate),
         ("progress_overlap", progress_overlap),
         ("datatype_iov", datatype_iov),
         ("kernels_bench", kernels_bench),

@@ -1,0 +1,238 @@
+"""Host-threadcomm message rate & collective latency (paper ext. 5 + Fig. 4).
+
+Real ``threading.Thread`` ranks exchange messages through a
+:class:`~repro.core.threadcomm.HostThreadComm` in two channel regimes:
+
+* **per-thread VCI** (default): every rank owns a channel → its own
+  stripe of the progress engine. Mailbox appends, park predicates and
+  notifies all touch disjoint locks/CVs.
+* **single shared channel** (``shared_channel=True``): every rank's
+  mailbox hangs off one channel → one stripe — the pre-VCI global
+  critical section. Every send contends the same lock and every notify
+  wakes every parked rank (thundering herd), which is exactly why the
+  paper moves thread ranks onto per-VCI channels.
+
+(a) message rate: t sender/receiver pairs ping-pong ``n_msgs`` times
+    while ``n_idle`` further ranks sit parked in a blocking recv (the
+    realistic fleet shape: most loader/server ranks wait for work while
+    a few chat). In shared mode every send's notify wakes every parked
+    bystander through the one lock; per-VCI leaves them asleep. Engines
+    run with ``spin_s=0`` here so the measurement isolates the *parking
+    transport* (spin hits would hide the herd behind GIL scheduling
+    noise on small hosts); medians over repeats are recorded.
+(b) collective latency: dissemination barrier + tree allreduce medians
+    vs thread count 1/2/4/8 (default spin-then-park engine).
+
+Acceptance invariant (asserted, like ``enqueue_window.py`` asserts
+depth-2 > depth-1): at the widest thread count, the per-thread-VCI
+message rate beats the single-shared-channel baseline. Results →
+``BENCH_threadcomm.json`` (``BENCH_threadcomm.smoke.json`` under
+``--smoke``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import threading
+import time
+
+import numpy as np
+
+from repro.core.progress import ProgressEngine
+from repro.core.streams import StreamPool
+from repro.core.threadcomm import HostThreadComm
+
+PAIR_COUNTS = (1, 2, 4, 8)
+COLL_SIZES = (1, 2, 4, 8)
+N_IDLE = 8  # parked bystander ranks (the notify-herd victims)
+_RELEASE_TAG = ("release", 9)
+
+
+def bench_msg_rate(n_pairs: int, n_msgs: int, nbytes: int, shared: bool):
+    """t ping-pong pairs (rank r < t ↔ rank r+t) + N_IDLE parked ranks.
+    Returns (msgs/s, engine stat excerpt)."""
+    eng = ProgressEngine(spin_s=0.0)
+    n_ranks = 2 * n_pairs + N_IDLE
+    comm = HostThreadComm(
+        n_ranks,
+        engine=eng,
+        pool=StreamPool(),
+        shared_channel=shared,
+        name=f"rate-{'shared' if shared else 'vci'}-{n_pairs}",
+    )
+    comm.start()
+    payload = np.ones(nbytes, np.uint8)  # handed off by reference (zero-copy)
+    start_gate = threading.Barrier(n_ranks + 1)
+    done_gate = threading.Barrier(2 * n_pairs + 1)
+
+    def left(r):
+        h = comm.attach(rank=r)
+        start_gate.wait()
+        for k in range(n_msgs):
+            h.send(r + n_pairs, payload, tag=0)
+            h.recv(src=r + n_pairs, tag=0, timeout=60.0)
+        done_gate.wait()
+        if r == 0:  # timed region over: wake the bystanders home
+            for idle in range(2 * n_pairs, n_ranks):
+                h.send(idle, None, tag=_RELEASE_TAG)
+        h.detach()
+
+    def right(r):
+        h = comm.attach(rank=r)
+        start_gate.wait()
+        for k in range(n_msgs):
+            got = h.recv(src=r - n_pairs, tag=0, timeout=60.0)
+            h.send(r - n_pairs, got, tag=0)
+        done_gate.wait()
+        h.detach()
+
+    def idler(r):
+        h = comm.attach(rank=r)
+        start_gate.wait()
+        h.recv(src=0, tag=_RELEASE_TAG, timeout=120.0)  # parked throughout
+        h.detach()
+
+    def body(r):
+        return left if r < n_pairs else (right if r < 2 * n_pairs else idler)
+
+    threads = [
+        threading.Thread(target=body(r), args=(r,), daemon=True) for r in range(n_ranks)
+    ]
+    for t in threads:
+        t.start()
+    start_gate.wait()
+    t0 = time.perf_counter()
+    done_gate.wait()
+    elapsed = time.perf_counter() - t0
+    for t in threads:
+        t.join(timeout=30.0)
+    comm.finish(timeout=10.0)
+    st = eng.stats()
+    rate = 2 * n_msgs * n_pairs / elapsed
+    return rate, {
+        "parks": st["parks"],
+        "wakes": st["wakes"],
+        "spin_hits": st["spin_hits"],
+        "lock_waits": st["lock_waits"],
+        "polls": st["polls"],
+    }
+
+
+def bench_collectives(n_threads: int, reps: int):
+    """Median barrier and allreduce(64-float) latency across all ranks."""
+    eng = ProgressEngine()
+    comm = HostThreadComm(n_threads, engine=eng, pool=StreamPool(), name=f"coll-{n_threads}")
+    comm.start()
+    value = np.arange(64, dtype=np.float64)
+    bar_times, ar_times = [], []
+    lock = threading.Lock()
+
+    def worker(r):
+        h = comm.attach(rank=r)
+        h.barrier()  # align before timing
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            h.barrier()
+            t1 = time.perf_counter()
+            h.allreduce(value + r, op="sum")
+            t2 = time.perf_counter()
+            with lock:
+                bar_times.append(t1 - t0)
+                ar_times.append(t2 - t1)
+        h.detach()
+
+    threads = [threading.Thread(target=worker, args=(r,), daemon=True) for r in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60.0)
+    comm.finish(timeout=10.0)
+    return statistics.median(bar_times) * 1e6, statistics.median(ar_times) * 1e6
+
+
+def bench(smoke: bool = False, json_path: str | None = "BENCH_threadcomm.json"):
+    rows = []
+    n_msgs = 200 if smoke else 400
+    nbytes = 4096
+    reps = 20 if smoke else 100
+    trials = 3 if smoke else 5  # medians: park/wake timing is scheduler-noisy
+
+    data: dict = {
+        "smoke": smoke,
+        "config": {
+            "n_msgs": n_msgs,
+            "payload_bytes": nbytes,
+            "n_idle": N_IDLE,
+            "coll_reps": reps,
+            "trials": trials,
+        },
+        "message_rate": {},
+        "collectives": {},
+    }
+    for t in PAIR_COUNTS:
+        vci_runs, shared_runs = [], []
+        for _ in range(trials):
+            vci_runs.append(bench_msg_rate(t, n_msgs, nbytes, shared=False))
+            shared_runs.append(bench_msg_rate(t, n_msgs, nbytes, shared=True))
+        vci_rate = statistics.median(r for r, _ in vci_runs)
+        shared_rate = statistics.median(r for r, _ in shared_runs)
+        vci_stats = vci_runs[0][1]
+        shared_stats = shared_runs[0][1]
+        data["message_rate"][str(t)] = {
+            "per_thread_vci_msgs_per_s": vci_rate,
+            "shared_channel_msgs_per_s": shared_rate,
+            "per_thread_vci_trials": [r for r, _ in vci_runs],
+            "shared_channel_trials": [r for r, _ in shared_runs],
+            "speedup": vci_rate / shared_rate,
+            "vci_engine": vci_stats,
+            "shared_engine": shared_stats,
+        }
+        rows.append(
+            (
+                f"threadcomm_rate/{t}pairs",
+                1e6 / vci_rate,
+                f"vci={vci_rate:.0f}/s shared={shared_rate:.0f}/s "
+                f"speedup={vci_rate / shared_rate:.2f}x "
+                f"(vci parks={vci_stats['parks']} spins={vci_stats['spin_hits']}, "
+                f"shared lock_waits={shared_stats['lock_waits']})",
+            )
+        )
+    for n in COLL_SIZES:
+        bar_us, ar_us = bench_collectives(n, reps)
+        data["collectives"][str(n)] = {"barrier_us": bar_us, "allreduce64_us": ar_us}
+        rows.append(
+            (f"threadcomm_coll/{n}threads", bar_us, f"barrier={bar_us:.1f}us allreduce={ar_us:.1f}us")
+        )
+
+    widest = str(max(PAIR_COUNTS))
+    vci = data["message_rate"][widest]["per_thread_vci_msgs_per_s"]
+    shared = data["message_rate"][widest]["shared_channel_msgs_per_s"]
+    data["speedup_vci_over_shared_widest"] = vci / shared
+    # the acceptance invariant: thread ranks on their own VCI channels must
+    # beat the single shared-channel critical section at full width
+    assert vci > shared, (
+        f"per-thread VCI ({vci:.0f}/s) did not beat shared channel ({shared:.0f}/s)"
+    )
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(data, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small sizes for CI")
+    args = ap.parse_args()
+    # the smoke run must not clobber the committed full-size record
+    path = "BENCH_threadcomm.smoke.json" if args.smoke else "BENCH_threadcomm.json"
+    for r in bench(smoke=args.smoke, json_path=path):
+        print(",".join(map(str, r)))
+    with open(path) as f:
+        d = json.load(f)
+    print(
+        f"# vci/shared @8 pairs = {d['speedup_vci_over_shared_widest']:.2f}x "
+        "(target: per-thread VCI beats the shared channel)"
+    )

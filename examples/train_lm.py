@@ -44,6 +44,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument(
+        "--loader-threads", type=int, default=2,
+        help="persistent threadcomm loader ranks (0 = thread-per-prefetch)",
+    )
     args = ap.parse_args()
 
     cfg = model_100m() if args.preset == "100m" else model_tiny()
@@ -52,7 +56,7 @@ def main():
     tr = Trainer(
         cfg,
         AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps, clip_norm=1.0),
-        DataConfig(batch=args.batch, seq=args.seq, seed=0),
+        DataConfig(batch=args.batch, seq=args.seq, seed=0, loader_threads=args.loader_threads),
         ckpt_dir=args.ckpt_dir,
         ckpt_every=50,
     )

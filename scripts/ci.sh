@@ -10,11 +10,14 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -q -m "not slow" "$@"
 
-# bench smokes: exercise the pack-engine tiers and the enqueue-window
-# depth scaling end to end (each asserts its acceptance invariant and
-# writes BENCH_*.smoke.json — never the committed full-size records)
+# bench smokes: exercise the pack-engine tiers, the enqueue-window depth
+# scaling, and the host-threadcomm channel isolation end to end (each
+# asserts its acceptance invariant — threadcomm: per-thread-VCI message
+# rate beats the shared-channel baseline — and writes
+# BENCH_*.smoke.json, never the committed full-size records)
 python -m benchmarks.datatype_iov --smoke
 python -m benchmarks.enqueue_window --smoke
+python -m benchmarks.threadcomm_rate --smoke
 
 # docs step: every fenced Python snippet in README.md and docs/ must
 # execute cleanly (the documentation is part of the test surface)

@@ -78,10 +78,18 @@ from repro.core.streams import (
     token_join,
 )
 from repro.core.threadcomm import (
+    ANY_SOURCE,
+    HostThreadComm,
+    HybridThreadComm,
     ThreadComm,
+    ThreadRank,
     comm_test_threadcomm,
     flatten_comm,
+    host_threadcomm_init,
     split_comm,
+    tc_recv,
+    tc_send,
     threadcomm_free,
     threadcomm_init,
 )
+from repro.core import threadcoll

@@ -31,7 +31,22 @@ Locking is a sharded VCI runtime, the MPICH 4.x story:
   by ``grequest_start`` (new work) and request completion; the same CVs
   serve issue-path backpressure (:meth:`ProgressEngine.park_on_channel` /
   :meth:`ProgressEngine.notify_channel`) — a full
-  :class:`~repro.core.enqueue.OffloadWindow` parks its issuer here;
+  :class:`~repro.core.enqueue.OffloadWindow` parks its issuer here, and a
+  host-threadcomm rank (:mod:`repro.core.threadcomm`) blocks its recv the
+  same way;
+* an **adaptive spin-then-park** admission to every park: the caller
+  first spins for a short per-stripe budget (``spin_s``, tunable at
+  engine construction or via :meth:`ProgressEngine.configure`) before
+  paying the CV round-trip.  The budget adapts — a spin that observes
+  the wake condition (a *spin hit*) grows it, a spin that falls through
+  to a real park shrinks it — so hot ping-pong channels stay in the
+  cheap spin regime while idle channels decay to near-immediate parking.
+  ``stats()`` separates ``spin_hits`` from ``parks``;
+* a **per-thread channel affinity** registry
+  (:meth:`ProgressEngine.bind_thread_to_channel`): an OS thread that
+  joined a communicator as a rank declares the VCI channel it drives, so
+  blocking paths can default to *its* stripe CV and debugging/stats can
+  attribute contention to the owning rank;
 * a **batched completion path**: requests sharing a ``wait_fn`` are waited
   as whole per-stream batches in one call (``MPI_Waitall`` semantics);
 * engine-level **counters** (polls, completions, lock waits, park/wake
@@ -88,6 +103,13 @@ DEFAULT_NUM_STRIPES = DEFAULT_NUM_CHANNELS
 # How long a parked thread sleeps before re-validating its park condition.
 # Wake-ups normally arrive via notify; this only bounds lost-wakeup risk.
 _PARK_RECHECK_S = 0.25
+
+# Adaptive spin-budget bounds, as multiples of the engine's base spin_s:
+# a stripe whose spins keep hitting may grow to spin_s * _SPIN_GROW_MAX;
+# one whose spins keep falling through to parks shrinks toward
+# spin_s / _SPIN_SHRINK_MAX (never fully to 0, so it can recover).
+_SPIN_GROW_MAX = 8.0
+_SPIN_SHRINK_MAX = 8.0
 
 
 class RequestState(Enum):
@@ -201,6 +223,8 @@ class _Stripe:
         "visits",
         "enqueued",
         "progress_calls",
+        "spin_hits",
+        "spin_budget",
     )
 
     def __init__(self, index: int):
@@ -217,6 +241,8 @@ class _Stripe:
         self.visits = 0
         self.enqueued = 0
         self.progress_calls = 0
+        self.spin_hits = 0
+        self.spin_budget = 0.0  # current adaptive spin-before-park budget (s)
 
     @contextmanager
     def held(self):
@@ -245,15 +271,29 @@ class ProgressEngine:
     """Sharded VCI runtime: lock-striped channel table + parkable waits
     and progress threads."""
 
-    def __init__(self, global_lock: bool = False, n_stripes: int = DEFAULT_NUM_STRIPES):
+    def __init__(
+        self,
+        global_lock: bool = False,
+        n_stripes: int = DEFAULT_NUM_STRIPES,
+        spin_s: float = 1e-4,
+        adaptive_spin: bool = True,
+    ):
         # global_lock=True emulates the pre-4.0 MPICH global critical
         # section (benchmark baseline); False = per-VCI critical sections.
         self.global_lock_mode = global_lock
         self.n_stripes = 1 if global_lock else max(1, int(n_stripes))
+        # spin-then-park: a parker spins up to this long before the CV wait.
+        # adaptive_spin lets each stripe's budget grow on spin hits (to
+        # spin_s * _SPIN_GROW_MAX) and shrink on real parks (to
+        # spin_s / _SPIN_SHRINK_MAX) — spin_s=0 disables spinning entirely.
+        self.spin_s = max(0.0, float(spin_s))
+        self.adaptive_spin = bool(adaptive_spin)
         # +1: the last stripe homes the implicit channel (STREAM_NULL, -1).
         self._stripes: Tuple[_Stripe, ...] = tuple(
             _Stripe(i) for i in range(self.n_stripes + 1)
         )
+        for s in self._stripes:
+            s.spin_budget = self.spin_s
         self._threads: Dict[int, "_ProgressThread"] = {}
         self._threads_lock = threading.Lock()
         # single-attribute mirror of "a NULL-stream thread is registered":
@@ -265,6 +305,53 @@ class ProgressEngine:
         self._meta_lock = threading.Lock()
         self._waiter_parks = 0
         self._waiter_wakes = 0
+        self._waiter_spin_hits = 0
+        # per-thread channel affinity (bind/unbind is a stack so a thread
+        # attached to several communicators keeps nested bindings straight)
+        self._tls = threading.local()
+
+    def configure(self, spin_s: Optional[float] = None, adaptive_spin: Optional[bool] = None) -> None:
+        """Retune the spin-then-park knobs on a live engine. ``spin_s`` is
+        the base spin budget (0 disables spinning → every blocked caller
+        parks immediately); per-stripe adaptive budgets are re-seeded."""
+        if spin_s is not None:
+            self.spin_s = max(0.0, float(spin_s))
+            for s in self._stripes:
+                with s.held():
+                    s.spin_budget = self.spin_s
+        if adaptive_spin is not None:
+            self.adaptive_spin = bool(adaptive_spin)
+
+    # -- per-thread channel affinity --------------------------------------
+    def bind_thread_to_channel(self, channel: int) -> None:
+        """Declare that the calling OS thread drives ``channel`` (its VCI):
+        a host-threadcomm rank binds its stream's channel on attach so
+        blocking paths and diagnostics know which stripe is *its* home.
+        Bindings nest (stack) for threads attached to several comms."""
+        stack = getattr(self._tls, "channels", None)
+        if stack is None:
+            stack = self._tls.channels = []
+        stack.append(channel)
+
+    def unbind_thread_channel(self, channel: Optional[int] = None) -> Optional[int]:
+        """Remove a channel binding from the calling thread's stack: the
+        most recent one, or — when ``channel`` is given — the most recent
+        binding OF that channel (memberships need not end in LIFO order).
+        Returns the removed channel, or None if nothing matched."""
+        stack = getattr(self._tls, "channels", None)
+        if not stack:
+            return None
+        if channel is None:
+            return stack.pop()
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] == channel:
+                return stack.pop(i)
+        return None
+
+    def thread_channel(self) -> Optional[int]:
+        """The calling thread's current channel affinity (or None)."""
+        stack = getattr(self._tls, "channels", None)
+        return stack[-1] if stack else None
 
     # -- stripe table ----------------------------------------------------
     def _stripe(self, channel: int) -> _Stripe:
@@ -282,6 +369,16 @@ class ProgressEngine:
 
     # kept for callers of the pre-stripe API
     _lock_for = lock_for
+
+    @contextmanager
+    def channel_section(self, channel: int):
+        """Enter ``channel``'s per-VCI critical section (stripe lock),
+        counting contended acquisitions in ``stats()['lock_waits']``. This
+        is the public doorbell bracket: threadcomm mailboxes mutate their
+        receiver's queue inside it so :meth:`park_on_channel` predicates
+        observe a coherent state."""
+        with self._stripe(channel).held():
+            yield
 
     # -- the MPIX API ------------------------------------------------------
     def grequest_start(
@@ -351,25 +448,59 @@ class ProgressEngine:
         channel: int,
         predicate: Callable[[], bool],
         timeout: Optional[float] = None,
+        spin_s: Optional[float] = None,
     ) -> bool:
-        """Park the calling thread on ``channel``'s stripe CV until
-        ``predicate()`` holds (checked with the stripe lock held, re-checked
-        on every wake and at least every ``_PARK_RECHECK_S``). Returns the
-        final predicate value; ``False`` only on timeout.
+        """Block the calling thread until ``predicate()`` holds (checked
+        with the stripe lock held), spin-then-park style: first spin for
+        the stripe's adaptive budget (``spin_s`` overrides it per call),
+        then park on ``channel``'s stripe CV, re-checked on every wake and
+        at least every ``_PARK_RECHECK_S``. Returns the final predicate
+        value; ``False`` only on timeout.
 
-        This is the engine-side half of issue-path backpressure: a full
-        enqueue window parks here instead of busy-spinning, and is woken by
-        request completion (``grequest_start``'s done callback notifies the
-        stripe) or :meth:`notify_channel`. ``predicate`` must not touch this
-        stripe's lock-ordered resources beyond its own state."""
+        This is the engine-side half of issue-path backpressure and of
+        threadcomm blocking recvs: a full enqueue window parks here
+        instead of busy-spinning, a thread-rank parks here for a message,
+        and both are woken by request completion (``grequest_start``'s
+        done callback notifies the stripe) or :meth:`notify_channel`.
+        ``predicate`` must not touch this stripe's lock-ordered resources
+        beyond its own state."""
         stripe = self._stripe(channel)
         deadline = None if timeout is None else time.monotonic() + timeout
+
+        # -- spin phase: optimistically re-check before paying a CV park --
+        budget = spin_s
+        if budget is None:
+            budget = stripe.spin_budget if self.adaptive_spin else self.spin_s
+        if budget > 0.0:
+            spin_deadline = time.monotonic() + budget
+            if deadline is not None:
+                spin_deadline = min(spin_deadline, deadline)
+            while time.monotonic() < spin_deadline:
+                with stripe.held():
+                    if predicate():
+                        stripe.spin_hits += 1
+                        if self.adaptive_spin and spin_s is None:
+                            stripe.spin_budget = min(
+                                self.spin_s * _SPIN_GROW_MAX,
+                                max(stripe.spin_budget, self.spin_s / _SPIN_SHRINK_MAX) * 2.0,
+                            )
+                        return True
+                time.sleep(0)  # yield the GIL between probes
+
+        # -- park phase -----------------------------------------------------
+        first = True
         while True:
             with stripe.held():
                 if predicate():
                     return True
                 if deadline is not None and time.monotonic() >= deadline:
                     return False
+                if first and budget > 0.0 and self.adaptive_spin and spin_s is None:
+                    # the spin missed: shrink this stripe's budget
+                    stripe.spin_budget = max(
+                        self.spin_s / _SPIN_SHRINK_MAX, stripe.spin_budget / 2.0
+                    )
+                first = False
                 slice_s = _PARK_RECHECK_S
                 if deadline is not None:
                     slice_s = min(slice_s, max(0.0, deadline - time.monotonic()))
@@ -500,6 +631,19 @@ class ProgressEngine:
             r.add_done_callback(_wake)
 
         try:
+            # spin-then-park (waiter side): a short optimistic spin catches
+            # completions landing just behind the batched wait without a CV
+            # round-trip; counted separately from real parks in stats().
+            if self.spin_s > 0.0:
+                spin_deadline = time.monotonic() + self.spin_s
+                if deadline is not None:
+                    spin_deadline = min(spin_deadline, deadline)
+                while time.monotonic() < spin_deadline:
+                    if all(r.done for r in reqs):
+                        with self._meta_lock:
+                            self._waiter_spin_hits += 1
+                        return True
+                    time.sleep(0)
             while True:
                 pending = [r for r in reqs if not r.done]
                 if not pending:
@@ -604,8 +748,10 @@ class ProgressEngine:
         """Engine counters. ``polls`` = request poll visits, ``visits`` =
         stripe scans, ``lock_waits`` = contended stripe-lock acquisitions,
         ``parks``/``wakes`` = CV park/wake events (waiter- and
-        progress-thread-side combined), ``thread_loops`` = progress-thread
-        loop iterations (the idle-CPU proxy)."""
+        progress-thread-side combined), ``spin_hits`` = blocked callers
+        satisfied during the spin phase (no CV park paid),
+        ``thread_loops`` = progress-thread loop iterations (the idle-CPU
+        proxy)."""
         out = {
             "polls": 0,
             "completions": 0,
@@ -613,6 +759,7 @@ class ProgressEngine:
             "lock_waits": 0,
             "parks": 0,
             "wakes": 0,
+            "spin_hits": 0,
             "enqueued": 0,
             "progress_calls": 0,
         }
@@ -627,6 +774,8 @@ class ProgressEngine:
                     "lock_waits": s.lock_waits,
                     "parks": s.parks,
                     "wakes": s.wakes,
+                    "spin_hits": s.spin_hits,
+                    "spin_budget_s": s.spin_budget,
                     "enqueued": s.enqueued,
                     "progress_calls": s.progress_calls,
                     "pending": sum(len(q) for q in s.queues.values()),
@@ -639,6 +788,7 @@ class ProgressEngine:
                 "lock_waits",
                 "parks",
                 "wakes",
+                "spin_hits",
                 "enqueued",
                 "progress_calls",
             ):
@@ -646,8 +796,10 @@ class ProgressEngine:
         with self._meta_lock:
             out["parks"] += self._waiter_parks
             out["wakes"] += self._waiter_wakes
+            out["spin_hits"] += self._waiter_spin_hits
             out["waiter_parks"] = self._waiter_parks
             out["waiter_wakes"] = self._waiter_wakes
+            out["waiter_spin_hits"] = self._waiter_spin_hits
         with self._threads_lock:
             out["thread_loops"] = sum(t.loops for t in self._threads.values())
             out["n_progress_threads"] = len(self._threads)
@@ -659,10 +811,10 @@ class ProgressEngine:
         for s in self._stripes:
             with s.held():
                 s.polls = s.completions = s.visits = 0
-                s.lock_waits = s.parks = s.wakes = 0
+                s.lock_waits = s.parks = s.wakes = s.spin_hits = 0
                 s.enqueued = s.progress_calls = 0
         with self._meta_lock:
-            self._waiter_parks = self._waiter_wakes = 0
+            self._waiter_parks = self._waiter_wakes = self._waiter_spin_hits = 0
 
     @property
     def poll_visits(self) -> int:

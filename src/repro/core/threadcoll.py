@@ -1,0 +1,156 @@
+"""Host collectives over thread ranks (paper ext. 5, in-process level).
+
+The paper's motivating example ends with every thread of every process
+calling one ``MPI_Allreduce`` on the threadcomm — collectives must work
+with *threads as ranks*. These are the in-process algorithms backing
+that: classic O(log n) message patterns from the MPI literature, built
+purely on the threadcomm pt2pt layer (:meth:`ThreadRank.send` /
+:meth:`ThreadRank.recv`), so every hop rides the per-thread VCI channel
+and a blocked rank parks on its stripe CV rather than spinning:
+
+* :func:`barrier`   — dissemination (each round r: send to ``rank+2^r``,
+  recv from ``rank-2^r``; ceil(log2 n) rounds, no root hotspot);
+* :func:`bcast`     — binomial tree from ``root``;
+* :func:`reduce`    — mirrored binomial tree to ``root`` (deterministic
+  combine order: a parent folds its children lowest-offset first, so
+  float reductions are reproducible run-to-run);
+* :func:`allreduce` — reduce → bcast (two trees; matches the numpy
+  oracle the tests compare against);
+* :func:`alltoall`  — rotation schedule (offset d: send to ``rank+d``,
+  recv from ``rank-d``); sends are non-blocking mailbox appends so the
+  rotation cannot deadlock.
+
+Every collective call consumes one *sequence number* from the calling
+rank's handle, and every internal message is tagged
+``(_COLL, op, seq, round)`` — user pt2pt tags (plain ints/strings) can
+never collide with collective traffic, and two back-to-back collectives
+of the same kind stay separated even when a fast rank races ahead a
+whole operation. Ranks must call collectives in the same order (the MPI
+contract); a mismatch shows up as a recv timeout, not corruption.
+
+Payloads combine with numpy ufuncs (``sum``/``prod``/``max``/``min``),
+so values may be scalars or arbitrary ndarray shapes as long as they
+broadcast-match across ranks.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+__all__ = ["barrier", "bcast", "reduce", "allreduce", "alltoall", "REDUCE_OPS"]
+
+# namespace marker: first element of every collective-internal tag
+_COLL = "__tc_coll__"
+
+REDUCE_OPS: Dict[str, Callable] = {
+    "sum": np.add,
+    "prod": np.multiply,
+    "max": np.maximum,
+    "min": np.minimum,
+}
+
+
+def _nrounds(n: int) -> int:
+    """ceil(log2(n)) — rounds of a dissemination/binomial schedule."""
+    r = 0
+    while (1 << r) < n:
+        r += 1
+    return r
+
+
+def _resolve_op(op: Union[str, Callable]) -> Callable:
+    if callable(op):
+        return op
+    try:
+        return REDUCE_OPS[op]
+    except KeyError:
+        raise ValueError(f"unknown reduce op {op!r}; known: {sorted(REDUCE_OPS)}") from None
+
+
+def barrier(h, timeout: Optional[float] = None) -> None:
+    """Dissemination barrier over all ranks of ``h.comm``."""
+    n = h.comm.nthreads
+    seq = h._next_coll_seq()
+    if n == 1:
+        return
+    r = h.rank
+    for k in range(_nrounds(n)):
+        dist = 1 << k
+        h.send((r + dist) % n, None, tag=(_COLL, "bar", seq, k))
+        h.recv(src=(r - dist) % n, tag=(_COLL, "bar", seq, k), timeout=timeout)
+
+
+def bcast(h, obj=None, root: int = 0, timeout: Optional[float] = None):
+    """Binomial-tree broadcast; every rank returns ``root``'s object (the
+    same reference in-process — zero-copy, the paper's shared-address-
+    space advantage over MPI-everywhere)."""
+    n = h.comm.nthreads
+    seq = h._next_coll_seq()
+    if n == 1:
+        return obj
+    rel = (h.rank - root) % n
+    val = obj
+    rounds = _nrounds(n)
+    for k in range(rounds):
+        dist = 1 << k
+        if rel < dist:
+            peer = rel + dist
+            if peer < n:
+                h.send((peer + root) % n, val, tag=(_COLL, "bc", seq, k))
+        elif rel < 2 * dist:
+            val = h.recv(
+                src=((rel - dist) + root) % n, tag=(_COLL, "bc", seq, k), timeout=timeout
+            )
+    return val
+
+
+def reduce(h, value, op: Union[str, Callable] = "sum", root: int = 0,
+           timeout: Optional[float] = None):
+    """Binomial-tree reduction to ``root``; non-root ranks return None.
+    Combine order is deterministic (children folded nearest-first)."""
+    fn = _resolve_op(op)
+    n = h.comm.nthreads
+    seq = h._next_coll_seq()
+    rel = (h.rank - root) % n
+    acc = np.asarray(value)
+    for k in range(_nrounds(n)):
+        dist = 1 << k
+        if rel & dist:
+            h.send(((rel - dist) + root) % n, acc, tag=(_COLL, "rd", seq, k))
+            return None
+        peer = rel + dist
+        if peer < n:
+            other = h.recv(
+                src=(peer + root) % n, tag=(_COLL, "rd", seq, k), timeout=timeout
+            )
+            acc = fn(acc, other)
+    return acc if h.rank == root else None
+
+
+def allreduce(h, value, op: Union[str, Callable] = "sum",
+              timeout: Optional[float] = None):
+    """Reduce to rank 0, then broadcast the result: every rank returns the
+    full reduction (`MPI_Allreduce` over thread ranks)."""
+    acc = reduce(h, value, op=op, root=0, timeout=timeout)
+    return bcast(h, acc, root=0, timeout=timeout)
+
+
+def alltoall(h, items: Sequence, timeout: Optional[float] = None) -> List:
+    """Personalized all-to-all: ``items[j]`` goes to rank ``j``; returns
+    ``out`` with ``out[i]`` = the item rank ``i`` addressed to us. Uses a
+    rotation schedule; slot ``rank`` is a local move."""
+    n = h.comm.nthreads
+    seq = h._next_coll_seq()
+    if len(items) != n:
+        raise ValueError(f"alltoall needs exactly {n} items, got {len(items)}")
+    r = h.rank
+    out: List = [None] * n
+    out[r] = items[r]
+    for d in range(1, n):
+        h.send((r + d) % n, items[(r + d) % n], tag=(_COLL, "a2a", seq, d))
+        out[(r - d) % n] = h.recv(
+            src=(r - d) % n, tag=(_COLL, "a2a", seq, d), timeout=timeout
+        )
+    return out

@@ -1,32 +1,59 @@
-"""Thread communicators → communicator algebra over mesh axes (paper ext. 5).
+"""Thread communicators (paper ext. 5): real host threads AND mesh axes.
 
 The paper's ``MPIX_Threadcomm`` builds ONE communicator of size N·M from N
 processes × M threads, so code written against MPI ranks runs unchanged
 over the whole hierarchy (MPI×Threads), and a single collective replaces
 the "sandwich" (per-level nested) pattern.
 
-TPU adaptation (docs/ARCHITECTURE.md §5): the hierarchy levels are MESH AXES —
-``pod`` ("process") × intra-pod ranks ("threads"). A :class:`ThreadComm`
-*flattens* an ordered axis tuple into one communicator:
+Two levels live here (docs/ARCHITECTURE.md §5):
 
-* ``threadcomm_init(mesh, outer, inner)`` ≈ ``MPIX_Threadcomm_init(comm,
-  num_threads)`` — it declares the N×M structure;
-* ``start()/finish()``  activate it inside a parallel region — here, a
-  ``shard_map`` region where those axes are manual; :meth:`run` is the
-  convenience wrapper that enters the region;
-* rank/size match the paper's example: each (pod, local) pair behaves as
-  one MPI process of the flattened world.
+**Host-thread level — threads as ranks.** :class:`HostThreadComm` admits
+real ``threading.Thread`` workers as first-class ranks, reproducing the
+extension's core mechanic in-process:
 
-The same algebra (flatten / split / sub) powers the *hierarchical*
-collectives in :mod:`repro.core.hierarchical`.
+* ``host_threadcomm_init(n)`` ≈ ``MPIX_Threadcomm_init(comm, n)``;
+* :meth:`HostThreadComm.start` activates the comm (allocates one VCI
+  channel — an :class:`~repro.core.streams.MPIXStream` — per rank from
+  the finite pool, so each thread drives *its own* stripe of the
+  progress engine);
+* each spawned thread calls :meth:`HostThreadComm.attach` (the paper's
+  per-thread ``MPIX_Threadcomm_start``) and gets a :class:`ThreadRank`
+  handle: its rank, its stream identity, pt2pt (:meth:`ThreadRank.send`
+  / :meth:`ThreadRank.recv` — zero-copy mailbox handoff, the paper's
+  small-message shortcut), and host collectives
+  (:mod:`repro.core.threadcoll`);
+* :meth:`ThreadRank.detach` ≈ per-thread ``MPIX_Threadcomm_finish``;
+  the owner's :meth:`HostThreadComm.finish` waits for every rank to
+  leave, verifies no message was left undelivered, and returns the
+  channels to the pool.
+
+Blocked ranks **park** on their channel's stripe CV via
+``ProgressEngine.park_on_channel`` (spin-then-park): a recv with no
+matching message costs zero host polling, and the sender's
+``notify_channel`` wakes exactly the stripe that owns the destination.
+
+**Mesh-axis level — devices as "threads".** A :class:`ThreadComm`
+*flattens* an ordered axis tuple (``pod`` × intra-pod ranks) into one
+communicator activated inside a ``shard_map`` region. The same algebra
+(flatten / split / sub) powers the *hierarchical* collectives in
+:mod:`repro.core.hierarchical`.
+
+**Hybrid.** :meth:`ThreadComm.with_host_threads` composes the two into a
+:class:`HybridThreadComm` presenting one flat rank space of
+``mesh_size × nthreads`` — rank = mesh-flat-rank · nthreads + thread
+rank, exactly the paper's "ranks 0..M-1 live in process 0" numbering.
 """
 
 from __future__ import annotations
 
 import inspect
-from dataclasses import dataclass
+import itertools
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
 from functools import partial
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
@@ -38,7 +65,16 @@ try:  # jax <= 0.4.x / 0.5.x
 except ImportError:  # newer jax promoted it to the top level
     from jax import shard_map as _jax_shard_map
 
-from repro.core.streams import StreamComm, MPIXStream, STREAM_NULL, axis_size
+from repro.core import threadcoll
+from repro.core.progress import ProgressEngine, default_engine
+from repro.core.streams import (
+    StreamComm,
+    MPIXStream,
+    STREAM_NULL,
+    StreamPool,
+    axis_size,
+    default_pool,
+)
 
 _SHARD_MAP_PARAMS = frozenset(inspect.signature(_jax_shard_map).parameters)
 
@@ -62,7 +98,17 @@ __all__ = [
     "comm_test_threadcomm",
     "flatten_comm",
     "split_comm",
+    "ANY_SOURCE",
+    "ThreadRank",
+    "HostThreadComm",
+    "HybridThreadComm",
+    "host_threadcomm_init",
+    "tc_send",
+    "tc_recv",
 ]
+
+#: Wildcard source rank for :meth:`ThreadRank.recv` (MPI_ANY_SOURCE).
+ANY_SOURCE = -1
 
 
 @dataclass(frozen=True)
@@ -136,6 +182,15 @@ class ThreadComm:
         """The 'thread-level' communicator (all minor axes)."""
         return self.sub(self.axes[1:])
 
+    def with_host_threads(self, host: Union[int, "HostThreadComm"]) -> "HybridThreadComm":
+        """Compose with a real host-thread level: returns the hybrid
+        (pod × device × host-thread) communicator with one flat rank
+        space. Pass an existing :class:`HostThreadComm` or a thread
+        count (a fresh, not-yet-started comm is created)."""
+        if isinstance(host, int):
+            host = HostThreadComm(host, name=f"tc-{'x'.join(self.axes)}-host")
+        return HybridThreadComm(self, host)
+
 
 def threadcomm_init(mesh, axes: Sequence[str], stream: MPIXStream = STREAM_NULL) -> ThreadComm:
     """``MPIX_Threadcomm_init``: declare the flattened communicator.
@@ -159,7 +214,10 @@ def threadcomm_free(comm: ThreadComm) -> None:
 
 def comm_test_threadcomm(comm) -> bool:
     """``MPIX_Comm_test_threadcomm``: does this communicator span more than
-    one hierarchy level?"""
+    one hierarchy level (mesh-axis flattening, real host threads, or the
+    hybrid of both)?"""
+    if isinstance(comm, (HostThreadComm, HybridThreadComm)):
+        return comm.is_threadcomm
     return isinstance(comm, ThreadComm) and comm.is_threadcomm
 
 
@@ -169,3 +227,433 @@ def flatten_comm(mesh, *axes: str) -> ThreadComm:
 
 def split_comm(comm: ThreadComm, keep: Sequence[str]) -> ThreadComm:
     return comm.sub(keep)
+
+
+# ----------------------------------------------------------------------
+# Host-thread level: real threads join the communicator
+# ----------------------------------------------------------------------
+
+
+class _Mailbox:
+    """One rank's inbound queue: (src, tag, payload) triples, FIFO per
+    (src, tag) pair. All access happens inside the receiver's VCI channel
+    critical section (``engine.channel_section``), which is the same
+    stripe lock its blocked recv parks on — append + notify is therefore
+    race-free against the park predicate."""
+
+    __slots__ = ("messages", "delivered")
+
+    def __init__(self):
+        self.messages: deque = deque()
+        self.delivered = 0
+
+    def match_pop(self, src: int, tag):
+        """Pop the first message matching (src, tag); ANY_SOURCE matches
+        any sender. Returns the (src, tag, payload) triple or None."""
+        for i, (s, t, _p) in enumerate(self.messages):
+            if (src == ANY_SOURCE or s == src) and t == tag:
+                m = self.messages[i]
+                del self.messages[i]
+                self.delivered += 1
+                return m
+        return None
+
+
+@dataclass
+class ThreadRank:
+    """A thread's identity inside a :class:`HostThreadComm`: the handle
+    returned by :meth:`HostThreadComm.attach`, valid until
+    :meth:`detach`. Carries the rank number and the thread's execution
+    context — its :class:`~repro.core.streams.MPIXStream`, whose channel
+    is the VCI this thread drives."""
+
+    comm: "HostThreadComm"
+    rank: int
+    stream: MPIXStream
+    thread_ident: int = field(default_factory=threading.get_ident)
+    _detached: bool = field(default=False, init=False)
+    _coll_seq: "itertools.count" = field(default_factory=itertools.count, init=False)
+    sends: int = field(default=0, init=False)
+    recvs: int = field(default=0, init=False)
+
+    # -- pt2pt ----------------------------------------------------------
+    def send(self, dst: int, obj, tag=0) -> None:
+        self.comm._send(self, dst, obj, tag)
+
+    def recv(self, src: int = ANY_SOURCE, tag=0, timeout: Optional[float] = None):
+        return self.comm._recv(self, src, tag, timeout)
+
+    # -- collectives (threadcoll algorithms over the pt2pt layer) --------
+    def barrier(self, timeout: Optional[float] = None) -> None:
+        threadcoll.barrier(self, timeout=timeout)
+
+    def bcast(self, obj=None, root: int = 0, timeout: Optional[float] = None):
+        return threadcoll.bcast(self, obj, root=root, timeout=timeout)
+
+    def reduce(self, value, op="sum", root: int = 0, timeout: Optional[float] = None):
+        return threadcoll.reduce(self, value, op=op, root=root, timeout=timeout)
+
+    def allreduce(self, value, op="sum", timeout: Optional[float] = None):
+        return threadcoll.allreduce(self, value, op=op, timeout=timeout)
+
+    def alltoall(self, items: Sequence, timeout: Optional[float] = None) -> List:
+        return threadcoll.alltoall(self, items, timeout=timeout)
+
+    def _next_coll_seq(self) -> int:
+        return next(self._coll_seq)
+
+    # -- identity -------------------------------------------------------
+    def as_stream_comm(self, mesh=None, axes: Sequence[str] = ()) -> StreamComm:
+        """This thread's execution context as a stream communicator
+        (``MPIX_Stream_comm_create`` with the rank's own stream): device
+        collectives issued through it are attributed to — and serialized
+        on — this thread's channel."""
+        axes = tuple(axes) if axes else (("__host__",) if mesh is None else tuple(mesh.shape))
+        return StreamComm(axes, (self.stream,), mesh)
+
+    @property
+    def channel(self) -> int:
+        return self.stream.channel
+
+    def detach(self) -> None:
+        """Per-thread ``MPIX_Threadcomm_finish``: leave the communicator.
+        The rank number becomes joinable again only after the owner's
+        :meth:`HostThreadComm.finish` + a fresh :meth:`start`."""
+        self.comm._detach(self)
+
+
+class HostThreadComm:
+    """A communicator whose ranks are real host threads (paper ext. 5).
+
+    ``HostThreadComm(n)`` declares n thread-ranks; :meth:`start` activates
+    it (one compute stream — one VCI channel — per rank, or a single
+    shared channel with ``shared_channel=True``, the contended baseline
+    the benchmark compares against); worker threads :meth:`attach` in any
+    order, exchange messages and collectives through their handles, then
+    :meth:`ThreadRank.detach`; the owner's :meth:`finish` completes the
+    epoch. A comm is re-startable: ``start``/``finish`` brackets may
+    repeat (fresh channels each epoch).
+
+    ``heartbeat=`` wires rank liveness into an
+    :class:`~repro.ft.heartbeat.HeartbeatMonitor`: attach registers the
+    rank, every mailbox op pings it, detach deregisters — a stalled
+    thread-rank trips the same failure detector the pod-level trainer
+    uses.
+    """
+
+    def __init__(
+        self,
+        nthreads: int,
+        engine: Optional[ProgressEngine] = None,
+        pool: Optional[StreamPool] = None,
+        shared_channel: bool = False,
+        heartbeat=None,
+        name: str = "host-tc",
+    ):
+        if nthreads < 1:
+            raise ValueError(f"HostThreadComm needs >= 1 thread, got {nthreads}")
+        self.nthreads = nthreads
+        self.engine = engine or default_engine()
+        self.pool = pool or default_pool()
+        self.shared_channel = shared_channel
+        self.heartbeat = heartbeat
+        self.name = name
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._active = False
+        self._streams: List[MPIXStream] = []
+        self._mailboxes: List[_Mailbox] = []
+        self._attached: Dict[int, ThreadRank] = {}
+        self._departed: set = set()
+        self._next_rank = 0
+        self._epoch = 0
+
+    # -- geometry (communicator protocol) --------------------------------
+    def size(self) -> int:
+        return self.nthreads
+
+    @property
+    def is_threadcomm(self) -> bool:
+        return self.nthreads > 1
+
+    def rank_ids(self) -> List[int]:
+        return list(range(self.nthreads))
+
+    def attached_count(self) -> int:
+        with self._lock:
+            return len(self._attached)
+
+    @property
+    def active(self) -> bool:
+        return self._active
+
+    def channels(self) -> List[int]:
+        """The VCI channel driven by each rank (distinct per rank unless
+        ``shared_channel``)."""
+        return [s.channel for s in self._streams]
+
+    # -- the start/attach/finish bracket ---------------------------------
+    def start(self) -> "HostThreadComm":
+        """Activate the communicator: allocate the per-rank VCI channels
+        and open the mailboxes. Idempotent start is an error (brackets
+        must nest cleanly, like the paper's start/finish epochs)."""
+        with self._lock:
+            if self._active:
+                raise RuntimeError(f"HostThreadComm({self.name}): start() while active")
+            if self.shared_channel:
+                s = self.pool.create(name=f"{self.name}-shared")
+                self._streams = [s] * self.nthreads
+            else:
+                self._streams = [
+                    self.pool.create(name=f"{self.name}-r{r}") for r in range(self.nthreads)
+                ]
+            self._mailboxes = [_Mailbox() for _ in range(self.nthreads)]
+            self._attached = {}
+            self._departed = set()
+            self._next_rank = 0
+            self._epoch += 1
+            self._active = True
+        return self
+
+    def attach(self, rank: Optional[int] = None) -> ThreadRank:
+        """Join the calling thread as a rank (out-of-order joins are fine:
+        pass an explicit ``rank``, or take the next unclaimed one). Binds
+        the thread's channel affinity in the progress engine.
+
+        A rank that detached mid-epoch is NOT re-joinable until the
+        owner's :meth:`finish` + a fresh :meth:`start` — its mailbox may
+        still hold messages addressed to the departed thread, which a
+        new occupant must never inherit."""
+        with self._lock:
+            if not self._active:
+                raise RuntimeError(f"HostThreadComm({self.name}): attach() before start()")
+            if rank is None:
+                while self._next_rank in self._attached or self._next_rank in self._departed:
+                    self._next_rank += 1
+                rank = self._next_rank
+            if not (0 <= rank < self.nthreads):
+                raise ValueError(f"rank {rank} out of range [0, {self.nthreads})")
+            if rank in self._attached:
+                raise RuntimeError(f"rank {rank} already attached")
+            if rank in self._departed:
+                raise RuntimeError(
+                    f"rank {rank} detached mid-epoch; finish() + start() a fresh "
+                    "epoch before reusing it"
+                )
+            handle = ThreadRank(self, rank, self._streams[rank])
+            self._attached[rank] = handle
+        self.engine.bind_thread_to_channel(handle.channel)
+        if self.heartbeat is not None:
+            self.heartbeat.add_rank(rank)
+            self.heartbeat.record(rank)
+        return handle
+
+    def _detach(self, handle: ThreadRank) -> None:
+        with self._lock:
+            if handle._detached:
+                return
+            handle._detached = True
+            self._attached.pop(handle.rank, None)
+            self._departed.add(handle.rank)
+            self._cv.notify_all()
+        # the affinity registry is per-thread state: only the thread that
+        # attached can clear its own binding (a detach issued from another
+        # thread — e.g. an owner tearing down a worker's handle — leaves
+        # that worker's binding to expire with the thread), and the
+        # channel-targeted unbind keeps non-LIFO membership ends straight
+        if threading.get_ident() == handle.thread_ident:
+            self.engine.unbind_thread_channel(handle.channel)
+        if self.heartbeat is not None:
+            self.heartbeat.remove_rank(handle.rank)
+
+    def finish(self, timeout: Optional[float] = None, drain: bool = False) -> int:
+        """Owner-side epoch close: wait until every attached rank has
+        detached, then verify the mailboxes drained. Undelivered messages
+        mean a send had no matching recv — ``finish`` raises (the comm
+        stays active so the leak can be inspected) unless ``drain=True``,
+        which discards them. Returns the number of discarded messages;
+        frees the channels back to the stream pool."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            if not self._active:
+                raise RuntimeError(f"HostThreadComm({self.name}): finish() while inactive")
+            while self._attached:
+                remaining = None if deadline is None else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"HostThreadComm({self.name}): ranks {sorted(self._attached)} "
+                        "still attached at finish()"
+                    )
+                self._cv.wait(timeout=remaining if remaining is not None else 0.25)
+            leftover = sum(len(mb.messages) for mb in self._mailboxes)
+            if leftover and not drain:
+                pending = {
+                    r: [(s, t) for (s, t, _p) in mb.messages]
+                    for r, mb in enumerate(self._mailboxes)
+                    if mb.messages
+                }
+                raise RuntimeError(
+                    f"HostThreadComm({self.name}): finish() with {leftover} undelivered "
+                    f"message(s) in flight {pending}; recv them or pass drain=True"
+                )
+            for mb in self._mailboxes:
+                mb.messages.clear()
+            streams = self._streams if not self.shared_channel else self._streams[:1]
+            for s in streams:
+                self.pool.free(s)
+            self._streams = []
+            self._mailboxes = []
+            self._active = False
+        return leftover
+
+    # -- pt2pt transport (the per-pair mailbox layer) ---------------------
+    def _check_handle(self, handle: ThreadRank) -> None:
+        if handle._detached or not self._active:
+            raise RuntimeError(
+                f"HostThreadComm({self.name}): operation on a detached/finished rank"
+            )
+
+    def _send(self, handle: ThreadRank, dst: int, obj, tag) -> None:
+        """Zero-copy handoff: the payload *reference* is appended to the
+        destination's mailbox inside the destination channel's critical
+        section, then that channel's stripe is notified — the paper's
+        single-queue-hop small-message shortcut (no request object)."""
+        self._check_handle(handle)
+        if not (0 <= dst < self.nthreads):
+            raise ValueError(f"send dst {dst} out of range [0, {self.nthreads})")
+        dst_ch = self._streams[dst].channel
+        with self.engine.channel_section(dst_ch):
+            self._mailboxes[dst].messages.append((handle.rank, tag, obj))
+        handle.sends += 1
+        if self.heartbeat is not None:
+            self.heartbeat.record(handle.rank)
+        self.engine.notify_channel(dst_ch)
+
+    def _recv(self, handle: ThreadRank, src: int, tag, timeout: Optional[float]):
+        """Blocking receive on the handle's own mailbox. The match-and-pop
+        runs inside the park predicate — i.e. under the rank's stripe
+        lock — so a wake and a steal cannot race; a blocked recv parks
+        (spin-then-park) on the rank's own VCI stripe instead of
+        polling."""
+        self._check_handle(handle)
+        if src != ANY_SOURCE and not (0 <= src < self.nthreads):
+            raise ValueError(f"recv src {src} out of range [0, {self.nthreads})")
+        mb = self._mailboxes[handle.rank]
+        found: List = []
+
+        def pred() -> bool:
+            m = mb.match_pop(src, tag)
+            if m is not None:
+                found.append(m)
+                return True
+            return False
+
+        ok = self.engine.park_on_channel(handle.channel, pred, timeout)
+        if not ok:
+            raise TimeoutError(
+                f"HostThreadComm({self.name}): rank {handle.rank} recv(src={src}, "
+                f"tag={tag!r}) timed out after {timeout}s"
+            )
+        handle.recvs += 1
+        if self.heartbeat is not None:
+            self.heartbeat.record(handle.rank)
+        return found[0][2]
+
+    # -- instrumentation --------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "nthreads": self.nthreads,
+                "attached": len(self._attached),
+                "active": self._active,
+                "epoch": self._epoch,
+                "shared_channel": self.shared_channel,
+                "channels": [s.channel for s in self._streams],
+                "pending_messages": [len(mb.messages) for mb in self._mailboxes],
+                "delivered": [mb.delivered for mb in self._mailboxes],
+            }
+
+
+def host_threadcomm_init(
+    nthreads: int,
+    engine: Optional[ProgressEngine] = None,
+    pool: Optional[StreamPool] = None,
+    shared_channel: bool = False,
+    heartbeat=None,
+    name: str = "host-tc",
+) -> HostThreadComm:
+    """``MPIX_Threadcomm_init(comm, num_threads)`` for the in-process
+    level: declare (not yet activate) an n-thread communicator."""
+    return HostThreadComm(
+        nthreads,
+        engine=engine,
+        pool=pool,
+        shared_channel=shared_channel,
+        heartbeat=heartbeat,
+        name=name,
+    )
+
+
+def tc_send(handle: ThreadRank, dst: int, obj, tag=0) -> None:
+    """Functional spelling of :meth:`ThreadRank.send` (paper C-API style)."""
+    handle.send(dst, obj, tag)
+
+
+def tc_recv(handle: ThreadRank, src: int = ANY_SOURCE, tag=0, timeout: Optional[float] = None):
+    """Functional spelling of :meth:`ThreadRank.recv`."""
+    return handle.recv(src=src, tag=tag, timeout=timeout)
+
+
+# ----------------------------------------------------------------------
+# Hybrid: mesh axes × host threads, one flat rank space
+# ----------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HybridThreadComm:
+    """(pod × device) mesh levels composed with the host-thread level:
+    one communicator of ``mesh_comm.size() × host.nthreads`` ranks,
+    numbered mesh-major (all thread-ranks of mesh position 0 first) —
+    the paper's N·M layout with M = host threads."""
+
+    mesh_comm: ThreadComm
+    host: HostThreadComm
+
+    def size(self) -> int:
+        return self.mesh_comm.size() * self.host.nthreads
+
+    def axis_sizes(self) -> Tuple[int, ...]:
+        return self.mesh_comm.axis_sizes() + (self.host.nthreads,)
+
+    @property
+    def is_threadcomm(self) -> bool:
+        return True
+
+    def static_rank(self, coords: Sequence[int], thread_rank: int) -> int:
+        """Flat rank from mesh-axis coordinates (major→minor, matching
+        ``mesh_comm.axes``) and a host-thread rank — pure arithmetic, no
+        tracing, for layout planning and tests."""
+        sizes = self.mesh_comm.axis_sizes()
+        if len(coords) != len(sizes):
+            raise ValueError(f"need {len(sizes)} coords for axes {self.mesh_comm.axes}")
+        flat = 0
+        for c, s in zip(coords, sizes):
+            if not (0 <= c < s):
+                raise ValueError(f"coordinate {c} out of range [0, {s})")
+            flat = flat * s + c
+        if not (0 <= thread_rank < self.host.nthreads):
+            raise ValueError(f"thread rank {thread_rank} out of range")
+        return flat * self.host.nthreads + thread_rank
+
+    def rank(self, handle: ThreadRank):
+        """Traced flat rank: valid inside an active mesh region, called by
+        an attached thread — mesh flat rank · nthreads + thread rank."""
+        return self.mesh_comm.rank() * self.host.nthreads + handle.rank
+
+    def inner(self) -> HostThreadComm:
+        """The thread-level communicator (the paper's per-process M)."""
+        return self.host
+
+    def outer(self) -> ThreadComm:
+        """The mesh-level communicator."""
+        return self.mesh_comm

@@ -2,16 +2,30 @@
 
 Deterministic per-step batches (seeded Philox on the host) so restarts
 reproduce the exact stream — the checkpoint/restart test depends on it.
-Prefetch runs as generalized requests (paper ext. 1): ``prefetch(k)``
-enqueues host-side batch builds; the training loop's single
-``engine.wait_all`` covers data readiness together with checkpoint I/O.
+
+Two async modes, both completed by the ONE progress engine:
+
+* **thread-per-prefetch** (default): ``prefetch(k)`` spawns a build
+  thread tracked as a generalized request (paper ext. 1); the training
+  loop's single ``engine.wait_all`` covers data readiness together with
+  checkpoint I/O.
+* **threadcomm loaders** (:meth:`SyntheticPipeline.start_workers`,
+  paper ext. 5): persistent worker threads join a
+  :class:`~repro.core.threadcomm.HostThreadComm` as ranks 1..W (the
+  trainer is rank 0), each pinned to its own VCI channel of the striped
+  engine. ``prefetch(k)`` becomes a ``tc_send`` of the step number to a
+  worker; the built batch comes back as a zero-copy ``tc_send`` to rank
+  0 and ``get_batch`` is a ``tc_recv`` that parks on the trainer's own
+  stripe CV instead of locking a shared dict. The prefetch handle stays
+  a generalized request (completed externally by the worker), so the
+  same ``engine.wait_all`` story holds.
 """
 
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -21,12 +35,18 @@ from repro.models.config import ModelConfig
 
 __all__ = ["DataConfig", "SyntheticPipeline"]
 
+# sentinel step number: tells a threadcomm worker to detach and exit
+_STOP = -1
+
 
 @dataclass(frozen=True)
 class DataConfig:
     batch: int = 8
     seq: int = 128
     seed: int = 0
+    # >0: build batches on this many persistent threadcomm loader ranks
+    # (trainer joins as rank 0) instead of a thread per prefetch
+    loader_threads: int = 0
 
 
 class SyntheticPipeline:
@@ -45,6 +65,13 @@ class SyntheticPipeline:
         self.stream = stream
         self._ready: Dict[int, dict] = {}
         self._lock = threading.Lock()
+        # threadcomm-loader state (inactive until start_workers)
+        self._tc = None
+        self._rank0 = None
+        self._workers: List[threading.Thread] = []
+        self._assigned: Dict[int, int] = {}  # step -> worker rank
+        if data.loader_threads > 0:
+            self.start_workers(data.loader_threads)
 
     # -- deterministic batch builder ------------------------------------
     def build_batch(self, step: int) -> dict:
@@ -69,9 +96,77 @@ class SyntheticPipeline:
             )
         return batch
 
-    # -- async prefetch as generalized requests ---------------------------
+    # -- threadcomm loader ranks ------------------------------------------
+    def start_workers(self, n_workers: int) -> None:
+        """Spin up ``n_workers`` persistent loader ranks: a host threadcomm
+        of size n_workers+1 where the calling (trainer) thread is rank 0.
+        Subsequent ``prefetch``/``get_batch`` ride tc_send/tc_recv."""
+        if self._tc is not None:
+            raise RuntimeError("loader threadcomm already started")
+        from repro.core.threadcomm import HostThreadComm
+
+        self._tc = HostThreadComm(n_workers + 1, engine=self.engine, name="loader-tc")
+        self._tc.start()
+        self._rank0 = self._tc.attach(rank=0)
+        self._workers = [
+            threading.Thread(target=self._worker_loop, args=(w + 1,), daemon=True)
+            for w in range(n_workers)
+        ]
+        for t in self._workers:
+            t.start()
+
+    def _worker_loop(self, rank: int) -> None:
+        h = self._tc.attach(rank=rank)
+        try:
+            while True:
+                step, req = h.recv(src=0)
+                if step == _STOP:
+                    return
+                # zero-copy handoff of the built batch to the trainer rank
+                h.send(0, self.build_batch(step), tag=("batch", step))
+                if req is not None:
+                    req.complete()  # wakes any engine.wait_all parked on it
+        finally:
+            h.detach()
+
+    def stop_workers(self) -> None:
+        """Tear down the loader ranks (drains nothing: un-fetched batches
+        are discarded with the epoch)."""
+        if self._tc is None:
+            return
+        for w in range(len(self._workers)):
+            self._rank0.send(w + 1, (_STOP, None))
+        for t in self._workers:
+            t.join(timeout=10.0)
+        self._rank0.detach()
+        self._tc.finish(timeout=10.0, drain=True)
+        self._tc = None
+        self._rank0 = None
+        self._workers = []
+        self._assigned.clear()
+
+    @property
+    def threadcomm(self):
+        """The loader threadcomm (None unless start_workers ran)."""
+        return self._tc
+
+    # -- async prefetch ----------------------------------------------------
     def prefetch(self, step: int):
         """Enqueue an async build of batch ``step``; returns the request."""
+        if self._tc is not None:
+            if step in self._assigned:
+                return None  # already in flight
+            w = 1 + step % len(self._workers)
+            # externally-completed handle: no poll_fn, so a blocked
+            # wait_all parks; the worker completes it after the tc_send
+            req = self.engine.grequest_start(
+                extra_state={"step": step, "worker": w},
+                stream=self._rank0.stream,
+                name=f"prefetch-{step}",
+            )
+            self._assigned[step] = w
+            self._rank0.send(w, (step, req))
+            return req
 
         state = {"step": step, "thread": None}
 
@@ -96,6 +191,10 @@ class SyntheticPipeline:
         )
 
     def get_batch(self, step: int) -> dict:
+        if self._tc is not None and step in self._assigned:
+            w = self._assigned.pop(step)
+            # parks on rank 0's own VCI stripe until the worker's send lands
+            return self._rank0.recv(src=w, tag=("batch", step), timeout=60.0)
         with self._lock:
             if step in self._ready:
                 return self._ready.pop(step)

@@ -6,6 +6,13 @@ progress engine (ext. 1/6) — no dedicated watchdog thread beyond the
 engine's own progress thread, which the application spins up/down.
 On a miss, the registered callback fires (launch/train wires it to the
 elastic re-mesh planner + checkpoint restore path).
+
+Thread-rank liveness rides the same detector: pass a monitor as
+``HostThreadComm(..., heartbeat=monitor)`` and the threadcomm registers
+each rank on :meth:`~HeartbeatMonitor.add_rank` at attach, pings it on
+every mailbox op (send/recv/collective hop), and deregisters it on
+detach — a thread-rank that stalls mid-epoch trips the identical
+``on_failure`` path as a dead pod.
 """
 
 from __future__ import annotations
@@ -68,6 +75,18 @@ class HeartbeatMonitor:
         with self._lock:
             if rank in self._last:
                 self._last[rank] = self.clock()
+
+    def add_rank(self, rank: int) -> None:
+        """Start monitoring ``rank`` (threadcomm attach path). Idempotent;
+        a re-added rank gets a fresh deadline."""
+        with self._lock:
+            self._last[rank] = self.clock()
+
+    def remove_rank(self, rank: int) -> None:
+        """Stop monitoring ``rank`` (threadcomm detach path): a cleanly
+        departed rank must not fail the detector later."""
+        with self._lock:
+            self._last.pop(rank, None)
 
     def _next_deadline(self) -> Optional[float]:
         """Earliest absolute time a monitored rank could miss its deadline."""

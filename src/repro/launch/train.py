@@ -182,6 +182,10 @@ class Trainer:
         # on the stream CV between bursts, so an idle stream costs ~0 CPU.
         self.engine.start_progress_thread(self.ckpt_stream, interval=0.01)
         self.engine.start_progress_thread(self.data_stream, interval=0.0)
+        # loader ranks are per-run epochs: re-open the threadcomm bracket
+        # if a previous run() closed it
+        if self.data_cfg.loader_threads > 0 and self.pipeline.threadcomm is None:
+            self.pipeline.start_workers(self.data_cfg.loader_threads)
         try:
             self.pipeline.prefetch(self.start_step)
             for step in range(self.start_step, self.start_step + steps):
@@ -212,14 +216,18 @@ class Trainer:
                 self.ckpt.wait_for_pending()
         finally:
             # progress threads are per-run; the heartbeat request stays live
-            # (heartbeat.stop() is for Trainer teardown, not between runs)
+            # (heartbeat.stop() is for Trainer teardown, not between runs).
+            # Threadcomm loader ranks (data_cfg.loader_threads > 0) are also
+            # per-run: detach them so their VCI channels return to the pool.
+            self.pipeline.stop_workers()
             self.engine.stop_all()
             st = self.engine.stats()
             self.last_progress_stats = st
             print(
                 f"[trainer] progress engine: {st['completions']} completions, "
                 f"{st['polls']} polls, {st['lock_waits']} lock waits, "
-                f"{st['parks']} parks / {st['wakes']} wakes"
+                f"{st['parks']} parks / {st['wakes']} wakes "
+                f"({st['spin_hits']} spin hits)"
             )
         return self.history
 

@@ -22,7 +22,15 @@ class MoEConfig:
     d_expert: int = 0            # per-expert FFN hidden
     n_shared: int = 0            # always-on shared experts (DeepSeek)
     d_shared: int = 0            # shared-expert hidden (defaults to d_expert)
+    # Expert capacity at TRAIN time: C = N·top_k·capacity_factor / n_experts
+    # (tokens past an expert's capacity are dropped — the standard
+    # static-shape efficiency trade, kept rare by the aux balance loss).
     capacity_factor: float = 1.25
+    # Expert capacity at EVAL time (forward/prefill/decode). None = dropless:
+    # capacity covers the worst-case per-expert load so a token's output
+    # never depends on which other tokens share the batch — the invariant
+    # that makes decode-from-cache match the full forward exactly.
+    eval_capacity_factor: Optional[float] = None
     router_aux_weight: float = 0.01
     first_k_dense: int = 0       # leading dense layers (DeepSeek: 3)
     dense_d_ff: int = 0          # FFN width of those dense layers

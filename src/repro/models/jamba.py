@@ -103,7 +103,7 @@ def init_cache(cfg: ModelConfig, B: int, max_len: int):
 # -- forward ---------------------------------------------------------------
 
 
-def _apply_position_full(cfg, mixer, ffn, lp, x, positions, st):
+def _apply_position_full(cfg, mixer, ffn, lp, x, positions, st, train: bool = False):
     h = apply_norm(cfg, lp["ln1"], x)
     if mixer == "attn":
         a, st2 = gqa_attention_full(cfg, lp["mixer"], h, positions, theta=cfg.rope_theta)
@@ -112,7 +112,7 @@ def _apply_position_full(cfg, mixer, ffn, lp, x, positions, st):
     x = x + a
     h = apply_norm(cfg, lp["ln2"], x)
     if ffn == "moe":
-        f, aux = moe_mod.moe_apply(cfg, lp["ffn"], h)
+        f, aux = moe_mod.moe_apply(cfg, lp["ffn"], h, train=train)
     else:
         f, aux = swiglu(cfg, lp["ffn"], h), jnp.float32(0)
     return x + f, aux, st2
@@ -130,7 +130,7 @@ def _apply_position_decode(cfg, mixer, ffn, lp, x, cache, pos):
     return x + f, cache
 
 
-def _forward(cfg: ModelConfig, params, tokens, cache=None, pos=None, decode=False):
+def _forward(cfg: ModelConfig, params, tokens, cache=None, pos=None, decode=False, train=False):
     layout = block_layout(cfg)
     nb = n_blocks(cfg)
     B, S = tokens.shape
@@ -148,7 +148,7 @@ def _forward(cfg: ModelConfig, params, tokens, cache=None, pos=None, decode=Fals
                 x, cv2 = _apply_position_decode(cfg, mixer, ffn, lp, x, cv, pos)
                 a = jnp.float32(0)
             else:
-                x, a, cv2 = _apply_position_full(cfg, mixer, ffn, lp, x, positions, cv)
+                x, a, cv2 = _apply_position_full(cfg, mixer, ffn, lp, x, positions, cv, train=train)
             aux = aux + a
             new_entries.append(cv2)
         return (x, aux), tuple(new_entries)
@@ -164,7 +164,7 @@ def _forward(cfg: ModelConfig, params, tokens, cache=None, pos=None, decode=Fals
 
 
 def jamba_loss(cfg: ModelConfig, params, batch):
-    logits, aux, _ = _forward(cfg, params, batch["tokens"])
+    logits, aux, _ = _forward(cfg, params, batch["tokens"], train=True)
     loss = next_token_xent(logits, batch["tokens"], batch.get("loss_mask"))
     total = loss + aux
     return total, {"xent": loss, "aux": aux, "loss": total}

@@ -25,9 +25,24 @@ from repro.models.config import ModelConfig
 __all__ = ["moe_params", "moe_apply", "router_aux_loss", "moe_capacity"]
 
 
-def moe_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+def moe_capacity(n_tokens: int, cfg: ModelConfig, train: bool = False) -> int:
+    """Per-expert token capacity C.
+
+    Train: the GShard trade — C = N·k·capacity_factor/E, overflow tokens
+    dropped (kept rare by the balance loss). Eval (default): **dropless**
+    unless ``eval_capacity_factor`` is set — C covers the worst-case
+    per-expert load (every token routing to one expert), so a token's
+    output is independent of batch composition. Capacity drops are shared
+    state across the batch: with factor-limited eval capacity, the last
+    tokens of a long sequence lose experts that a short (decode) batch
+    keeps, which is exactly the decode-vs-full divergence the smoke tests
+    guard against."""
     m = cfg.moe
-    c = int(n_tokens * m.top_k * m.capacity_factor / m.n_experts)
+    factor = m.capacity_factor if train else m.eval_capacity_factor
+    if factor is None:
+        c = n_tokens  # dropless: an expert can at most be picked by every token
+    else:
+        c = int(n_tokens * m.top_k * factor / m.n_experts)
     return max(8, -(-c // 8) * 8)  # round up to 8 for layout friendliness
 
 
@@ -61,13 +76,15 @@ def router_aux_loss(probs, topi, E: int):
     return E * jnp.sum(f * P)
 
 
-def moe_apply(cfg: ModelConfig, p, x) -> Tuple[jax.Array, jax.Array]:
-    """x (B,S,d) → (y (B,S,d), aux_loss scalar)."""
+def moe_apply(cfg: ModelConfig, p, x, train: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,d) → (y (B,S,d), aux_loss scalar). ``train`` selects the
+    capacity regime (see :func:`moe_capacity`): loss paths pass True,
+    forward/prefill/decode default to the dropless eval capacity."""
     m = cfg.moe
     B, S, d = x.shape
     N = B * S
     E, k = m.n_experts, m.top_k
-    C = moe_capacity(N, cfg)
+    C = moe_capacity(N, cfg, train=train)
     xf = x.reshape(N, d)
 
     # --- route (fp32) --------------------------------------------------

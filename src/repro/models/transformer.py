@@ -169,7 +169,7 @@ def _constrain_layer(cfg, lp):
     return _jax.tree_util.tree_map_with_path(one, lp)
 
 
-def _apply_layer_full(cfg, spec: LayerSpec, lp, x, positions):
+def _apply_layer_full(cfg, spec: LayerSpec, lp, x, positions, train: bool = False):
     lp = _constrain_layer(cfg, lp)
     h = apply_norm(cfg, lp["ln1"], x)
     if spec.attn == "mla":
@@ -180,7 +180,7 @@ def _apply_layer_full(cfg, spec: LayerSpec, lp, x, positions):
     x = x + a
     h = apply_norm(cfg, lp["ln2"], x)
     if spec.moe:
-        f, aux = moe_mod.moe_apply(cfg, lp["ffn"], h)
+        f, aux = moe_mod.moe_apply(cfg, lp["ffn"], h, train=train)
     else:
         f, aux = swiglu(cfg, lp["ffn"], h), jnp.float32(0)
     f = tag_act(cfg, f, "ffn_out")
@@ -220,7 +220,7 @@ def _embed_inputs(cfg: ModelConfig, params, batch):
     return x, positions, n_img
 
 
-def lm_forward(cfg: ModelConfig, params, batch, collect_cache: bool = False):
+def lm_forward(cfg: ModelConfig, params, batch, collect_cache: bool = False, train: bool = False):
     """Returns (logits, aux_loss, cache_seeds|None, n_img, h_trunk). VLM
     prefix included in the sequence; logits cover the full sequence."""
     x, positions, n_img = _embed_inputs(cfg, params, batch)
@@ -232,7 +232,7 @@ def lm_forward(cfg: ModelConfig, params, batch, collect_cache: bool = False):
             x, aux = carry
             block_seeds = []
             for spec, lp in zip(pattern, lps):
-                x, a, seed = _apply_layer_full(cfg, spec, lp, x, positions)
+                x, a, seed = _apply_layer_full(cfg, spec, lp, x, positions, train=train)
                 aux = aux + a
                 block_seeds.append(seed if collect_cache else jnp.zeros((), cfg.cdtype))
             return (x, aux), tuple(block_seeds)
@@ -260,7 +260,7 @@ def _mtp_loss(cfg: ModelConfig, params, h_final, tokens):
     z = jnp.concatenate([h, e], axis=-1) @ mp["proj"].astype(cfg.cdtype)
     positions = jnp.broadcast_to(jnp.arange(S - 1, dtype=jnp.int32), (B, S - 1))
     spec = layer_groups(cfg)[-1][0][0]
-    z, _, _ = _apply_layer_full(cfg, spec, mp["layer"], z, positions)
+    z, _, _ = _apply_layer_full(cfg, spec, mp["layer"], z, positions, train=True)
     logits = logits_out(cfg, params["embed"], apply_norm(cfg, params["final_norm"], z))
     # logits[t] predicts tokens[t+2]
     return next_token_xent(logits, tokens[:, 1:])
@@ -268,7 +268,7 @@ def _mtp_loss(cfg: ModelConfig, params, h_final, tokens):
 
 def lm_loss(cfg: ModelConfig, params, batch):
     """Scalar training loss (+metrics dict)."""
-    logits, aux, _, n_img, h = lm_forward(cfg, params, batch)
+    logits, aux, _, n_img, h = lm_forward(cfg, params, batch, train=True)
     tokens = batch["tokens"]
     text_logits = logits[:, n_img:] if n_img else logits
     loss = next_token_xent(text_logits, tokens, batch.get("loss_mask"))

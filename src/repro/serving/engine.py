@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import collections
 import itertools
+import threading
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
 
@@ -113,27 +114,37 @@ class ServeEngine:
             self.cur_tok[slot] = tok
 
     # -- decode loop ----------------------------------------------------------
-    def step(self) -> int:
-        """Admit + decode one token for all active slots. Returns #active."""
-        self._admit()
+    def _decode_active(self):
+        """One jitted decode over the whole batch. Returns (active slot
+        indices, next-token vector)."""
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
-            return 0
+            return active, None
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(self.cur_tok), jnp.asarray(self.pos)
         )
-        next_tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        return active, np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+
+    def _advance_slot(self, i: int, tok: int) -> None:
+        """Per-slot host bookkeeping after a decode step: record the token,
+        bump position, free the slot at EOS/limit. Safe to run concurrently
+        for DISJOINT slots (each touches only index i)."""
+        req = self.slot_req[i]
+        req.out_tokens.append(tok)
+        self.pos[i] += 1
+        self.cur_tok[i] = tok
+        if tok == req.eos_id or len(req.out_tokens) >= req.max_new_tokens or self.pos[i] >= self.max_len - 1:
+            req.done = True
+            if req.grequest is not None:
+                req.grequest.complete()  # wakes parked waiters
+            self.slot_req[i] = None
+
+    def step(self) -> int:
+        """Admit + decode one token for all active slots. Returns #active."""
+        self._admit()
+        active, next_tok = self._decode_active()
         for i in active:
-            req = self.slot_req[i]
-            tok = int(next_tok[i])
-            req.out_tokens.append(tok)
-            self.pos[i] += 1
-            self.cur_tok[i] = tok
-            if tok == req.eos_id or len(req.out_tokens) >= req.max_new_tokens or self.pos[i] >= self.max_len - 1:
-                req.done = True
-                if req.grequest is not None:
-                    req.grequest.complete()  # wakes parked waiters
-                self.slot_req[i] = None
+            self._advance_slot(i, int(next_tok[i]))
         return len(active)
 
     def run_until_done(self, max_steps: int = 10_000) -> None:
@@ -141,6 +152,87 @@ class ServeEngine:
             if not self.queue and all(r is None for r in self.slot_req):
                 return
             self.step()
+
+    # -- threadcomm generation loop (paper ext. 5 consumer) -----------------
+    def run_until_done_threaded(
+        self, n_threads: int = 2, max_steps: int = 10_000, sync_timeout: float = 300.0
+    ) -> None:
+        """``run_until_done`` with the host-side bookkeeping sharded over
+        ``n_threads`` threadcomm ranks. Rank 0 drives admission and the
+        jitted decode; each generation step is then one **bcast** of the
+        (active, next-token) payload — every worker updates its own slot
+        shard (slot i belongs to rank i % n) — and an error-flag
+        **allreduce** (a barrier that also carries abort state) before
+        the next decode reads the advanced pos/cur_tok state. Blocked
+        ranks park on their own VCI stripes between steps, so idle workers
+        cost no polling (engine ``stats()`` shows parks, not polls).
+
+        Failures cannot strand the loop: a rank-0 decode error is
+        broadcast as an abort, a worker error raises the step's allreduce
+        flag so every rank (rank 0 included) exits the loop, and every
+        collective hop carries ``sync_timeout`` as a backstop — so the
+        epoch always closes and the VCI channels always return to the
+        pool; the first error re-raises after teardown."""
+        from repro.core.threadcomm import HostThreadComm
+
+        if n_threads < 1:
+            raise ValueError("run_until_done_threaded needs n_threads >= 1")
+        engine = self.progress_engine
+        comm = HostThreadComm(n_threads, engine=engine, name="serve-tc")
+        comm.start()
+        errors: List[BaseException] = []
+
+        def worker(rank: int) -> None:
+            h = comm.attach(rank=rank)
+            try:
+                for _ in range(max_steps):
+                    if rank == 0:
+                        try:
+                            if not self.queue and all(r is None for r in self.slot_req):
+                                payload = None
+                            else:
+                                self._admit()
+                                payload = ("step", self._decode_active())
+                        except BaseException as e:  # must still reach the other ranks
+                            errors.append(e)
+                            payload = ("abort",)
+                        payload = h.bcast(payload, root=0, timeout=sync_timeout)
+                    else:
+                        payload = h.bcast(root=0, timeout=sync_timeout)
+                    if payload is None or payload[0] == "abort":
+                        return
+                    failed = 0
+                    try:
+                        active, next_tok = payload[1]
+                        for i in active:
+                            if i % n_threads == rank:
+                                self._advance_slot(i, int(next_tok[i]))
+                    except BaseException as e:
+                        errors.append(e)
+                        failed = 1
+                    # all shards advanced (or one failed) before the next
+                    # decode reads them; a raised flag exits every rank
+                    if int(h.allreduce(failed, op="max", timeout=sync_timeout)):
+                        return
+            except BaseException as e:  # collective timeout / unexpected failure
+                errors.append(e)
+            finally:
+                h.detach()
+
+        threads = [
+            threading.Thread(target=worker, args=(r,), daemon=True, name=f"serve-tc-{r}")
+            for r in range(1, n_threads)
+        ]
+        try:
+            for t in threads:
+                t.start()
+            worker(0)
+        finally:
+            for t in threads:
+                t.join(timeout=sync_timeout)
+            comm.finish(timeout=30.0, drain=True)
+        if errors:
+            raise errors[0]
 
 
 def _splice(full, one, slot: int):

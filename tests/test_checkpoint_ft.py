@@ -148,6 +148,57 @@ def test_heartbeat_detects_silent_rank():
     assert failures == [[2]]
 
 
+def test_heartbeat_monitors_threadcomm_rank_liveness():
+    """Thread-ranks ping the monitor through their mailbox ops; a stalled
+    rank trips on_failure while active ranks stay green, and a cleanly
+    detached rank is deregistered (no false positive)."""
+    import threading
+
+    from repro.core.threadcomm import HostThreadComm
+
+    eng = ProgressEngine()
+    failures = []
+    mon = HeartbeatMonitor(
+        ranks=[], timeout=0.4, engine=eng, on_failure=failures.append
+    )
+    comm = HostThreadComm(3, engine=eng, heartbeat=mon, name="hb-tc")
+    comm.start()
+
+    def live(r):
+        h = comm.attach(rank=r)
+        for _ in range(20):
+            h.send(r, "self", tag="ping")
+            h.recv(src=r, tag="ping", timeout=5.0)
+            time.sleep(0.05)
+        h.detach()
+
+    def stalled(r):
+        h = comm.attach(rank=r)
+        time.sleep(1.2)  # attached but silent: no mailbox ops, no pings
+        h.detach()
+
+    threads = [
+        threading.Thread(target=live, args=(0,), daemon=True),
+        threading.Thread(target=live, args=(1,), daemon=True),
+        threading.Thread(target=stalled, args=(2,), daemon=True),
+    ]
+    for t in threads:
+        t.start()
+    deadline = time.monotonic() + 5.0
+    while not failures and time.monotonic() < deadline:
+        mon.check()
+        time.sleep(0.05)
+    for t in threads:
+        t.join(timeout=10.0)
+    comm.finish(timeout=10.0)
+    assert failures == [[2]]  # only the stalled thread-rank failed
+    # detach deregistered everyone: no late false positives
+    time.sleep(0.5)
+    before = list(mon.failed)
+    mon.check()
+    assert mon.failed == before
+
+
 # ------------------------------------------------------------- straggler
 
 

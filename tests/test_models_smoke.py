@@ -13,7 +13,20 @@ from repro.optim.adamw import AdamWConfig, adamw_init
 from repro.launch.train import make_train_step
 
 
-pytestmark = pytest.mark.slow  # multi-minute: excluded from the fast tier-1 split
+# The per-arch loops are multi-minute and stay excluded from the fast
+# tier-1 split on TIME grounds only. The granite decode case runs fast
+# and unmarked: it regressed silently while the whole module was
+# slow-marked (MoE eval-capacity drops made decode diverge from the full
+# forward), so the fixed bug is pinned in the fast split.
+_FAST_ARCHS = {"granite-moe-1b-a400m"}
+
+
+def _arch_params(fast=()):
+    return [
+        pytest.param(a, marks=() if a in fast else pytest.mark.slow)
+        for a in list_archs()
+    ]
+
 
 KEY = jax.random.key(0)
 
@@ -32,7 +45,7 @@ def _batch(cfg, B=2, S=32):
     return batch
 
 
-@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("arch", _arch_params())
 def test_smoke_forward_and_train_step(arch):
     cfg = get_config(arch, smoke=True)
     params = api.init_params(cfg, KEY)
@@ -53,7 +66,7 @@ def test_smoke_forward_and_train_step(arch):
     assert np.isfinite(float(m["loss"]))
 
 
-@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("arch", _arch_params(fast=_FAST_ARCHS))
 def test_smoke_decode_matches_full_forward(arch):
     cfg = get_config(arch, smoke=True)
     params = api.init_params(cfg, KEY)

@@ -184,3 +184,161 @@ def test_serve_engine_matches_manual_greedy():
         cur = jnp.asarray([toks[-1]], jnp.int32)
         pos = pos + 1
     assert r.out_tokens == toks
+
+
+# --------------------------------------------- threadcomm loader ranks
+
+
+def test_pipeline_threadcomm_loaders_match_direct_build():
+    """Persistent loader ranks (tc_send/tc_recv handoff) must reproduce
+    the exact deterministic batch stream of the direct builder, and the
+    prefetch handle must stay waitable through the shared engine."""
+    from repro.configs import get_config
+
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    eng = ProgressEngine()
+    p = SyntheticPipeline(
+        cfg, DataConfig(batch=2, seq=16, seed=3, loader_threads=2), engine=eng
+    )
+    try:
+        assert p.threadcomm is not None and p.threadcomm.size() == 3
+        reqs = [p.prefetch(s) for s in range(8)]
+        assert eng.wait_all([r for r in reqs if r is not None], timeout=30)
+        ref = SyntheticPipeline(cfg, DataConfig(batch=2, seq=16, seed=3))
+        # out-of-order consumption: tag matching pulls the right step
+        for s in (3, 0, 7, 1, 2, 6, 4, 5):
+            np.testing.assert_array_equal(
+                p.get_batch(s)["tokens"], ref.build_batch(s)["tokens"]
+            )
+    finally:
+        p.stop_workers()
+    assert p.threadcomm is None
+    # un-prefetched steps still build synchronously after teardown
+    np.testing.assert_array_equal(
+        p.get_batch(11)["tokens"], ref.build_batch(11)["tokens"]
+    )
+
+
+def test_pipeline_threadcomm_prefetch_parks_not_polls():
+    from repro.configs import get_config
+
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    eng = ProgressEngine(spin_s=0.0)
+    p = SyntheticPipeline(
+        cfg, DataConfig(batch=2, seq=16, loader_threads=1), engine=eng
+    )
+    try:
+        for s in range(4):
+            p.prefetch(s)
+            p.get_batch(s)
+    finally:
+        p.stop_workers()
+    st = eng.stats()
+    assert st["polls"] == 0  # handoffs are mailbox+CV, no request polling
+
+
+# --------------------------------------------- threadcomm serving loop
+
+
+def test_serve_threaded_matches_serial_outputs():
+    """Sharded host bookkeeping (bcast per decode step, barrier before
+    the next) must produce token-for-token the serial engine's output."""
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.serving.engine import ServeEngine
+
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    params = api.init_params(cfg, jax.random.key(2))
+    rng_prompts = [
+        np.random.default_rng(i).integers(0, cfg.vocab, (4 + i,)) for i in range(5)
+    ]
+
+    def run(n_threads):
+        eng = ServeEngine(
+            cfg, params, max_batch=3, max_len=48, progress_engine=ProgressEngine()
+        )
+        reqs = [eng.submit(p, max_new_tokens=5) for p in rng_prompts]
+        if n_threads:
+            eng.run_until_done_threaded(n_threads=n_threads, max_steps=200)
+        else:
+            eng.run_until_done(max_steps=200)
+        assert all(r.done for r in reqs)
+        return [r.out_tokens for r in reqs]
+
+    serial = run(0)
+    for n in (1, 3):
+        assert run(n) == serial
+
+
+def test_serve_threaded_completion_wakes_parked_waiter():
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.serving.engine import ServeEngine
+    import threading
+
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    params = api.init_params(cfg, jax.random.key(3))
+    peng = ProgressEngine()
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32, progress_engine=peng)
+    r = eng.submit(np.asarray([1, 2, 3], np.int32), max_new_tokens=3)
+    t = threading.Thread(target=lambda: eng.run_until_done_threaded(n_threads=2), daemon=True)
+    t.start()
+    assert eng.wait(r, timeout=30)  # parks on the grequest; woken at EOS
+    t.join(timeout=30)
+    assert r.done and len(r.out_tokens) == 3
+
+
+def test_serve_threaded_decode_error_aborts_cleanly():
+    """A rank-0 decode failure must abort every rank, close the epoch,
+    return the VCI channels to the pool, and re-raise — never deadlock."""
+    from repro.configs import get_config
+    from repro.core.streams import default_pool
+    from repro.models import api
+    from repro.serving.engine import ServeEngine
+
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    params = api.init_params(cfg, jax.random.key(4))
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32, progress_engine=ProgressEngine())
+    eng.submit(np.asarray([1, 2, 3], np.int32), max_new_tokens=4)
+    calls = {"n": 0}
+    real_decode = eng._decode
+
+    def flaky(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] >= 2:
+            raise RuntimeError("simulated decode failure")
+        return real_decode(*a, **kw)
+
+    eng._decode = flaky
+    live_before = default_pool().n_live
+    with pytest.raises(RuntimeError, match="simulated decode failure"):
+        eng.run_until_done_threaded(n_threads=3, sync_timeout=30.0)
+    assert default_pool().n_live == live_before  # channels not leaked
+
+
+def test_serve_threaded_worker_error_aborts_all_ranks():
+    """A failure inside a worker's slot shard raises the step allreduce
+    flag: rank 0 exits too instead of hanging in the next sync."""
+    from repro.configs import get_config
+    from repro.core.streams import default_pool
+    from repro.models import api
+    from repro.serving.engine import ServeEngine
+
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    params = api.init_params(cfg, jax.random.key(5))
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32, progress_engine=ProgressEngine())
+    # two requests → two slots, so rank 1 owns slot 1 (i % n_threads == 1)
+    eng.submit(np.asarray([1, 2, 3], np.int32), max_new_tokens=4)
+    eng.submit(np.asarray([4, 5, 6], np.int32), max_new_tokens=4)
+    real_advance = eng._advance_slot
+
+    def flaky(i, tok):
+        if i % 2 == 1:  # the shard the background worker owns
+            raise RuntimeError("simulated shard failure")
+        return real_advance(i, tok)
+
+    eng._advance_slot = flaky
+    live_before = default_pool().n_live
+    with pytest.raises(RuntimeError, match="simulated shard failure"):
+        eng.run_until_done_threaded(n_threads=2, sync_timeout=30.0)
+    assert default_pool().n_live == live_before

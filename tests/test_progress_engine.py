@@ -317,3 +317,142 @@ def test_wait_dispatched_deadline_accounting_spans_batch():
     tail2 = _NoProbe()
     _wait_dispatched([{"y": _Deleted()}, {"y": tail2}], timeout=None)
     assert tail2.blocked == 1
+
+
+# ----------------------------------------------------- spin-then-park
+
+
+def test_spin_hit_avoids_park_and_counts():
+    """A condition satisfied within the spin budget resolves with a
+    spin_hit and zero parks on that stripe."""
+    eng = pg.ProgressEngine(spin_s=0.5, adaptive_spin=False)
+    flag = [False]
+
+    def arm():
+        time.sleep(0.02)
+        flag[0] = True
+        eng.notify_channel(3)
+
+    t = threading.Thread(target=arm, daemon=True)
+    t.start()
+    assert eng.park_on_channel(3, lambda: flag[0], timeout=5.0)
+    t.join()
+    st = eng.stats()
+    assert st["spin_hits"] == 1
+    assert st["parks"] == 0
+
+
+def test_spin_disabled_forces_park():
+    eng = pg.ProgressEngine(spin_s=0.0)
+    flag = [False]
+
+    def arm():
+        time.sleep(0.05)
+        flag[0] = True
+        eng.notify_channel(3)
+
+    t = threading.Thread(target=arm, daemon=True)
+    t.start()
+    assert eng.park_on_channel(3, lambda: flag[0], timeout=5.0)
+    t.join()
+    st = eng.stats()
+    assert st["spin_hits"] == 0
+    assert st["parks"] >= 1
+
+
+def test_adaptive_spin_budget_grows_on_hits_and_shrinks_on_parks():
+    eng = pg.ProgressEngine(spin_s=1e-3, adaptive_spin=True)
+    stripe = eng._stripe(5)
+    assert stripe.spin_budget == pytest.approx(1e-3)
+    # hits: budget grows toward spin_s * _SPIN_GROW_MAX
+    for _ in range(6):
+        assert eng.park_on_channel(5, lambda: True, timeout=1.0)
+    grown = stripe.spin_budget
+    assert grown > 1e-3
+    assert grown <= 1e-3 * pg._SPIN_GROW_MAX + 1e-12
+    # misses (timeout without the condition): budget shrinks, floored
+    for _ in range(8):
+        assert not eng.park_on_channel(5, lambda: False, timeout=0.01)
+    shrunk = stripe.spin_budget
+    assert shrunk < grown
+    assert shrunk >= 1e-3 / pg._SPIN_SHRINK_MAX - 1e-12
+    st = eng.stats()
+    assert st["spin_hits"] >= 6 and st["parks"] >= 1
+
+
+def test_configure_retunes_spin_live():
+    eng = pg.ProgressEngine(spin_s=1e-3)
+    eng.configure(spin_s=0.0)
+    assert not eng.park_on_channel(2, lambda: False, timeout=0.01)
+    st = eng.stats()
+    assert st["spin_hits"] == 0 and st["parks"] >= 1
+    eng.configure(spin_s=0.25, adaptive_spin=False)
+    assert eng.park_on_channel(2, lambda: True, timeout=1.0)
+    assert eng.stats()["spin_hits"] == 1
+
+
+def test_waiter_spin_hit_counted_separately():
+    """wait_all resolving within the waiter spin window records a
+    waiter_spin_hit instead of a waiter_park."""
+    eng = pg.ProgressEngine(spin_s=0.5, adaptive_spin=False)
+    r = eng.grequest_start(name="ext")
+
+    def completer():
+        time.sleep(0.02)
+        r.complete()
+
+    t = threading.Thread(target=completer, daemon=True)
+    t.start()
+    assert eng.wait_all([r], timeout=5.0)
+    t.join()
+    st = eng.stats()
+    assert st["waiter_spin_hits"] == 1
+    assert st["waiter_parks"] == 0
+
+
+def test_channel_affinity_stack_per_thread():
+    eng = pg.ProgressEngine()
+    assert eng.thread_channel() is None
+    eng.bind_thread_to_channel(4)
+    eng.bind_thread_to_channel(9)  # nested comm membership
+    assert eng.thread_channel() == 9
+    seen = []
+
+    def other():
+        seen.append(eng.thread_channel())  # bindings are thread-local
+
+    t = threading.Thread(target=other)
+    t.start()
+    t.join()
+    assert seen == [None]
+    assert eng.unbind_thread_channel() == 9
+    assert eng.thread_channel() == 4
+    assert eng.unbind_thread_channel() == 4
+    assert eng.unbind_thread_channel() is None
+
+
+def test_channel_section_counts_contention():
+    eng = pg.ProgressEngine()
+    hold = threading.Event()
+    release = threading.Event()
+
+    def holder():
+        with eng.channel_section(6):
+            hold.set()
+            release.wait(timeout=5.0)
+
+    t = threading.Thread(target=holder, daemon=True)
+    t.start()
+    hold.wait(timeout=5.0)
+
+    def contender():
+        with eng.channel_section(6):
+            pass
+
+    t2 = threading.Thread(target=contender, daemon=True)
+    t2.start()
+    time.sleep(0.05)
+    release.set()
+    t.join(timeout=5.0)
+    t2.join(timeout=5.0)
+    assert eng.stats()["lock_waits"] >= 1

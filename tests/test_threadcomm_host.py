@@ -1,0 +1,521 @@
+"""Host-thread threadcomm (paper ext. 5): real threads as ranks.
+
+Covers the start/attach/finish bracket (including out-of-order joins and
+finish with undelivered sends), the pt2pt mailbox layer (zero-copy,
+tags, ANY_SOURCE, FIFO per pair), randomized host collectives vs a
+numpy oracle across thread counts 1/2/4/8, the per-thread VCI channel
+affinity, the parks-not-polls blocking behaviour (the acceptance
+criterion), and the hybrid mesh×thread rank numbering.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import threadcoll
+from repro.core.progress import ProgressEngine
+from repro.core.streams import StreamPool
+from repro.core.threadcomm import (
+    ANY_SOURCE,
+    HostThreadComm,
+    ThreadComm,
+    comm_test_threadcomm,
+    host_threadcomm_init,
+    tc_recv,
+    tc_send,
+    threadcomm_init,
+)
+
+
+def _engine(**kw):
+    return ProgressEngine(**kw)
+
+
+def _run_ranks(comm, body, ranks=None, join_timeout=60.0):
+    """Spawn one thread per rank running ``body(handle)``; re-raise the
+    first worker failure in the test thread."""
+    ranks = range(comm.nthreads) if ranks is None else ranks
+    errors = []
+
+    def wrap(r):
+        h = comm.attach(rank=r)
+        try:
+            body(h)
+        except BaseException as e:
+            errors.append(e)
+        finally:
+            h.detach()
+
+    threads = [threading.Thread(target=wrap, args=(r,), daemon=True) for r in ranks]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=join_timeout)
+    if errors:
+        raise errors[0]
+    return threads
+
+
+# ----------------------------------------------------------------------
+# bracket: start / attach / finish
+# ----------------------------------------------------------------------
+
+
+def test_start_attach_finish_bracket_and_restart():
+    pool = StreamPool(max_channels=8)
+    comm = host_threadcomm_init(3, engine=_engine(), pool=pool, name="bracket")
+    assert not comm.active
+    with pytest.raises(RuntimeError):
+        comm.attach()  # before start
+    comm.start()
+    assert pool.n_live == 3  # one VCI channel per rank
+    with pytest.raises(RuntimeError):
+        comm.start()  # brackets must nest cleanly
+
+    _run_ranks(comm, lambda h: h.barrier())
+    comm.finish(timeout=10.0)
+    assert pool.n_live == 0  # channels returned to the pool
+    # re-startable: a second epoch allocates fresh channels
+    comm.start()
+    _run_ranks(comm, lambda h: h.barrier())
+    comm.finish(timeout=10.0)
+    assert comm.stats()["epoch"] == 2
+
+
+def test_out_of_order_attach_assigns_requested_ranks():
+    comm = HostThreadComm(4, engine=_engine(), pool=StreamPool(), name="ooo")
+    comm.start()
+    order = [2, 0, 3, 1]  # join order != rank order
+    seen = {}
+    gate = threading.Barrier(4)
+
+    def body(rank):
+        h = comm.attach(rank=rank)
+        gate.wait()
+        # everyone reports its rank to rank 0
+        h.send(0, h.rank, tag="who")
+        if h.rank == 0:
+            got = sorted(h.recv(src=ANY_SOURCE, tag="who", timeout=10.0) for _ in range(4))
+            seen["ranks"] = got
+        h.barrier()
+        h.detach()
+
+    threads = []
+    for r in order:
+        t = threading.Thread(target=body, args=(r,), daemon=True)
+        t.start()
+        threads.append(t)
+        time.sleep(0.01)  # force genuinely staggered joins
+    for t in threads:
+        t.join(timeout=30.0)
+    comm.finish(timeout=10.0)
+    assert seen["ranks"] == [0, 1, 2, 3]
+
+
+def test_auto_rank_assignment_fills_gaps():
+    comm = HostThreadComm(3, engine=_engine(), pool=StreamPool())
+    comm.start()
+    h1 = comm.attach(rank=1)  # claim the middle rank explicitly
+    ha = comm.attach()
+    hb = comm.attach()
+    assert {ha.rank, hb.rank} == {0, 2}
+    with pytest.raises(RuntimeError):
+        comm.attach(rank=1)  # double-claim
+    for h in (h1, ha, hb):
+        h.detach()
+    comm.finish(timeout=5.0)
+
+
+def test_finish_with_inflight_sends_raises_then_drains():
+    """A send with no matching recv is a leak: finish() names it and
+    refuses; drain=True discards and closes the epoch."""
+    comm = HostThreadComm(2, engine=_engine(), pool=StreamPool(), name="leak")
+    comm.start()
+
+    def body(h):
+        if h.rank == 0:
+            h.send(1, np.arange(5), tag="orphan")  # never received
+
+    _run_ranks(comm, body)
+    with pytest.raises(RuntimeError, match="undelivered"):
+        comm.finish(timeout=5.0)
+    assert comm.active  # the failed finish leaves the epoch inspectable
+    assert comm.finish(timeout=5.0, drain=True) == 1
+    assert not comm.active
+
+
+def test_finish_times_out_while_rank_attached():
+    comm = HostThreadComm(2, engine=_engine(), pool=StreamPool())
+    comm.start()
+    h0 = comm.attach(rank=0)
+    with pytest.raises(TimeoutError):
+        comm.finish(timeout=0.1)
+    h0.detach()
+    comm.finish(timeout=5.0)
+
+
+# ----------------------------------------------------------------------
+# pt2pt mailboxes
+# ----------------------------------------------------------------------
+
+
+def test_pt2pt_zero_copy_tags_and_any_source():
+    comm = HostThreadComm(3, engine=_engine(), pool=StreamPool())
+    comm.start()
+    payload = np.arange(1024)
+    out = {}
+
+    def body(h):
+        if h.rank == 1:
+            tc_send(h, 0, payload, tag="big")
+        elif h.rank == 2:
+            h.send(0, "hello", tag="small")
+        else:
+            got = tc_recv(h, src=1, tag="big", timeout=10.0)
+            out["same_object"] = got is payload  # reference handoff, no copy
+            out["any"] = h.recv(src=ANY_SOURCE, tag="small", timeout=10.0)
+
+    _run_ranks(comm, body)
+    comm.finish(timeout=5.0)
+    assert out["same_object"] is True
+    assert out["any"] == "hello"
+
+
+def test_pt2pt_fifo_per_pair_and_tag_matching():
+    comm = HostThreadComm(2, engine=_engine(), pool=StreamPool())
+    comm.start()
+    out = {}
+
+    def body(h):
+        if h.rank == 0:
+            for k in range(5):
+                h.send(1, k, tag="seq")
+            h.send(1, "late-tag", tag="other")
+        else:
+            # tag matching pulls "other" past the queued "seq" messages
+            out["other"] = h.recv(src=0, tag="other", timeout=10.0)
+            out["seq"] = [h.recv(src=0, tag="seq", timeout=10.0) for _ in range(5)]
+
+    _run_ranks(comm, body)
+    comm.finish(timeout=5.0)
+    assert out["other"] == "late-tag"
+    assert out["seq"] == [0, 1, 2, 3, 4]  # FIFO preserved per (src, tag)
+
+
+def test_recv_timeout_raises_and_send_validates_rank():
+    comm = HostThreadComm(2, engine=_engine(), pool=StreamPool())
+    comm.start()
+    h0 = comm.attach(rank=0)
+    with pytest.raises(TimeoutError):
+        h0.recv(src=1, tag=0, timeout=0.05)
+    with pytest.raises(ValueError):
+        h0.send(7, "x")
+    h0.detach()
+    comm.finish(timeout=5.0)
+
+
+def test_detached_handle_rejects_operations():
+    comm = HostThreadComm(2, engine=_engine(), pool=StreamPool())
+    comm.start()
+    h0, h1 = comm.attach(rank=0), comm.attach(rank=1)
+    h0.detach()
+    with pytest.raises(RuntimeError):
+        h0.send(1, "x")
+    h1.detach()
+    comm.finish(timeout=5.0)
+
+
+# ----------------------------------------------------------------------
+# collectives vs numpy oracle (the acceptance criterion)
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 8])
+def test_randomized_collectives_match_numpy_oracle(n):
+    """Randomized barrier/bcast/allreduce/alltoall rounds on n real
+    threads, every result checked against numpy computed on the same
+    per-rank inputs; engine stats must show parks (not poll visits)
+    while ranks blocked."""
+    eng = _engine(spin_s=0.0)  # force every blocked rank to park
+    comm = HostThreadComm(n, engine=eng, pool=StreamPool(), name=f"coll{n}")
+    comm.start()
+    rng = np.random.default_rng(100 + n)
+    rounds = 6
+    # pre-generate per-round per-rank inputs so the oracle is independent
+    shapes = [tuple(rng.integers(1, 5, size=rng.integers(1, 3))) for _ in range(rounds)]
+    values = [
+        [rng.standard_normal(shapes[rd]) for _ in range(n)] for rd in range(rounds)
+    ]
+    ints = [[int(rng.integers(-50, 50)) for _ in range(n)] for rd in range(rounds)]
+    ops = [("sum", "max", "min", "prod")[rng.integers(0, 4)] for _ in range(rounds)]
+    roots = [int(rng.integers(0, n)) for _ in range(rounds)]
+    results = [dict() for _ in range(rounds)]
+
+    def body(h):
+        r = h.rank
+        for rd in range(rounds):
+            h.barrier(timeout=30.0)
+            got_b = h.bcast(values[rd][r] if r == roots[rd] else None, root=roots[rd], timeout=30.0)
+            got_ar = h.allreduce(values[rd][r], op=ops[rd], timeout=30.0)
+            got_ai = h.allreduce(ints[rd][r], op="sum", timeout=30.0)
+            got_a2a = h.alltoall([(r, j, rd) for j in range(n)], timeout=30.0)
+            results[rd][r] = (got_b, got_ar, got_ai, got_a2a)
+
+    _run_ranks(comm, body)
+    comm.finish(timeout=10.0)
+
+    for rd in range(rounds):
+        stack = np.stack(values[rd])
+        oracle = {
+            "sum": stack.sum(0),
+            "prod": stack.prod(0),
+            "max": stack.max(0),
+            "min": stack.min(0),
+        }[ops[rd]]
+        for r in range(n):
+            got_b, got_ar, got_ai, got_a2a = results[rd][r]
+            np.testing.assert_array_equal(got_b, values[rd][roots[rd]])
+            np.testing.assert_allclose(got_ar, oracle, rtol=1e-10, atol=1e-12)
+            assert got_ai == sum(ints[rd])  # ints: exact
+            assert got_a2a == [(j, r, rd) for j in range(n)]
+
+    st = eng.stats()
+    assert st["polls"] == 0  # pure mailbox traffic: zero request polling
+    if n > 1:
+        assert st["parks"] >= 1, st  # blocked ranks parked on their stripes
+        assert st["wakes"] >= st["parks"]
+
+
+def test_collectives_detect_mismatched_op_name():
+    comm = HostThreadComm(1, engine=_engine(), pool=StreamPool())
+    comm.start()
+    h = comm.attach()
+    with pytest.raises(ValueError):
+        h.allreduce(np.ones(2), op="median")
+    h.detach()
+    comm.finish(timeout=5.0)
+
+
+def test_back_to_back_collectives_stay_separated():
+    """Two identical collectives in a row must not cross-match even when
+    a fast rank races a whole op ahead (sequence numbers in tags)."""
+    comm = HostThreadComm(2, engine=_engine(), pool=StreamPool())
+    comm.start()
+    out = {0: [], 1: []}
+
+    def body(h):
+        for k in range(20):
+            out[h.rank].append(h.allreduce(np.array([h.rank + 10 * k]), op="sum", timeout=15.0))
+
+    _run_ranks(comm, body)
+    comm.finish(timeout=5.0)
+    for r in (0, 1):
+        for k in range(20):
+            assert out[r][k] == np.array([20 * k + 1])
+
+
+# ----------------------------------------------------------------------
+# VCI channels, affinity, parking
+# ----------------------------------------------------------------------
+
+
+def test_per_rank_channels_distinct_vs_shared():
+    pool = StreamPool()
+    comm = HostThreadComm(4, engine=_engine(), pool=pool)
+    comm.start()
+    chans = comm.channels()
+    assert len(set(chans)) == 4  # one VCI per rank
+    comm2 = HostThreadComm(4, engine=_engine(), pool=pool, shared_channel=True)
+    comm2.start()
+    assert len(set(comm2.channels())) == 1  # the contended baseline
+    h = comm.attach(rank=0)
+    h.detach()
+    comm.finish(timeout=5.0)
+    comm2.finish(timeout=5.0)
+
+
+def test_thread_channel_affinity_binding():
+    eng = _engine()
+    comm = HostThreadComm(2, engine=eng, pool=StreamPool())
+    comm.start()
+    out = {}
+
+    def body(h):
+        out[h.rank] = (eng.thread_channel(), h.stream.channel)
+
+    _run_ranks(comm, body)
+    comm.finish(timeout=5.0)
+    for r in (0, 1):
+        bound, chan = out[r]
+        assert bound == chan  # attach bound this thread to its own VCI
+    assert eng.thread_channel() is None  # test thread never attached
+
+
+def test_stream_identity_and_as_stream_comm():
+    comm = HostThreadComm(2, engine=_engine(), pool=StreamPool())
+    comm.start()
+    h = comm.attach(rank=1)
+    assert h.stream.kind == "compute" and h.channel == h.stream.channel
+    sc = h.as_stream_comm()
+    assert sc.stream is h.stream  # the thread's execution context, attached
+    h.detach()
+    comm.attach(rank=0).detach()
+    comm.finish(timeout=5.0)
+
+
+def test_blocked_recv_parks_spin_disabled_and_spin_hits_when_enabled():
+    # spin_s=0: the blocked recv must pay a real park
+    eng = _engine(spin_s=0.0)
+    comm = HostThreadComm(2, engine=eng, pool=StreamPool())
+    comm.start()
+
+    def body(h):
+        if h.rank == 0:
+            got = h.recv(src=1, tag="slow", timeout=20.0)
+            assert got == "payload"
+        else:
+            time.sleep(0.3)  # guarantee rank 0 blocks first
+            h.send(0, "payload", tag="slow")
+
+    _run_ranks(comm, body)
+    comm.finish(timeout=5.0)
+    st = eng.stats()
+    assert st["parks"] >= 1 and st["polls"] == 0
+
+    # generous spin budget + a fast sender: the recv resolves in the spin
+    # phase (spin_hits), no park
+    eng2 = _engine(spin_s=0.5, adaptive_spin=False)
+    comm2 = HostThreadComm(2, engine=eng2, pool=StreamPool())
+    comm2.start()
+
+    def body2(h):
+        if h.rank == 0:
+            assert h.recv(src=1, tag="fast", timeout=20.0) == "x"
+        else:
+            h.send(0, "x", tag="fast")
+
+    _run_ranks(comm2, body2)
+    comm2.finish(timeout=5.0)
+    assert eng2.stats()["spin_hits"] >= 1
+
+
+# ----------------------------------------------------------------------
+# hybrid mesh × host-thread composition
+# ----------------------------------------------------------------------
+
+
+class _StubMesh:
+    """Mesh stand-in for rank-arithmetic checks (no devices needed)."""
+
+    def __init__(self, **shape):
+        self.shape = dict(shape)
+
+
+def test_hybrid_rank_numbering_mesh_major():
+    """(pod × data × host-thread) presents one flat rank space numbered
+    exactly like the paper: all M thread-ranks of mesh position 0 first."""
+    mesh = _StubMesh(pod=2, data=4)
+    mc = threadcomm_init(mesh, ("pod", "data"))
+    host = HostThreadComm(3, engine=_engine(), pool=StreamPool())
+    hybrid = mc.with_host_threads(host)
+    assert hybrid.size() == 2 * 4 * 3
+    assert hybrid.axis_sizes() == (2, 4, 3)
+    assert comm_test_threadcomm(hybrid) and hybrid.is_threadcomm
+    # exhaustive numbering: rank = ((pod*4 + data) * 3) + t
+    flat = [
+        hybrid.static_rank((p, d), t)
+        for p in range(2)
+        for d in range(4)
+        for t in range(3)
+    ]
+    assert flat == list(range(24))
+    with pytest.raises(ValueError):
+        hybrid.static_rank((2, 0), 0)
+    with pytest.raises(ValueError):
+        hybrid.static_rank((0, 0), 3)
+    assert hybrid.inner() is host and hybrid.outer() is mc
+
+
+def test_with_host_threads_accepts_count():
+    mesh = _StubMesh(data=4)
+    hybrid = threadcomm_init(mesh, ("data",)).with_host_threads(2)
+    assert hybrid.size() == 8
+    assert hybrid.host.nthreads == 2
+    assert comm_test_threadcomm(hybrid)
+
+
+def test_host_comm_protocol_surface():
+    comm = host_threadcomm_init(2, engine=_engine(), pool=StreamPool())
+    assert comm.size() == 2 and comm.rank_ids() == [0, 1]
+    assert comm_test_threadcomm(comm)
+    single = host_threadcomm_init(1, engine=_engine(), pool=StreamPool())
+    assert not comm_test_threadcomm(single)  # one rank: a plain comm
+
+
+def test_mid_epoch_detached_rank_not_rejoinable():
+    """A departed rank's mailbox may hold messages addressed to the old
+    occupant: the rank number must stay unjoinable until a fresh epoch."""
+    comm = HostThreadComm(2, engine=_engine(), pool=StreamPool())
+    comm.start()
+    h0 = comm.attach(rank=0)
+    h1 = comm.attach(rank=1)
+    h1.send(0, "meant-for-old-rank0", tag="stale")
+    h0.detach()
+    with pytest.raises(RuntimeError, match="mid-epoch"):
+        comm.attach(rank=0)  # explicit re-claim rejected
+    with pytest.raises(ValueError):
+        comm.attach()  # auto-assign skips departed rank 0 → out of ranks
+    h1.detach()
+    assert comm.finish(timeout=5.0, drain=True) == 1  # the stale message
+    # a fresh epoch makes every rank joinable again
+    comm.start()
+    h = comm.attach(rank=0)
+    with pytest.raises(TimeoutError):
+        h.recv(src=1, tag="stale", timeout=0.05)  # old mailbox did not leak over
+    h.detach()
+    comm.finish(timeout=5.0)
+
+
+def test_non_lifo_detach_keeps_affinity_bindings_straight():
+    """A thread attached to two comms that leaves them in FIFO order must
+    keep the remaining membership's channel binding intact."""
+    eng = _engine()
+    pool = StreamPool()
+    a = HostThreadComm(1, engine=eng, pool=pool, name="aff-a").start()
+    b = HostThreadComm(1, engine=eng, pool=pool, name="aff-b").start()
+    ha = a.attach()
+    hb = b.attach()
+    assert eng.thread_channel() == hb.channel
+    ha.detach()  # FIFO: first-joined leaves first
+    assert eng.thread_channel() == hb.channel  # b's binding survives
+    hb.detach()
+    assert eng.thread_channel() is None
+    a.finish(timeout=5.0)
+    b.finish(timeout=5.0)
+
+
+def test_cross_thread_detach_leaves_other_threads_binding_alone():
+    eng = _engine()
+    comm = HostThreadComm(2, engine=eng, pool=StreamPool())
+    comm.start()
+    handles = {}
+    joined = threading.Event()
+    release = threading.Event()
+
+    def joiner():
+        handles["h"] = comm.attach(rank=1)
+        joined.set()
+        release.wait(timeout=10.0)
+
+    t = threading.Thread(target=joiner, daemon=True)
+    t.start()
+    joined.wait(timeout=10.0)
+    h0 = comm.attach(rank=0)
+    handles["h"].detach()  # detach issued from the WRONG (main) thread
+    assert eng.thread_channel() == h0.channel  # main thread's binding untouched
+    release.set()
+    t.join(timeout=10.0)
+    h0.detach()
+    comm.finish(timeout=5.0)
