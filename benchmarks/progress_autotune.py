@@ -1,0 +1,296 @@
+"""Per-channel wait queues + the stats()-driven progress autotuner.
+
+Two claims from the ROADMAP's progress-engine follow-ons, measured
+through the real runtime:
+
+(a) **wakeups per notify** (the thundering herd): W waiter threads park
+    on W distinct channels that all share ONE stripe (``n_stripes=1`` —
+    the worst-case pre-VCI shape, same as a ``shared_channel``
+    threadcomm). A driver then satisfies + notifies one waiter at a
+    time. With the legacy stripe CV (``wait_queues=False``) every notify
+    wakes every parked thread; with per-channel wait queues the notify
+    evaluates predicates and wakes exactly the matching waiter. We
+    record ``notify_wakeups / notifies`` from engine stats plus the
+    notify→wake latency distribution.
+
+(b) **autotuned vs static progress placement** (the overlap workload):
+    rounds of "submit M async requests on the hot stream, compute, then
+    wait", where the hot stream MOVES halfway through (phase 1 on
+    stream A, phase 2 on stream B — a checkpoint burst giving way to a
+    prefetch burst). Completion latency is measured from each request's
+    earliest-possible completion time to when it actually completed:
+    a covered stream retires during the compute gap, an uncovered one
+    only when the driver finally waits. Static hand placement pins a
+    progress thread on phase-1's stream for the whole run (the t=0
+    guess); the autotuner follows the heat — promoting B and demoting A
+    — and must match or beat the static mean. ``static_all`` (a thread
+    on every stream, the old Trainer behaviour) is recorded as the
+    never-wrong/never-cheap reference.
+
+Acceptance (asserted): at 8 waiters the per-channel herd factor is
+> 2x smaller than the stripe-CV baseline, and the autotuned mean
+completion latency <= the static hand placement's. Results →
+``BENCH_progress.json`` (``BENCH_progress.smoke.json`` under --smoke).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import threading
+import time
+
+from repro.core.progress import AutotunePolicy, ProgressEngine
+from repro.core.streams import StreamPool
+
+WAITER_COUNTS = (2, 4, 8)
+
+
+# ----------------------------------------------------------------------
+# (a) wakeups per notify
+# ----------------------------------------------------------------------
+
+
+def bench_herd(n_waiters: int, rounds: int, wait_queues: bool):
+    """W waiters parked on one stripe; satisfy+notify one per round.
+    Returns (wakeups_per_notify, wake latencies in seconds)."""
+    eng = ProgressEngine(n_stripes=1, spin_s=0.0, wait_queues=wait_queues)
+    tokens = [0] * n_waiters  # how many rounds waiter w has been released for
+    acks = [threading.Event() for _ in range(n_waiters)]
+    per_waiter = rounds // n_waiters
+    start_gate = threading.Barrier(n_waiters + 1)
+
+    def waiter(w: int):
+        got = 0
+        start_gate.wait()
+        while got < per_waiter:
+            target = got + 1
+            ok = eng.park_on_channel(w, lambda: tokens[w] >= target, timeout=30.0)
+            assert ok, f"waiter {w} lost a wakeup"
+            got = target
+            acks[w].set()
+
+    threads = [threading.Thread(target=waiter, args=(w,), daemon=True) for w in range(n_waiters)]
+    for t in threads:
+        t.start()
+    start_gate.wait()
+    time.sleep(0.05)  # let every waiter reach its park
+    latencies = []
+    for r in range(per_waiter * n_waiters):
+        w = r % n_waiters
+        acks[w].clear()
+        with eng.channel_section(w):
+            tokens[w] += 1
+        t0 = time.perf_counter()
+        eng.notify_channel(w)
+        assert acks[w].wait(timeout=30.0), f"round {r}: waiter {w} never woke"
+        latencies.append(time.perf_counter() - t0)
+    for t in threads:
+        t.join(timeout=30.0)
+    st = eng.stats()
+    return st["notify_wakeups"] / max(1, st["notifies"]), latencies
+
+
+# ----------------------------------------------------------------------
+# (b) autotuned vs static placement on the moving-hot-stream workload
+# ----------------------------------------------------------------------
+
+
+def _run_overlap(engine, streams, hot_schedule, m_reqs, work_s, compute_s, on_round=None):
+    """Rounds of: submit M requests on the round's hot stream (each
+    completable from ``t_done = now + work_s``), compute (sleep), wait.
+    Returns completion latencies (actual completion - t_done) in s."""
+    latencies = []
+    lock = threading.Lock()
+    for rnd, hot_idx in enumerate(hot_schedule):
+        stream = streams[hot_idx]
+        reqs = []
+        for _ in range(m_reqs):
+            t_done = time.perf_counter() + work_s
+
+            def poll(st, _t=t_done):
+                return time.perf_counter() >= _t
+
+            r = engine.grequest_start(poll_fn=poll, stream=stream, name="overlap")
+
+            def done(_r, _t=t_done):
+                with lock:
+                    latencies.append(max(0.0, time.perf_counter() - _t))
+
+            r.add_done_callback(done)
+            reqs.append(r)
+        time.sleep(compute_s)  # the driver is busy computing, not progressing
+        engine.wait_all(reqs, timeout=30.0)
+        if on_round is not None:
+            on_round(rnd)
+    return latencies
+
+
+def bench_autotune(rounds_per_phase: int, m_reqs: int, work_s: float, compute_s: float):
+    """Three placements over the same two-phase workload."""
+    results = {}
+    schedule = [0] * rounds_per_phase + [1] * rounds_per_phase
+
+    # static hand placement: a thread on phase-1's stream only (the t=0
+    # guess — goes stale the moment the heat moves)
+    eng = ProgressEngine()
+    pool = StreamPool()
+    streams = [pool.create(name="ckpt"), pool.create(name="data")]
+    eng.start_progress_thread(streams[0], interval=0.0)
+    lat = _run_overlap(eng, streams, schedule, m_reqs, work_s, compute_s)
+    eng.stop_all()
+    results["static_hand_placed"] = _summarize(lat, rounds_per_phase, m_reqs)
+
+    # autotuned: one tick per round (deterministic cadence), no hand threads
+    eng = ProgressEngine()
+    pool = StreamPool()
+    streams = [pool.create(name="ckpt"), pool.create(name="data")]
+    tuner = eng.autotune(
+        AutotunePolicy(promote_score=2.0, hysteresis_up=1, hysteresis_down=3, max_threads=2)
+    )
+    lat = _run_overlap(
+        eng, streams, schedule, m_reqs, work_s, compute_s, on_round=lambda r: tuner.tick()
+    )
+    ts = tuner.stats()
+    tuner.stop()
+    eng.stop_all()
+    results["autotuned"] = _summarize(lat, rounds_per_phase, m_reqs)
+    results["autotuned"].update(
+        {"promotions": ts["promotions"], "demotions": ts["demotions"], "ticks": ts["ticks"]}
+    )
+
+    # reference: a thread on every stream (never wrong, never cheap)
+    eng = ProgressEngine()
+    pool = StreamPool()
+    streams = [pool.create(name="ckpt"), pool.create(name="data")]
+    for s in streams:
+        eng.start_progress_thread(s, interval=0.0)
+    lat = _run_overlap(eng, streams, schedule, m_reqs, work_s, compute_s)
+    threads_used = eng.stats()["n_progress_threads"]
+    eng.stop_all()
+    results["static_all_streams"] = _summarize(lat, rounds_per_phase, m_reqs)
+    results["static_all_streams"]["threads"] = threads_used
+    return results
+
+
+def _summarize(latencies, rounds_per_phase, m_reqs):
+    phase1 = latencies[: rounds_per_phase * m_reqs]
+    phase2 = latencies[rounds_per_phase * m_reqs :]
+    return {
+        "mean_completion_latency_ms": statistics.mean(latencies) * 1e3,
+        "p95_completion_latency_ms": sorted(latencies)[int(len(latencies) * 0.95) - 1] * 1e3,
+        "phase1_mean_ms": statistics.mean(phase1) * 1e3,
+        "phase2_mean_ms": statistics.mean(phase2) * 1e3,
+        "n_requests": len(latencies),
+    }
+
+
+# ----------------------------------------------------------------------
+# harness entry
+# ----------------------------------------------------------------------
+
+
+def bench(smoke: bool = False, json_path: str | None = "BENCH_progress.json"):
+    rows = []
+    herd_rounds = 48 if smoke else 160
+    rounds_per_phase = 8 if smoke else 16
+    m_reqs = 4
+    work_s = 0.005
+    compute_s = 0.05 if smoke else 0.06
+
+    data: dict = {
+        "smoke": smoke,
+        "config": {
+            "herd_rounds": herd_rounds,
+            "rounds_per_phase": rounds_per_phase,
+            "m_reqs": m_reqs,
+            "work_ms": work_s * 1e3,
+            "compute_ms": compute_s * 1e3,
+        },
+        "wakeups_per_notify": {},
+        "autotune": {},
+    }
+
+    for w in WAITER_COUNTS:
+        wq_herd, wq_lat = bench_herd(w, herd_rounds, wait_queues=True)
+        cv_herd, cv_lat = bench_herd(w, herd_rounds, wait_queues=False)
+        data["wakeups_per_notify"][str(w)] = {
+            "per_channel_queues": wq_herd,
+            "stripe_cv": cv_herd,
+            "herd_reduction": cv_herd / max(wq_herd, 1e-9),
+            "wake_latency_us": {
+                "per_channel_queues": {
+                    "p50": statistics.median(wq_lat) * 1e6,
+                    "p95": sorted(wq_lat)[int(len(wq_lat) * 0.95) - 1] * 1e6,
+                },
+                "stripe_cv": {
+                    "p50": statistics.median(cv_lat) * 1e6,
+                    "p95": sorted(cv_lat)[int(len(cv_lat) * 0.95) - 1] * 1e6,
+                },
+            },
+        }
+        rows.append(
+            (
+                f"progress_herd/{w}waiters",
+                statistics.median(wq_lat) * 1e6,
+                f"wakeups/notify: queues={wq_herd:.2f} stripe-cv={cv_herd:.2f} "
+                f"({cv_herd / max(wq_herd, 1e-9):.1f}x fewer)",
+            )
+        )
+
+    auto = bench_autotune(rounds_per_phase, m_reqs, work_s, compute_s)
+    data["autotune"] = auto
+    static_mean = auto["static_hand_placed"]["mean_completion_latency_ms"]
+    auto_mean = auto["autotuned"]["mean_completion_latency_ms"]
+    data["speedup_autotune_over_static_hand_placed"] = static_mean / auto_mean
+    rows.append(
+        (
+            "progress_autotune/overlap",
+            auto_mean * 1e3,
+            f"mean completion latency: autotuned={auto_mean:.2f}ms "
+            f"static-hand={static_mean:.2f}ms "
+            f"all-streams={auto['static_all_streams']['mean_completion_latency_ms']:.2f}ms "
+            f"(promotions={auto['autotuned']['promotions']} "
+            f"demotions={auto['autotuned']['demotions']})",
+        )
+    )
+
+    # acceptance invariants
+    widest = str(max(WAITER_COUNTS))
+    herd = data["wakeups_per_notify"][widest]
+    data["herd_reduction_widest"] = herd["herd_reduction"]
+    assert herd["per_channel_queues"] < herd["stripe_cv"], (
+        f"per-channel queues ({herd['per_channel_queues']:.2f} wakeups/notify) did not "
+        f"wake fewer waiters than stripe CVs ({herd['stripe_cv']:.2f})"
+    )
+    assert herd["herd_reduction"] > 2.0, (
+        f"herd factor only {herd['herd_reduction']:.2f}x reduced at {widest} waiters (need >2x)"
+    )
+    assert auto_mean <= static_mean * 1.05, (
+        f"autotuner ({auto_mean:.2f}ms) did not match/beat static hand placement "
+        f"({static_mean:.2f}ms) on the overlap workload"
+    )
+    assert auto["autotuned"]["promotions"] >= 2, "autotuner never followed the moving hot stream"
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(data, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small sizes for CI")
+    args = ap.parse_args()
+    # the smoke run must not clobber the committed full-size record
+    path = "BENCH_progress.smoke.json" if args.smoke else "BENCH_progress.json"
+    for r in bench(smoke=args.smoke, json_path=path):
+        print(",".join(map(str, r)))
+    with open(path) as f:
+        d = json.load(f)
+    print(
+        f"# herd reduction @8 waiters = {d['herd_reduction_widest']:.1f}x; "
+        f"autotune/static = {d['speedup_autotune_over_static_hand_placed']:.2f}x "
+        "(targets: >2x fewer wakeups/notify; autotuner matches or beats static)"
+    )

@@ -6,7 +6,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * message_rate      — paper Fig. 4 (global lock vs per-VCI vs streams)
   * threadcomm_latency— paper Fig. 7 (threadcomm vs MPI-everywhere) +
                         multi-pod all-reduce byte model
+  * threadcomm_rate   — host-thread ranks: per-thread VCI vs shared
+                        channel message rate + collective latency; also
+                        writes ``BENCH_threadcomm.json``
   * progress_overlap  — paper §General Progress RMA example
+  * progress_autotune — per-channel wait queues vs stripe CVs (wakeups
+                        per notify) + autotuned vs static progress
+                        placement; also writes ``BENCH_progress.json``
+  * enqueue_window    — depth-N in-flight offload windows per transport
+                        (dma / xla / datatype); also writes
+                        ``BENCH_enqueue.json``
   * datatype_iov      — paper §Derived Datatypes iovec costs + the host
                         pack-engine tiers (naive/coalesced/vectorized);
                         also writes ``BENCH_datatype.json`` (machine-
@@ -24,8 +33,10 @@ import traceback
 def main() -> None:
     from benchmarks import (
         datatype_iov,
+        enqueue_window,
         kernels_bench,
         message_rate,
+        progress_autotune,
         progress_overlap,
         roofline_table,
         threadcomm_latency,
@@ -37,6 +48,8 @@ def main() -> None:
         ("threadcomm_latency", threadcomm_latency),
         ("threadcomm_rate", threadcomm_rate),
         ("progress_overlap", progress_overlap),
+        ("progress_autotune", progress_autotune),
+        ("enqueue_window", enqueue_window),
         ("datatype_iov", datatype_iov),
         ("kernels_bench", kernels_bench),
         ("roofline_table", roofline_table),

@@ -10,14 +10,29 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -q -m "not slow" "$@"
 
+# stress step: the randomized concurrency soak over its fixed seed
+# matrix (100+ seeded schedules hammering grequests, parks, windows,
+# affinity, progress-thread start/stop and autotuner ticks at once).
+# Deadlocks fail fast under pytest-timeout when the dev extra is
+# installed; the suite's own join watchdogs cover the bare environment.
+if python -c "import pytest_timeout" >/dev/null 2>&1; then
+  python -m pytest -q tests/test_progress_stress.py --timeout=180
+else
+  python -m pytest -q tests/test_progress_stress.py
+fi
+
 # bench smokes: exercise the pack-engine tiers, the enqueue-window depth
-# scaling, and the host-threadcomm channel isolation end to end (each
-# asserts its acceptance invariant — threadcomm: per-thread-VCI message
-# rate beats the shared-channel baseline — and writes
-# BENCH_*.smoke.json, never the committed full-size records)
+# scaling, the host-threadcomm channel isolation, and the progress
+# wait-queue/autotuner paths end to end (each asserts its acceptance
+# invariant — threadcomm: per-thread-VCI message rate beats the
+# shared-channel baseline; progress: per-channel queues wake >2x fewer
+# waiters per notify than stripe CVs and the autotuner matches/beats
+# static placement — and writes BENCH_*.smoke.json, never the committed
+# full-size records)
 python -m benchmarks.datatype_iov --smoke
 python -m benchmarks.enqueue_window --smoke
 python -m benchmarks.threadcomm_rate --smoke
+python -m benchmarks.progress_autotune --smoke
 
 # docs step: every fenced Python snippet in README.md and docs/ must
 # execute cleanly (the documentation is part of the test surface)

@@ -160,3 +160,20 @@ class CheckpointManager:
                 raise r.status()
         self._pending = [r for r in self._pending if not r.done]
         return ok
+
+    def wait_for_next(self, timeout: Optional[float] = None) -> Optional[GeneralizedRequest]:
+        """Block until the *first* of the pending saves finishes
+        (``engine.wait_any``) — surfacing a failed writer as soon as it
+        dies instead of only after the whole batch drains. Returns the
+        completed request (dropped from the pending set), or None when
+        nothing is pending / the timeout expires; re-raises the save's
+        error if it failed."""
+        if not self._pending:
+            return None
+        req = self.engine.wait_any(self._pending, timeout)
+        if req is None:
+            return None
+        self._pending = [r for r in self._pending if r is not req]
+        if req.status() is not None:
+            raise req.status()
+        return req

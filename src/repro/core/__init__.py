@@ -52,6 +52,8 @@ from repro.core.enqueue import (
     wait_enqueue,
 )
 from repro.core.progress import (
+    AutotunePolicy,
+    Autotuner,
     GeneralizedRequest,
     ProgressEngine,
     default_engine,
@@ -79,8 +81,10 @@ from repro.core.streams import (
 )
 from repro.core.threadcomm import (
     ANY_SOURCE,
+    ANY_TAG,
     HostThreadComm,
     HybridThreadComm,
+    RecvFuture,
     ThreadComm,
     ThreadRank,
     comm_test_threadcomm,

@@ -494,11 +494,13 @@ class OffloadWindow:
     Admits up to ``depth`` *incomplete* transfers. ``reserve`` (the
     backpressure point, called by ``send_enqueue``/``isend_enqueue`` with
     ``window=``) blocks while the window is full by parking on the
-    progress engine's per-stripe condition variable for the stream's
-    channel — request completion notifies that stripe, so a parked issuer
-    wakes immediately; there is no busy-spin. If no progress thread
-    covers the channel, the window drives ``engine.progress(stream)``
-    itself between short parks (the engine's ``wait_all`` discipline).
+    progress engine's per-channel wait queue for the stream's channel —
+    request completion notifies exactly the waiters it satisfies, so a
+    parked issuer wakes immediately and bystanders on the same stripe
+    stay asleep; there is no busy-spin. If no progress thread covers the
+    channel, the window is its own poller: it blocks in
+    ``engine.wait_any`` over its in-flight requests, which actively
+    progresses the stream and returns at the first completion.
 
     Completions are tracked in **completion order**: whichever transfer
     lands first is reapable first, regardless of issue order — a late
@@ -545,9 +547,14 @@ class OffloadWindow:
 
     def reserve(self, timeout: Optional[float] = None) -> bool:
         """Claim one window slot, blocking while ``depth`` transfers are
-        incomplete. Parks on the stream channel's stripe CV (woken by any
-        completion); never busy-spins. Returns False only on timeout. Call
-        before dispatching, then :meth:`register` the request — or use
+        incomplete. With a progress thread covering the stream the caller
+        parks on the channel's wait queue (woken by any completion);
+        without one the window is **its own poller** and blocks in
+        ``engine.wait_any`` over its in-flight requests — the engine
+        actively progresses the stream and returns at the *first*
+        completion, instead of slicing short CV parks between sweeps.
+        Never busy-spins; returns False only on timeout. Call before
+        dispatching, then :meth:`register` the request — or use
         :meth:`admit` when the request already exists."""
         deadline = None if timeout is None else time.monotonic() + timeout
         ch = self.stream.channel
@@ -556,6 +563,7 @@ class OffloadWindow:
                 if self.depth - len(self._in_flight) - self._reserved > 0:
                     self._reserved += 1
                     return True
+                inflight = [s.request for s in self._in_flight.values() if not s.request.done]
             if deadline is not None and time.monotonic() >= deadline:
                 return False
             remaining = None if deadline is None else max(0.0, deadline - time.monotonic())
@@ -570,11 +578,19 @@ class OffloadWindow:
                     slice_s = min(slice_s, remaining)
                 self.engine.park_on_channel(ch, lambda: self._free_slots() > 0, slice_s)
             else:
-                # nobody else polls this stream: drive progress ourselves,
-                # parking briefly between sweeps (readiness granularity)
-                self.engine.progress(self.stream)
+                # nobody else polls this stream: we are our own poller.
+                # wait_any progresses the stream and returns on the FIRST
+                # completion (bounded so a reserve()-only full window — no
+                # registered requests yet — still re-checks the deadline)
+                if inflight:
+                    slice_s = 0.25
+                    if remaining is not None:
+                        slice_s = min(slice_s, remaining)
+                    self.engine.wait_any(inflight, slice_s)
                 if self._free_slots() > 0:
                     continue
+                # a completion may be recorded (slot freed) a beat after the
+                # request flips done: absorb the race with a short park
                 slice_s = _SELF_PROGRESS_PARK_S
                 if remaining is not None:
                     slice_s = min(slice_s, remaining)

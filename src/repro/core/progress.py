@@ -26,14 +26,32 @@ Locking is a sharded VCI runtime, the MPICH 4.x story:
 * a **fixed-size lock-striped channel table** built at engine creation —
   channel → stripe is pure arithmetic, so the hot path (post, poll,
   complete) never touches a registry lock;
-* each stripe carries a **condition variable**: ``wait``/``wait_all`` and
-  progress threads *park* on it instead of busy-spinning, and are woken
-  by ``grequest_start`` (new work) and request completion; the same CVs
-  serve issue-path backpressure (:meth:`ProgressEngine.park_on_channel` /
-  :meth:`ProgressEngine.notify_channel`) — a full
+* each stripe carries **per-channel wait queues**: a blocked caller
+  (:meth:`ProgressEngine.park_on_channel`) registers a *predicate* on its
+  channel and parks on its own per-waiter CV; ``notify_channel``
+  evaluates the predicates of that channel's queue under the stripe lock
+  and wakes **only the matching waiters** — no thundering herd when many
+  ranks share a stripe (the pre-queue behaviour, every notify waking
+  every parked thread on the stripe, is kept as
+  ``ProgressEngine(wait_queues=False)`` for the benchmark baseline).
+  ``wait``/``wait_all``/``wait_any`` and progress threads park the same
+  way and are woken by ``grequest_start`` (new work) and request
+  completion; the queues also serve issue-path backpressure — a full
   :class:`~repro.core.enqueue.OffloadWindow` parks its issuer here, and a
   host-threadcomm rank (:mod:`repro.core.threadcomm`) blocks its recv the
   same way;
+* engine-level **wait-any** (:meth:`ProgressEngine.wait_any`): block on a
+  mixed request set until the *first* completion and return that request
+  — ``MPI_Waitany`` for MPI and non-MPI work alike (a full enqueue
+  window blocks on "first completion" instead of CV slices when it is
+  its own poller, and threadcomm ANY_SOURCE recvs ride it);
+* a **stats()-driven autotuner** (:meth:`ProgressEngine.autotune`): a
+  :class:`Autotuner` samples per-channel activity deltas (enqueues,
+  polls, parks, pending work) each tick and *promotes* hot channels onto
+  dedicated progress threads / *demotes* idle ones, with a hysteresis
+  band (promote/demote thresholds + consecutive-tick streaks) so
+  placement never flaps — the runtime version of the paper's "the user
+  spins progress threads up and down";
 * an **adaptive spin-then-park** admission to every park: the caller
   first spins for a short per-stripe budget (``spin_s``, tunable at
   engine construction or via :meth:`ProgressEngine.configure`) before
@@ -72,6 +90,8 @@ __all__ = [
     "RequestState",
     "GeneralizedRequest",
     "ProgressEngine",
+    "AutotunePolicy",
+    "Autotuner",
     "default_engine",
     "grequest_start",
     "grequest_complete",
@@ -205,16 +225,35 @@ class GeneralizedRequest:
         return self.done
 
 
+class _Waiter:
+    """One parked thread on a channel's wait queue. ``predicate`` is the
+    wake condition evaluated under the stripe lock — by the waiter itself
+    and by :meth:`ProgressEngine.notify_channel` (so a notify wakes only
+    the waiters it actually satisfies); it is ``None`` for *kick* waiters
+    (progress threads), which re-scan their queues on their own after any
+    wake. ``satisfied`` flips exactly once, under the stripe lock: a
+    predicate with side effects (a mailbox match-and-pop) runs to a True
+    result at most once per park."""
+
+    __slots__ = ("cv", "predicate", "satisfied")
+
+    def __init__(self, lock, predicate):
+        self.cv = threading.Condition(lock)
+        self.predicate = predicate
+        self.satisfied = False
+
+
 class _Stripe:
     """One slot of the lock-striped channel table: a lock, a CV, the
-    per-channel request queues homed here, and hot-path counters (all
-    mutated under the stripe lock)."""
+    per-channel request queues + wait queues homed here, and hot-path
+    counters (all mutated under the stripe lock)."""
 
     __slots__ = (
         "index",
         "lock",
         "cv",
         "queues",
+        "wait_queues",
         "polls",
         "completions",
         "lock_waits",
@@ -225,6 +264,13 @@ class _Stripe:
         "progress_calls",
         "spin_hits",
         "spin_budget",
+        "notifies",
+        "notify_wakeups",
+        "notify_skips",
+        "parked_now",
+        "chan_enqueued",
+        "chan_polls",
+        "chan_parks",
     )
 
     def __init__(self, index: int):
@@ -233,6 +279,8 @@ class _Stripe:
         self.lock = threading.RLock()
         self.cv = threading.Condition(self.lock)
         self.queues: Dict[int, List[GeneralizedRequest]] = {}
+        # channel → parked _Waiters (predicate and kick waiters alike)
+        self.wait_queues: Dict[int, List[_Waiter]] = {}
         self.polls = 0
         self.completions = 0
         self.lock_waits = 0
@@ -243,6 +291,14 @@ class _Stripe:
         self.progress_calls = 0
         self.spin_hits = 0
         self.spin_budget = 0.0  # current adaptive spin-before-park budget (s)
+        self.notifies = 0  # notify_channel calls landing on this stripe
+        self.notify_wakeups = 0  # waiters those notifies actually woke
+        self.notify_skips = 0  # parked waiters left asleep (predicate miss)
+        self.parked_now = 0  # currently-parked waiters (legacy herd count)
+        # per-channel activity (the autotuner's sampling surface)
+        self.chan_enqueued: Dict[int, int] = {}
+        self.chan_polls: Dict[int, int] = {}
+        self.chan_parks: Dict[int, int] = {}
 
     @contextmanager
     def held(self):
@@ -277,11 +333,18 @@ class ProgressEngine:
         n_stripes: int = DEFAULT_NUM_STRIPES,
         spin_s: float = 1e-4,
         adaptive_spin: bool = True,
+        wait_queues: bool = True,
     ):
         # global_lock=True emulates the pre-4.0 MPICH global critical
         # section (benchmark baseline); False = per-VCI critical sections.
         self.global_lock_mode = global_lock
         self.n_stripes = 1 if global_lock else max(1, int(n_stripes))
+        # wait_queues=True (default): per-channel wait queues — a notify
+        # evaluates the parked predicates and wakes only the matching
+        # waiters. False keeps the pre-queue stripe-CV broadcast (every
+        # notify wakes every parked thread on the stripe) as the herd
+        # baseline the progress_autotune benchmark measures against.
+        self.wait_queues = bool(wait_queues)
         # spin-then-park: a parker spins up to this long before the CV wait.
         # adaptive_spin lets each stripe's budget grow on spin hits (to
         # spin_s * _SPIN_GROW_MAX) and shrink on real parks (to
@@ -407,8 +470,10 @@ class ProgressEngine:
         )
         ch = stream.channel
         stripe = self._stripe(ch)
-        # completion from any thread wakes parkers on this stripe
-        req.add_done_callback(lambda _r, _s=stripe: self._notify_stripe(_s))
+        # completion from any thread wakes exactly the waiters it satisfies
+        # on the request's own channel (notify_channel evaluates their
+        # predicates; the legacy mode broadcasts to the whole stripe)
+        req.add_done_callback(lambda _r, _c=ch: self.notify_channel(_c))
         with stripe.held():
             # opportunistic sweep: retire + drop requests that completed
             # externally (no poll_fn → no progress visit ever dequeues
@@ -424,7 +489,8 @@ class ProgressEngine:
                 q[:] = kept
             q.append(req)
             stripe.enqueued += 1
-            stripe.cv.notify_all()
+            stripe.chan_enqueued[ch] = stripe.chan_enqueued.get(ch, 0) + 1
+            self._notify_work_locked(stripe, ch)
         if ch >= 0 and self._null_thread_active:
             # a parked NULL-stream progress thread covers every channel but
             # parks on the implicit stripe — wake it for the new work
@@ -432,16 +498,83 @@ class ProgressEngine:
         return req
 
     def _notify_stripe(self, stripe: _Stripe) -> None:
+        """Broad kick: wake EVERY waiter on the stripe for an unconditional
+        re-check (progress-thread state changes, shutdown). Not the hot
+        notify path — that is :meth:`notify_channel`."""
         with stripe.held():
-            stripe.cv.notify_all()
+            if not self.wait_queues:
+                stripe.cv.notify_all()
+                return
+            for q in stripe.wait_queues.values():
+                for w in q:
+                    w.cv.notify()  # every waiter re-checks its condition
 
     def notify_channel(self, channel: int) -> None:
-        """Wake everything parked on ``channel``'s stripe CV (progress
-        threads, :meth:`park_on_channel` waiters). External completion
-        paths — e.g. an :class:`~repro.core.enqueue.OffloadWindow` freeing
-        a slot — call this so backpressured issuers resume immediately
-        instead of riding out the park-recheck timeout."""
-        self._notify_stripe(self._stripe(channel))
+        """Wake the waiters parked on ``channel`` whose predicate now
+        holds. With per-channel wait queues (the default) each parked
+        waiter's predicate is evaluated under the stripe lock and only
+        matching waiters are woken — a notify for one rank's mailbox or
+        one window's free slot no longer wakes every thread sharing the
+        stripe. With ``wait_queues=False`` this degrades to the legacy
+        stripe-CV broadcast. External completion paths — e.g. an
+        :class:`~repro.core.enqueue.OffloadWindow` freeing a slot — call
+        this so backpressured issuers resume immediately instead of
+        riding out the park-recheck timeout."""
+        stripe = self._stripe(channel)
+        with stripe.held():
+            stripe.notifies += 1
+            if not self.wait_queues:
+                # legacy broadcast: every parked thread on the stripe wakes
+                stripe.notify_wakeups += stripe.parked_now
+                stripe.cv.notify_all()
+                return
+            self._notify_matching_locked(stripe, channel)
+
+    @staticmethod
+    def _notify_matching_locked(stripe: _Stripe, channel: int) -> None:
+        """Evaluate the predicates of ``channel``'s parked waiters and wake
+        exactly the satisfied ones. Caller holds the stripe lock. The
+        predicate may run on the *notifier's* thread — park predicates
+        must not depend on thread identity."""
+        q = stripe.wait_queues.get(channel)
+        if not q:
+            return
+        for w in list(q):
+            if w.satisfied or w.predicate is None:
+                continue  # already woken / kick waiter (re-scans on its own)
+            if w.predicate():
+                w.satisfied = True
+                w.cv.notify()
+                stripe.notify_wakeups += 1
+            else:
+                stripe.notify_skips += 1
+
+    def _notify_work_locked(self, stripe: _Stripe, channel: int) -> None:
+        """New pollable work arrived on ``channel``: wake the progress
+        thread (kick waiter) parked for it. Predicate waiters are left
+        asleep — every state change they wait on has its own targeted
+        notify. Caller holds the stripe lock."""
+        if not self.wait_queues:
+            stripe.cv.notify_all()
+            return
+        for w in stripe.wait_queues.get(channel, ()):
+            if w.predicate is None and not w.satisfied:
+                w.cv.notify()
+
+    @staticmethod
+    def _register_waiter(stripe: _Stripe, channel: int, w: _Waiter) -> None:
+        stripe.wait_queues.setdefault(channel, []).append(w)
+
+    @staticmethod
+    def _deregister_waiter(stripe: _Stripe, channel: int, w: _Waiter) -> None:
+        q = stripe.wait_queues.get(channel)
+        if q is not None:
+            try:
+                q.remove(w)
+            except ValueError:
+                pass
+            if not q:
+                del stripe.wait_queues[channel]
 
     def park_on_channel(
         self,
@@ -453,17 +586,21 @@ class ProgressEngine:
         """Block the calling thread until ``predicate()`` holds (checked
         with the stripe lock held), spin-then-park style: first spin for
         the stripe's adaptive budget (``spin_s`` overrides it per call),
-        then park on ``channel``'s stripe CV, re-checked on every wake and
-        at least every ``_PARK_RECHECK_S``. Returns the final predicate
-        value; ``False`` only on timeout.
+        then register on ``channel``'s wait queue and park on a per-waiter
+        CV, re-checked on every wake and at least every
+        ``_PARK_RECHECK_S``. Returns the final predicate value; ``False``
+        only on timeout.
 
         This is the engine-side half of issue-path backpressure and of
         threadcomm blocking recvs: a full enqueue window parks here
         instead of busy-spinning, a thread-rank parks here for a message,
-        and both are woken by request completion (``grequest_start``'s
-        done callback notifies the stripe) or :meth:`notify_channel`.
-        ``predicate`` must not touch this stripe's lock-ordered resources
-        beyond its own state."""
+        and both are woken by :meth:`notify_channel` (request completion
+        notifies the request's channel the same way). The predicate may
+        be evaluated by the *notifying* thread — it must depend only on
+        shared state (never thread identity), and a side-effecting
+        predicate (mailbox match-and-pop) runs to a True result exactly
+        once per park. It must not touch this stripe's lock-ordered
+        resources beyond its own state."""
         stripe = self._stripe(channel)
         deadline = None if timeout is None else time.monotonic() + timeout
 
@@ -487,7 +624,48 @@ class ProgressEngine:
                         return True
                 time.sleep(0)  # yield the GIL between probes
 
-        # -- park phase -----------------------------------------------------
+        if not self.wait_queues:
+            return self._park_legacy(stripe, channel, predicate, deadline, budget, spin_s)
+
+        # -- park phase: per-channel wait queue -----------------------------
+        first = True
+        with stripe.held():
+            w = _Waiter(stripe.lock, predicate)
+            self._register_waiter(stripe, channel, w)
+            try:
+                while True:
+                    if w.satisfied:
+                        # a notify evaluated our predicate to True (and, for
+                        # consuming predicates, already popped our match)
+                        return True
+                    if predicate():
+                        w.satisfied = True
+                        return True
+                    if deadline is not None and time.monotonic() >= deadline:
+                        return False
+                    if first and budget > 0.0 and self.adaptive_spin and spin_s is None:
+                        # the spin missed: shrink this stripe's budget
+                        stripe.spin_budget = max(
+                            self.spin_s / _SPIN_SHRINK_MAX, stripe.spin_budget / 2.0
+                        )
+                    first = False
+                    slice_s = _PARK_RECHECK_S
+                    if deadline is not None:
+                        slice_s = min(slice_s, max(0.0, deadline - time.monotonic()))
+                    stripe.parks += 1
+                    stripe.chan_parks[channel] = stripe.chan_parks.get(channel, 0) + 1
+                    stripe.parked_now += 1
+                    try:
+                        w.cv.wait(timeout=slice_s)
+                    finally:
+                        stripe.parked_now -= 1
+                    stripe.wakes += 1
+            finally:
+                self._deregister_waiter(stripe, channel, w)
+
+    def _park_legacy(self, stripe, channel, predicate, deadline, budget, spin_s) -> bool:
+        """Pre-wait-queue park: wait on the shared stripe CV; every notify
+        on the stripe wakes every parked thread (the herd baseline)."""
         first = True
         while True:
             with stripe.held():
@@ -505,7 +683,12 @@ class ProgressEngine:
                 if deadline is not None:
                     slice_s = min(slice_s, max(0.0, deadline - time.monotonic()))
                 stripe.parks += 1
-                stripe.cv.wait(timeout=slice_s)
+                stripe.chan_parks[channel] = stripe.chan_parks.get(channel, 0) + 1
+                stripe.parked_now += 1
+                try:
+                    stripe.cv.wait(timeout=slice_s)
+                finally:
+                    stripe.parked_now -= 1
                 stripe.wakes += 1
 
     def has_poller(self, channel: int) -> bool:
@@ -554,6 +737,7 @@ class ProgressEngine:
                 still = []
                 for r in q:
                     stripe.polls += 1
+                    stripe.chan_polls[ch] = stripe.chan_polls.get(ch, 0) + 1
                     if r._poll():
                         if self._retire_locked(stripe, r):
                             completed += 1
@@ -563,7 +747,9 @@ class ProgressEngine:
                     q[:] = still
                 else:
                     del stripe.queues[ch]
-            if completed:
+            if completed and not self.wait_queues:
+                # legacy broadcast; with wait queues each completion already
+                # ran its targeted notify_channel done-callback
                 stripe.cv.notify_all()
         return completed
 
@@ -600,6 +786,7 @@ class ProgressEngine:
                 retired = []
                 for g in group:
                     stripe.polls += 1
+                    stripe.chan_polls[ch] = stripe.chan_polls.get(ch, 0) + 1
                     if g._poll():
                         self._retire_locked(stripe, g)
                         retired.append(g)
@@ -673,6 +860,90 @@ class ProgressEngine:
             for r in reqs:
                 r.remove_done_callback(_wake)
 
+    def wait_any(
+        self, reqs: Sequence[GeneralizedRequest], timeout: Optional[float] = None
+    ) -> Optional[GeneralizedRequest]:
+        """``MPI_Waitany`` over a mixed request set: block until the
+        *first* request completes (or is cancelled) and return it.
+        Returns ``None`` on timeout and for an empty sequence (the
+        ``MPI_UNDEFINED`` cases). Already-done requests short-circuit —
+        the lowest-indexed done request wins; among live requests the one
+        whose completion lands first wins (simultaneous completions
+        resolve in completion-callback order).
+
+        The waiting discipline mirrors :meth:`wait_all`: spin briefly,
+        then park on a per-wait CV pinged by request completion when
+        every pending request is covered (externally completed or polled
+        by a progress thread), else actively progress the pending
+        streams. Batched ``wait_fn`` hooks are NOT invoked — they block
+        on whole batches, the opposite of first-completion. A completion
+        racing the deadline is never lost: the final timeout check
+        re-reads the completion slot."""
+        reqs = list(reqs)
+        if not reqs:
+            return None
+        for r in reqs:
+            if r.done:
+                return r
+        deadline = None if timeout is None else time.monotonic() + timeout
+
+        waiter_cv = threading.Condition()
+        first: List[GeneralizedRequest] = []
+
+        def _wake(r):
+            with waiter_cv:
+                first.append(r)
+                waiter_cv.notify_all()
+            with self._meta_lock:
+                self._waiter_wakes += 1
+
+        for r in reqs:
+            r.add_done_callback(_wake)
+        try:
+            # spin phase (waiter side), as in wait_all
+            if self.spin_s > 0.0:
+                spin_deadline = time.monotonic() + self.spin_s
+                if deadline is not None:
+                    spin_deadline = min(spin_deadline, deadline)
+                while time.monotonic() < spin_deadline:
+                    with waiter_cv:
+                        if first:
+                            with self._meta_lock:
+                                self._waiter_spin_hits += 1
+                            return first[0]
+                    time.sleep(0)
+            while True:
+                with waiter_cv:
+                    if first:
+                        return first[0]
+                if deadline is not None and time.monotonic() >= deadline:
+                    with waiter_cv:  # completion-vs-timeout race: re-read
+                        return first[0] if first else None
+                pending = [r for r in reqs if not r.done]
+                if not pending:
+                    # every request done yet no callback recorded (detached
+                    # by a concurrent waiter): fall back to done order
+                    return next(r for r in reqs if r.done)
+                if self._can_park(pending):
+                    slice_s = _PARK_RECHECK_S
+                    if deadline is not None:
+                        slice_s = min(slice_s, max(0.0, deadline - time.monotonic()))
+                    with waiter_cv:
+                        if not first:
+                            with self._meta_lock:
+                                self._waiter_parks += 1
+                            waiter_cv.wait(timeout=slice_s)
+                else:
+                    seen = set()
+                    for r in pending:
+                        if r.stream.channel not in seen:
+                            seen.add(r.stream.channel)
+                            self.progress(r.stream)
+                    time.sleep(0)  # yield between active rounds
+        finally:
+            for r in reqs:
+                r.remove_done_callback(_wake)
+
     def _can_park(self, pending: Sequence[GeneralizedRequest]) -> bool:
         """A waiter may park iff no pending request depends on *us* to poll:
         either it completes externally (no poll_fn) or a running progress
@@ -695,22 +966,26 @@ class ProgressEngine:
     # -- progress threads (spin-up / spin-down) ---------------------------
     def start_progress_thread(
         self, stream: MPIXStream = STREAM_NULL, interval: float = 0.0, park: bool = True
-    ) -> None:
+    ) -> bool:
         """``MPIX_Start_progress_thread``: background poller for one stream.
         ``interval`` throttles polling; ``park=True`` (default) parks the
         thread on the stripe CV whenever its queue needs no host polling —
         the user-controlled knob the paper argues for. ``park=False`` with
         ``interval=0`` reproduces the busy-spin ``MPIR_CVAR_ASYNC_PROGRESS``
-        baseline the benchmarks compare against."""
+        baseline the benchmarks compare against. Returns True iff a new
+        thread was started (False: the channel already has one — callers
+        that manage thread lifetimes, like the autotuner, must not adopt
+        somebody else's thread)."""
         key = stream.channel
         with self._threads_lock:
             if key in self._threads:
-                return
+                return False
             t = _ProgressThread(self, stream, interval, park)
             self._threads[key] = t
             if stream.is_null:
                 self._null_thread_active = True
         t.start()
+        return True
 
     def stop_progress_thread(self, stream: MPIXStream = STREAM_NULL) -> None:
         """``MPIX_Stop_progress_thread``."""
@@ -732,6 +1007,19 @@ class ProgressEngine:
         for t in threads:
             t.join(timeout=5.0)
 
+    def autotune(self, policy: Optional["AutotunePolicy"] = None) -> "Autotuner":
+        """Build a stats()-driven :class:`Autotuner` for this engine: it
+        samples per-channel activity (``stats(per_channel=True)``) and
+        promotes hot channels onto dedicated progress threads / demotes
+        idle ones, with hysteresis so placement never flaps. Drive it
+        deterministically with :meth:`Autotuner.tick` (e.g. once per
+        training step) or run it on a cadence with
+        :meth:`Autotuner.start`. Replaces hand-placed
+        ``start_progress_thread`` calls in the consumers; hand-placed
+        threads are respected (never demoted, their channels never
+        double-covered)."""
+        return Autotuner(self, policy or AutotunePolicy())
+
     def pending(self, stream: Optional[MPIXStream] = None) -> int:
         if stream is None or stream.is_null:
             n = 0
@@ -744,14 +1032,20 @@ class ProgressEngine:
             return len(stripe.queues.get(stream.channel, ()))
 
     # -- instrumentation ---------------------------------------------------
-    def stats(self, per_stripe: bool = False) -> dict:
+    def stats(self, per_stripe: bool = False, per_channel: bool = False) -> dict:
         """Engine counters. ``polls`` = request poll visits, ``visits`` =
         stripe scans, ``lock_waits`` = contended stripe-lock acquisitions,
         ``parks``/``wakes`` = CV park/wake events (waiter- and
         progress-thread-side combined), ``spin_hits`` = blocked callers
-        satisfied during the spin phase (no CV park paid),
-        ``thread_loops`` = progress-thread loop iterations (the idle-CPU
-        proxy)."""
+        satisfied during the spin phase (no CV park paid), ``notifies`` =
+        :meth:`notify_channel` calls, ``notify_wakeups`` = waiters those
+        notifies actually woke (wakeups/notify is the herd factor),
+        ``notify_skips`` = parked waiters a notify left asleep (predicate
+        miss — always 0 in legacy broadcast mode), ``thread_loops`` =
+        progress-thread loop iterations (the idle-CPU proxy).
+        ``per_channel=True`` adds ``channels``: per-VCI activity
+        (enqueued/polls/parks deltas + pending queue depth) — the
+        autotuner's sampling surface."""
         out = {
             "polls": 0,
             "completions": 0,
@@ -762,8 +1056,12 @@ class ProgressEngine:
             "spin_hits": 0,
             "enqueued": 0,
             "progress_calls": 0,
+            "notifies": 0,
+            "notify_wakeups": 0,
+            "notify_skips": 0,
         }
         stripes = []
+        channels: Dict[int, Dict[str, int]] = {}
         for s in self._stripes:
             with s.held():
                 row = {
@@ -778,8 +1076,24 @@ class ProgressEngine:
                     "spin_budget_s": s.spin_budget,
                     "enqueued": s.enqueued,
                     "progress_calls": s.progress_calls,
+                    "notifies": s.notifies,
+                    "notify_wakeups": s.notify_wakeups,
+                    "notify_skips": s.notify_skips,
                     "pending": sum(len(q) for q in s.queues.values()),
                 }
+                if per_channel:
+                    keys = (
+                        set(s.chan_enqueued) | set(s.chan_polls)
+                        | set(s.chan_parks) | set(s.queues)
+                    )
+                    for c in keys:
+                        crow = channels.setdefault(
+                            c, {"enqueued": 0, "polls": 0, "parks": 0, "pending": 0}
+                        )
+                        crow["enqueued"] += s.chan_enqueued.get(c, 0)
+                        crow["polls"] += s.chan_polls.get(c, 0)
+                        crow["parks"] += s.chan_parks.get(c, 0)
+                        crow["pending"] += len(s.queues.get(c, ()))
             stripes.append(row)
             for k in (
                 "polls",
@@ -791,6 +1105,9 @@ class ProgressEngine:
                 "spin_hits",
                 "enqueued",
                 "progress_calls",
+                "notifies",
+                "notify_wakeups",
+                "notify_skips",
             ):
                 out[k] += row[k]
         with self._meta_lock:
@@ -805,6 +1122,8 @@ class ProgressEngine:
             out["n_progress_threads"] = len(self._threads)
         if per_stripe:
             out["stripes"] = stripes
+        if per_channel:
+            out["channels"] = channels
         return out
 
     def reset_stats(self) -> None:
@@ -813,6 +1132,10 @@ class ProgressEngine:
                 s.polls = s.completions = s.visits = 0
                 s.lock_waits = s.parks = s.wakes = s.spin_hits = 0
                 s.enqueued = s.progress_calls = 0
+                s.notifies = s.notify_wakeups = s.notify_skips = 0
+                s.chan_enqueued.clear()
+                s.chan_polls.clear()
+                s.chan_parks.clear()
         with self._meta_lock:
             self._waiter_parks = self._waiter_wakes = self._waiter_spin_hits = 0
 
@@ -880,7 +1203,17 @@ class _ProgressThread(threading.Thread):
                 with stripe.held():
                     if self.state == self.BUSY and not self._work_ready(channel):
                         stripe.parks += 1
-                        stripe.cv.wait(timeout=_PARK_RECHECK_S)
+                        if eng.wait_queues:
+                            # kick waiter: woken by new work on this channel
+                            # (grequest_start) or a broad stripe kick
+                            w = _Waiter(stripe.lock, None)
+                            eng._register_waiter(stripe, stream.channel, w)
+                            try:
+                                w.cv.wait(timeout=_PARK_RECHECK_S)
+                            finally:
+                                eng._deregister_waiter(stripe, stream.channel, w)
+                        else:
+                            stripe.cv.wait(timeout=_PARK_RECHECK_S)
                         stripe.wakes += 1
                         parked = True
                 if not parked:
@@ -903,6 +1236,184 @@ class _ProgressThread(threading.Thread):
                 if s.needs_polling(None):
                     return True
         return False
+
+
+# ----------------------------------------------------------------------
+# The stats()-driven progress autotuner
+# ----------------------------------------------------------------------
+
+
+@dataclass
+class AutotunePolicy:
+    """Knobs for the stats()-driven autotuner.
+
+    Each :meth:`Autotuner.tick` scores every channel from the engine's
+    per-channel counters: ``score = Δenqueued + Δpolls + Δparks +
+    pending`` (deltas since the previous tick; ``pending`` counts queued
+    requests, so demand on an *uncovered* channel scores hot even before
+    anyone polls it). A channel scoring ``>= promote_score`` for
+    ``hysteresis_up`` consecutive ticks is promoted onto a dedicated
+    progress thread (up to ``max_threads``); a *promoted* channel scoring
+    ``<= demote_score`` for ``hysteresis_down`` consecutive ticks is
+    demoted. The open band between the two thresholds holds the current
+    placement — together with the streak requirements this is the
+    hysteresis that keeps the tuner from flapping on bursty load."""
+
+    interval: float = 0.05  # background tick period (Autotuner.start)
+    promote_score: float = 4.0  # per-tick activity that counts as hot
+    demote_score: float = 0.0  # per-tick activity that counts as idle
+    hysteresis_up: int = 2  # consecutive hot ticks before promoting
+    hysteresis_down: int = 4  # consecutive idle ticks before demoting
+    max_threads: int = 4  # cap on autotuner-managed progress threads
+    thread_interval: float = 0.0  # interval= for promoted threads
+    park: bool = True  # park= for promoted threads
+
+    def __post_init__(self):
+        if self.demote_score >= self.promote_score:
+            raise ValueError(
+                "AutotunePolicy: demote_score must sit strictly below "
+                "promote_score (the gap is the hysteresis band)"
+            )
+        if self.hysteresis_up < 1 or self.hysteresis_down < 1:
+            raise ValueError("AutotunePolicy: hysteresis streaks must be >= 1")
+        if self.max_threads < 1:
+            raise ValueError("AutotunePolicy: max_threads must be >= 1")
+
+
+class Autotuner:
+    """Moves hot streams onto dedicated progress threads, off ``stats()``.
+
+    Created via :meth:`ProgressEngine.autotune`. ``tick()`` is one
+    sampling + decision step — deterministic given the counter deltas, so
+    tests and training loops drive it directly; ``start()`` runs it on
+    ``policy.interval`` in a daemon thread. The tuner only ever stops
+    threads it started itself (``placements()``); channels already
+    covered by a hand-placed or NULL-stream progress thread are skipped.
+    """
+
+    def __init__(self, engine: ProgressEngine, policy: AutotunePolicy):
+        self.engine = engine
+        self.policy = policy
+        self._lock = threading.Lock()
+        self._managed: Dict[int, MPIXStream] = {}
+        self._last: Dict[int, Tuple[int, int, int]] = {}
+        self._hot: Dict[int, int] = {}  # consecutive hot-tick streaks
+        self._idle: Dict[int, int] = {}  # consecutive idle-tick streaks
+        self._scores: Dict[int, float] = {}
+        self._ticks = 0
+        self._promotions = 0
+        self._demotions = 0
+        self._thread: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
+
+    # -- one decision step -------------------------------------------------
+    def tick(self) -> dict:
+        """Sample per-channel activity and apply the policy once. Returns
+        ``{"promoted": [...], "demoted": [...], "scores": {...}}``."""
+        pol = self.policy
+        chans = self.engine.stats(per_channel=True)["channels"]
+        with self._lock:
+            self._ticks += 1
+            promoted: List[int] = []
+            demoted: List[int] = []
+            scores: Dict[int, float] = {}
+            for c, row in sorted(chans.items()):
+                if c < 0:
+                    continue  # the implicit channel belongs to NULL threads
+                prev = self._last.get(c, (0, 0, 0))
+                cur = (row["enqueued"], row["polls"], row["parks"])
+                self._last[c] = cur
+                # clamp: a reset_stats() mid-flight re-baselines, not demotes
+                delta = sum(max(0, a - b) for a, b in zip(cur, prev))
+                score = delta + row["pending"]
+                scores[c] = score
+                if score >= pol.promote_score:
+                    self._hot[c] = self._hot.get(c, 0) + 1
+                    self._idle.pop(c, None)
+                elif score <= pol.demote_score:
+                    self._idle[c] = self._idle.get(c, 0) + 1
+                    self._hot.pop(c, None)
+                else:
+                    # the hysteresis band: hold the current placement
+                    self._hot.pop(c, None)
+                    self._idle.pop(c, None)
+                if (
+                    c not in self._managed
+                    and self._hot.get(c, 0) >= pol.hysteresis_up
+                    and len(self._managed) < pol.max_threads
+                    and not self.engine.has_poller(c)
+                ):
+                    stream = MPIXStream(
+                        sid=-2, name=f"autotune-ch{c}", kind="compute", channel=c
+                    )
+                    if self.engine.start_progress_thread(
+                        stream, interval=pol.thread_interval, park=pol.park
+                    ):
+                        self._managed[c] = stream
+                        self._promotions += 1
+                        promoted.append(c)
+                    # else: a thread appeared on this channel between the
+                    # has_poller check and here (e.g. a spun-down hand-placed
+                    # one) — never adopt it; demoting it later would stop a
+                    # thread the user owns
+                    self._hot.pop(c, None)
+                elif c in self._managed and self._idle.get(c, 0) >= pol.hysteresis_down:
+                    self.engine.stop_progress_thread(self._managed.pop(c))
+                    self._demotions += 1
+                    self._idle.pop(c, None)
+                    demoted.append(c)
+            self._scores = scores
+            return {"promoted": promoted, "demoted": demoted, "scores": scores}
+
+    # -- background mode ---------------------------------------------------
+    def start(self) -> "Autotuner":
+        """Tick on ``policy.interval`` in a daemon thread (idempotent)."""
+        with self._lock:
+            if self._thread is not None:
+                return self
+            self._stop_evt.clear()
+            self._thread = threading.Thread(
+                target=self._loop, name="progress-autotune", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop_evt.wait(self.policy.interval):
+            self.tick()
+
+    def stop(self, demote: bool = True) -> None:
+        """Stop the background thread; ``demote=True`` (default) also
+        spins down every thread the tuner started."""
+        with self._lock:
+            t, self._thread = self._thread, None
+        if t is not None:
+            self._stop_evt.set()
+            t.join(timeout=5.0)
+        if demote:
+            with self._lock:
+                managed = dict(self._managed)
+                self._managed.clear()
+            for stream in managed.values():
+                self.engine.stop_progress_thread(stream)
+                with self._lock:
+                    self._demotions += 1
+
+    # -- introspection -----------------------------------------------------
+    def placements(self) -> List[int]:
+        """Channels currently covered by autotuner-managed threads."""
+        with self._lock:
+            return sorted(self._managed)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "ticks": self._ticks,
+                "promotions": self._promotions,
+                "demotions": self._demotions,
+                "active": sorted(self._managed),
+                "scores": dict(self._scores),
+            }
 
 
 # ----------------------------------------------------------------------
@@ -933,8 +1444,8 @@ def start_progress_thread(
     interval: float = 0.0,
     engine: Optional[ProgressEngine] = None,
     park: bool = True,
-) -> None:
-    (engine or _default_engine).start_progress_thread(stream, interval, park)
+) -> bool:
+    return (engine or _default_engine).start_progress_thread(stream, interval, park)
 
 
 def stop_progress_thread(stream: MPIXStream = STREAM_NULL, engine: Optional[ProgressEngine] = None) -> None:

@@ -16,9 +16,11 @@ and a blocked rank parks on its stripe CV rather than spinning:
   float reductions are reproducible run-to-run);
 * :func:`allreduce` — reduce → bcast (two trees; matches the numpy
   oracle the tests compare against);
-* :func:`alltoall`  — rotation schedule (offset d: send to ``rank+d``,
-  recv from ``rank-d``); sends are non-blocking mailbox appends so the
-  rotation cannot deadlock.
+* :func:`alltoall`  — rotation send schedule (offset d: send to
+  ``rank+d``), receives posted up front (irecv) and drained in
+  *completion order* through the engine's ``wait_any`` — one slow peer
+  never serializes the other deliveries; sends are non-blocking mailbox
+  handoffs so the rotation cannot deadlock.
 
 Every collective call consumes one *sequence number* from the calling
 rank's handle, and every internal message is tagged
@@ -35,6 +37,7 @@ broadcast-match across ranks.
 
 from __future__ import annotations
 
+from time import monotonic as _monotonic
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
@@ -139,8 +142,14 @@ def allreduce(h, value, op: Union[str, Callable] = "sum",
 
 def alltoall(h, items: Sequence, timeout: Optional[float] = None) -> List:
     """Personalized all-to-all: ``items[j]`` goes to rank ``j``; returns
-    ``out`` with ``out[i]`` = the item rank ``i`` addressed to us. Uses a
-    rotation schedule; slot ``rank`` is a local move."""
+    ``out`` with ``out[i]`` = the item rank ``i`` addressed to us.
+
+    Rotation *send* schedule (offset d: send to ``rank+d``), but the
+    receive side posts every expected message up front (irecv) and drains
+    via the engine's ``wait_any`` — arrivals are handed over in whatever
+    order they land, so one slow peer never serializes the other n-2
+    deliveries behind a fixed recv order (the result is indexed by
+    source, hence deterministic regardless of completion order)."""
     n = h.comm.nthreads
     seq = h._next_coll_seq()
     if len(items) != n:
@@ -148,9 +157,28 @@ def alltoall(h, items: Sequence, timeout: Optional[float] = None) -> List:
     r = h.rank
     out: List = [None] * n
     out[r] = items[r]
+    if n == 1:
+        return out
+    posted = [h.irecv(src=(r - d) % n, tag=(_COLL, "a2a", seq, d)) for d in range(1, n)]
     for d in range(1, n):
         h.send((r + d) % n, items[(r + d) % n], tag=(_COLL, "a2a", seq, d))
-        out[(r - d) % n] = h.recv(
-            src=(r - d) % n, tag=(_COLL, "a2a", seq, d), timeout=timeout
-        )
+    engine = h.comm.engine
+    deadline = None if timeout is None else _monotonic() + timeout
+    pending = {id(f.grequest): f for f in posted}
+    while pending:
+        remaining = None if deadline is None else max(0.0, deadline - _monotonic())
+        got = engine.wait_any([f.grequest for f in pending.values()], remaining)
+        if got is None:
+            # withdraw the outstanding posts before raising: an abandoned
+            # live post would silently swallow a late peer's send (which
+            # should instead surface as undelivered at finish()) and leak
+            # its request in the engine queue
+            for f in pending.values():
+                if not f.cancel():
+                    out[f.source] = f.payload  # fulfilled while cancelling
+            raise TimeoutError(
+                f"alltoall: rank {r} timed out with {len(pending)} recv(s) outstanding"
+            )
+        f = pending.pop(id(got))
+        out[f.source] = f.payload
     return out

@@ -66,7 +66,7 @@ except ImportError:  # newer jax promoted it to the top level
     from jax import shard_map as _jax_shard_map
 
 from repro.core import threadcoll
-from repro.core.progress import ProgressEngine, default_engine
+from repro.core.progress import GeneralizedRequest, ProgressEngine, default_engine
 from repro.core.streams import (
     StreamComm,
     MPIXStream,
@@ -99,7 +99,9 @@ __all__ = [
     "flatten_comm",
     "split_comm",
     "ANY_SOURCE",
+    "ANY_TAG",
     "ThreadRank",
+    "RecvFuture",
     "HostThreadComm",
     "HybridThreadComm",
     "host_threadcomm_init",
@@ -109,6 +111,28 @@ __all__ = [
 
 #: Wildcard source rank for :meth:`ThreadRank.recv` (MPI_ANY_SOURCE).
 ANY_SOURCE = -1
+
+
+class _AnyTag:
+    """Singleton wildcard tag (MPI_ANY_TAG). Matches any *user* tag;
+    collective-internal traffic (tags namespaced by
+    :mod:`repro.core.threadcoll`) is never matched, so a wildcard recv
+    can't steal a barrier/bcast hop racing through the same mailbox."""
+
+    __slots__ = ()
+
+    def __repr__(self) -> str:
+        return "ANY_TAG"
+
+
+ANY_TAG = _AnyTag()
+
+
+def _tag_matches(want, t) -> bool:
+    """Does a recv/probe asking for ``want`` match a message tagged ``t``?"""
+    if want is ANY_TAG:
+        return not (isinstance(t, tuple) and t and t[0] == threadcoll._COLL)
+    return t == want
 
 
 @dataclass(frozen=True)
@@ -236,27 +260,118 @@ def split_comm(comm: ThreadComm, keep: Sequence[str]) -> ThreadComm:
 
 class _Mailbox:
     """One rank's inbound queue: (src, tag, payload) triples, FIFO per
-    (src, tag) pair. All access happens inside the receiver's VCI channel
-    critical section (``engine.channel_section``), which is the same
-    stripe lock its blocked recv parks on — append + notify is therefore
-    race-free against the park predicate."""
+    (src, tag) pair, plus the rank's *posted receives* (irecv futures
+    matched at send time). All access happens inside the receiver's VCI
+    channel critical section (``engine.channel_section``), which is the
+    same stripe lock its blocked recv parks on — append + notify is
+    therefore race-free against the park predicate."""
 
-    __slots__ = ("messages", "delivered")
+    __slots__ = ("messages", "pending", "delivered")
 
     def __init__(self):
         self.messages: deque = deque()
+        # posted receives, FIFO by post order: (src, tag, state) with
+        # ``state`` the irecv grequest's extra_state dict
+        self.pending: deque = deque()
         self.delivered = 0
 
     def match_pop(self, src: int, tag):
         """Pop the first message matching (src, tag); ANY_SOURCE matches
-        any sender. Returns the (src, tag, payload) triple or None."""
+        any sender, ANY_TAG any non-collective tag. Returns the
+        (src, tag, payload) triple or None."""
         for i, (s, t, _p) in enumerate(self.messages):
-            if (src == ANY_SOURCE or s == src) and t == tag:
+            if (src == ANY_SOURCE or s == src) and _tag_matches(tag, t):
                 m = self.messages[i]
                 del self.messages[i]
                 self.delivered += 1
                 return m
         return None
+
+    def match_peek(self, src: int, tag):
+        """First message matching (src, tag) WITHOUT removing it — the
+        probe/iprobe primitive (the no-steal guarantee is exactly this:
+        a probe never dequeues)."""
+        for (s, t, _p) in self.messages:
+            if (src == ANY_SOURCE or s == src) and _tag_matches(tag, t):
+                return (s, t, _p)
+        return None
+
+    def match_pending(self, sender: int, tag):
+        """First *posted receive* this incoming (sender, tag) message can
+        fulfill, removed from the post queue; None if none matches.
+        Posted receives beat mailbox parking: a message is handed to the
+        earliest-posted matching irecv before it ever hits the queue."""
+        for i, (want_src, want_tag, state) in enumerate(self.pending):
+            if (want_src == ANY_SOURCE or want_src == sender) and _tag_matches(want_tag, tag):
+                entry = self.pending[i]
+                del self.pending[i]
+                self.delivered += 1
+                return entry
+        return None
+
+
+@dataclass
+class RecvFuture:
+    """Handle for a posted receive (:meth:`ThreadRank.irecv`): completes
+    when a matching send lands (the sender fulfills it inside the
+    destination channel's critical section — the message never touches
+    the mailbox queue). ``payload``/``source``/``tag`` are valid once
+    matched; :meth:`wait` blocks through the engine's parking wait, and
+    the underlying ``grequest`` composes with
+    :meth:`~repro.core.progress.ProgressEngine.wait_any` — block on the
+    first of several posted receives. A post you no longer want must be
+    :meth:`cancel`-ed — an abandoned live post would swallow a later
+    matching send and leak its request in the engine queue."""
+
+    grequest: GeneralizedRequest
+    engine: ProgressEngine
+    _withdraw: Optional[Callable[[], bool]] = None
+
+    @property
+    def matched(self) -> bool:
+        return self.grequest.extra_state["matched"]
+
+    @property
+    def done(self) -> bool:
+        return self.grequest.done
+
+    def _state(self, field_name: str):
+        st = self.grequest.extra_state
+        if not st["matched"]:
+            raise RuntimeError("RecvFuture: receive not matched yet")
+        return st[field_name]
+
+    @property
+    def payload(self):
+        return self._state("payload")
+
+    @property
+    def source(self) -> int:
+        return self._state("src")
+
+    @property
+    def tag(self):
+        return self._state("tag")
+
+    def wait(self, timeout: Optional[float] = None):
+        """Block until matched; returns the payload. Raises TimeoutError
+        on timeout — the post stays live (a later send still fulfills
+        it); call :meth:`cancel` to withdraw it instead."""
+        if not self.engine.wait(self.grequest, timeout):
+            raise TimeoutError("RecvFuture: wait timed out")
+        if not self.matched:
+            raise RuntimeError("RecvFuture: receive cancelled (epoch finished?)")
+        return self.payload
+
+    def cancel(self) -> bool:
+        """Withdraw the post. Returns True if it was still unmatched (the
+        post is removed and the request cancelled so the engine can sweep
+        it); False if a send already fulfilled it — the payload is yours
+        and must be consumed."""
+        if self._withdraw is not None and self._withdraw():
+            self.grequest.cancel()
+            return True
+        return False
 
 
 @dataclass
@@ -281,7 +396,28 @@ class ThreadRank:
         self.comm._send(self, dst, obj, tag)
 
     def recv(self, src: int = ANY_SOURCE, tag=0, timeout: Optional[float] = None):
+        """Blocking receive. ``src=ANY_SOURCE`` / ``tag=ANY_TAG`` wildcard
+        over senders / user tags (earliest-delivered message wins)."""
         return self.comm._recv(self, src, tag, timeout)
+
+    def irecv(self, src: int = ANY_SOURCE, tag=0) -> RecvFuture:
+        """Post a receive (``MPI_Irecv``): returns a :class:`RecvFuture`
+        the matching send completes. Posted receives are matched FIFO by
+        post order, ahead of any mailbox-parked blocking recv."""
+        return self.comm._irecv(self, src, tag)
+
+    def probe(self, src: int = ANY_SOURCE, tag=0, timeout: Optional[float] = None):
+        """Block until a matching message is *available* without
+        receiving it (``MPI_Probe``): returns its (src, tag) envelope.
+        The message stays queued — a following recv gets it."""
+        return self.comm._probe(self, src, tag, timeout)
+
+    def iprobe(self, src: int = ANY_SOURCE, tag=0):
+        """Non-blocking probe (``MPI_Iprobe``): the (src, tag) envelope of
+        the first matching queued message, or None. Never dequeues — the
+        no-steal guarantee (repeated iprobes see the same message until
+        someone recvs it)."""
+        return self.comm._iprobe(self, src, tag)
 
     # -- collectives (threadcoll algorithms over the pt2pt layer) --------
     def barrier(self, timeout: Optional[float] = None) -> None:
@@ -498,6 +634,11 @@ class HostThreadComm:
                 )
             for mb in self._mailboxes:
                 mb.messages.clear()
+                # dangling posted receives (irecv never matched): cancel so
+                # any future wait on them wakes instead of hanging forever
+                for (_s, _t, state) in mb.pending:
+                    state["request"].cancel()
+                mb.pending.clear()
             streams = self._streams if not self.shared_channel else self._streams[:1]
             for s in streams:
                 self.pool.free(s)
@@ -514,30 +655,121 @@ class HostThreadComm:
             )
 
     def _send(self, handle: ThreadRank, dst: int, obj, tag) -> None:
-        """Zero-copy handoff: the payload *reference* is appended to the
-        destination's mailbox inside the destination channel's critical
-        section, then that channel's stripe is notified — the paper's
-        single-queue-hop small-message shortcut (no request object)."""
+        """Zero-copy handoff: inside the destination channel's critical
+        section the message first tries to fulfill the earliest-posted
+        matching receive (irecv) — handed over without ever touching the
+        queue — else the payload *reference* is appended to the
+        destination's mailbox; then that channel is notified — the
+        paper's single-queue-hop small-message shortcut (no request
+        object on the mailbox path)."""
         self._check_handle(handle)
         if not (0 <= dst < self.nthreads):
             raise ValueError(f"send dst {dst} out of range [0, {self.nthreads})")
         dst_ch = self._streams[dst].channel
+        matched = None
         with self.engine.channel_section(dst_ch):
-            self._mailboxes[dst].messages.append((handle.rank, tag, obj))
+            entry = self._mailboxes[dst].match_pending(handle.rank, tag)
+            if entry is not None:
+                _ws, _wt, state = entry
+                state["payload"] = obj
+                state["src"] = handle.rank
+                state["tag"] = tag
+                state["matched"] = True
+                matched = state
+            else:
+                self._mailboxes[dst].messages.append((handle.rank, tag, obj))
         handle.sends += 1
         if self.heartbeat is not None:
             self.heartbeat.record(handle.rank)
-        self.engine.notify_channel(dst_ch)
+        if matched is not None:
+            # outside the critical section: completion callbacks (wait/
+            # wait_any wakeups) must not run under the stripe lock
+            matched["request"].complete()
+        else:
+            self.engine.notify_channel(dst_ch)
+
+    def _irecv(self, handle: ThreadRank, src: int, tag) -> RecvFuture:
+        """Post a receive on the handle's mailbox: matched immediately if
+        a queued message fits, else parked in the post queue for
+        :meth:`_send` to fulfill. All under the channel's critical
+        section, so post vs. deliver cannot race."""
+        self._check_handle(handle)
+        if src != ANY_SOURCE and not (0 <= src < self.nthreads):
+            raise ValueError(f"irecv src {src} out of range [0, {self.nthreads})")
+        mb = self._mailboxes[handle.rank]
+        state = {"payload": None, "src": None, "tag": None, "matched": False, "request": None}
+        req = self.engine.grequest_start(
+            extra_state=state, stream=handle.stream, name=f"tc-irecv-r{handle.rank}"
+        )
+        state["request"] = req
+        complete_now = False
+        with self.engine.channel_section(handle.channel):
+            m = mb.match_pop(src, tag)
+            if m is not None:
+                state["payload"] = m[2]
+                state["src"] = m[0]
+                state["tag"] = m[1]
+                state["matched"] = True
+                complete_now = True
+            else:
+                mb.pending.append((src, tag, state))
+        if complete_now:
+            req.complete()
+        return RecvFuture(req, self.engine, lambda: self._cancel_post(handle, state))
+
+    def _cancel_post(self, handle: ThreadRank, state: dict) -> bool:
+        """Withdraw a posted receive (recv-timeout path). Returns True if
+        the post was still unmatched and is now removed; False if a send
+        fulfilled it concurrently (the caller owns the payload)."""
+        mb = self._mailboxes[handle.rank]
+        with self.engine.channel_section(handle.channel):
+            for i, (_s, _t, st) in enumerate(mb.pending):
+                if st is state:
+                    del mb.pending[i]
+                    return True
+        return False
 
     def _recv(self, handle: ThreadRank, src: int, tag, timeout: Optional[float]):
-        """Blocking receive on the handle's own mailbox. The match-and-pop
-        runs inside the park predicate — i.e. under the rank's stripe
-        lock — so a wake and a steal cannot race; a blocked recv parks
-        (spin-then-park) on the rank's own VCI stripe instead of
-        polling."""
+        """Blocking receive on the handle's own mailbox.
+
+        Directed (``src`` given): the match-and-pop runs inside the park
+        predicate — i.e. under the rank's stripe lock — so a wake and a
+        steal cannot race; a blocked recv parks (spin-then-park) on the
+        rank's own per-channel wait queue instead of polling, and the
+        sender's notify wakes only the matching waiter.
+
+        ``ANY_SOURCE``: the recv posts itself (irecv) and blocks in
+        ``engine.wait_any`` — the sender fulfills the post directly and
+        completes the request, waking the waiter with zero polling. A
+        timeout withdraws the post, so a later send can never vanish
+        into a dead receive."""
         self._check_handle(handle)
         if src != ANY_SOURCE and not (0 <= src < self.nthreads):
             raise ValueError(f"recv src {src} out of range [0, {self.nthreads})")
+        if src == ANY_SOURCE:
+            fut = self._irecv(handle, src, tag)
+            got = self.engine.wait_any([fut.grequest], timeout)
+            state = fut.grequest.extra_state
+            if got is None and fut.cancel():
+                # withdrawn AND its request cancelled: nothing leaks into
+                # the engine queue, and a later send lands in the mailbox
+                raise TimeoutError(
+                    f"HostThreadComm({self.name}): rank {handle.rank} recv(src=ANY_SOURCE, "
+                    f"tag={tag!r}) timed out after {timeout}s"
+                )
+            if not state["matched"]:
+                # completed without a payload: the post was cancelled out
+                # from under us (epoch finish) — never fabricate a message
+                raise RuntimeError(
+                    f"HostThreadComm({self.name}): rank {handle.rank} recv(src=ANY_SOURCE) "
+                    "cancelled before a message arrived"
+                )
+            # matched (possibly racing the timeout: the cancel lost — the
+            # message is ours and must not be dropped)
+            handle.recvs += 1
+            if self.heartbeat is not None:
+                self.heartbeat.record(handle.rank)
+            return state["payload"]
         mb = self._mailboxes[handle.rank]
         found: List = []
 
@@ -559,6 +791,43 @@ class HostThreadComm:
             self.heartbeat.record(handle.rank)
         return found[0][2]
 
+    def _probe(self, handle: ThreadRank, src: int, tag, timeout: Optional[float]):
+        """Blocking probe: park until a matching message is queued; return
+        its (src, tag) envelope WITHOUT dequeuing."""
+        self._check_handle(handle)
+        if src != ANY_SOURCE and not (0 <= src < self.nthreads):
+            raise ValueError(f"probe src {src} out of range [0, {self.nthreads})")
+        mb = self._mailboxes[handle.rank]
+        seen: List = []
+
+        def pred() -> bool:
+            m = mb.match_peek(src, tag)
+            if m is not None:
+                seen.append(m)
+                return True
+            return False
+
+        if not self.engine.park_on_channel(handle.channel, pred, timeout):
+            raise TimeoutError(
+                f"HostThreadComm({self.name}): rank {handle.rank} probe(src={src}, "
+                f"tag={tag!r}) timed out after {timeout}s"
+            )
+        if self.heartbeat is not None:
+            self.heartbeat.record(handle.rank)
+        return (seen[-1][0], seen[-1][1])
+
+    def _iprobe(self, handle: ThreadRank, src: int, tag):
+        """Non-blocking probe under the channel's critical section."""
+        self._check_handle(handle)
+        if src != ANY_SOURCE and not (0 <= src < self.nthreads):
+            raise ValueError(f"iprobe src {src} out of range [0, {self.nthreads})")
+        mb = self._mailboxes[handle.rank]
+        with self.engine.channel_section(handle.channel):
+            m = mb.match_peek(src, tag)
+        if self.heartbeat is not None:
+            self.heartbeat.record(handle.rank)
+        return None if m is None else (m[0], m[1])
+
     # -- instrumentation --------------------------------------------------
     def stats(self) -> dict:
         with self._lock:
@@ -570,6 +839,7 @@ class HostThreadComm:
                 "shared_channel": self.shared_channel,
                 "channels": [s.channel for s in self._streams],
                 "pending_messages": [len(mb.messages) for mb in self._mailboxes],
+                "posted_recvs": [len(mb.pending) for mb in self._mailboxes],
                 "delivered": [mb.delivered for mb in self._mailboxes],
             }
 

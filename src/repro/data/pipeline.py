@@ -190,6 +190,13 @@ class SyntheticPipeline:
             name=f"prefetch-{step}",
         )
 
+    def wait_first(self, reqs, timeout: Optional[float] = None):
+        """Block until the *first* of several prefetch requests completes
+        and return it (``engine.wait_any``): a trainer keeping k steps of
+        prefetch in flight consumes whichever batch lands first instead
+        of waiting on the whole set. None on timeout/empty."""
+        return self.engine.wait_any([r for r in reqs if r is not None], timeout)
+
     def get_batch(self, step: int) -> dict:
         if self._tc is not None and step in self._assigned:
             w = self._assigned.pop(step)

@@ -27,7 +27,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.core.progress import ProgressEngine
+from repro.core.progress import AutotunePolicy, ProgressEngine
 from repro.core.streams import stream_create, stream_free
 from repro.data.pipeline import DataConfig, SyntheticPipeline
 from repro.ft.heartbeat import HeartbeatMonitor
@@ -130,9 +130,18 @@ class Trainer:
         ckpt_dir: Optional[str] = None,
         ckpt_every: int = 50,
         seed: int = 0,
+        autotune: bool = True,
+        autotune_policy: Optional[AutotunePolicy] = None,
     ):
         self.cfg, self.opt_cfg, self.data_cfg = cfg, opt_cfg, data_cfg
         self.engine = ProgressEngine()
+        # progress placement: the stats()-driven autotuner promotes the
+        # streams that are actually hot (ckpt during save bursts, data
+        # during prefetch) and demotes them between bursts — the old
+        # static hand placement (one thread per known stream for the whole
+        # run) is kept behind autotune=False for comparison/benchmarks
+        self.autotune = autotune
+        self.tuner = self.engine.autotune(autotune_policy) if autotune else None
         self.ckpt_stream = stream_create(name="ckpt")
         self.data_stream = stream_create(name="data")
         self.pipeline = SyntheticPipeline(cfg, data_cfg, self.engine, self.data_stream)
@@ -177,11 +186,16 @@ class Trainer:
         return plan
 
     def run(self, steps: int, log_every: int = 10):
-        # spin up background progress only while async work is in flight —
-        # the paper's control knob (ext. 6). Parked threads (default) sleep
-        # on the stream CV between bursts, so an idle stream costs ~0 CPU.
-        self.engine.start_progress_thread(self.ckpt_stream, interval=0.01)
-        self.engine.start_progress_thread(self.data_stream, interval=0.0)
+        # background progress only where async work is actually in flight —
+        # the paper's control knob (ext. 6), now driven by stats(): the
+        # autotuner promotes hot channels onto dedicated (parked) progress
+        # threads and demotes them when the burst ends. autotune=False
+        # falls back to static hand placement on the two known streams.
+        if self.tuner is not None:
+            self.tuner.start()
+        else:
+            self.engine.start_progress_thread(self.ckpt_stream, interval=0.01)
+            self.engine.start_progress_thread(self.data_stream, interval=0.0)
         # loader ranks are per-run epochs: re-open the threadcomm bracket
         # if a previous run() closed it
         if self.data_cfg.loader_threads > 0 and self.pipeline.threadcomm is None:
@@ -220,6 +234,8 @@ class Trainer:
             # Threadcomm loader ranks (data_cfg.loader_threads > 0) are also
             # per-run: detach them so their VCI channels return to the pool.
             self.pipeline.stop_workers()
+            if self.tuner is not None:
+                self.tuner.stop()  # demotes every autotuner-placed thread
             self.engine.stop_all()
             st = self.engine.stats()
             self.last_progress_stats = st
@@ -229,6 +245,12 @@ class Trainer:
                 f"{st['parks']} parks / {st['wakes']} wakes "
                 f"({st['spin_hits']} spin hits)"
             )
+            if self.tuner is not None:
+                ts = self.tuner.stats()
+                print(
+                    f"[trainer] autotuner: {ts['ticks']} ticks, "
+                    f"{ts['promotions']} promotions / {ts['demotions']} demotions"
+                )
         return self.history
 
 

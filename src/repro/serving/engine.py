@@ -93,6 +93,20 @@ class ServeEngine:
             raise ValueError("ServeEngine has no progress_engine attached")
         return self.progress_engine.wait(req.grequest, timeout)
 
+    def wait_any(self, reqs: List[Request], timeout: Optional[float] = None) -> Optional[Request]:
+        """Block until the *first* of ``reqs`` finishes decoding and
+        return it (``engine.wait_any`` — stream results to clients as
+        they complete instead of draining the whole batch). None on
+        timeout/empty. Requires ``progress_engine``."""
+        gs = []
+        for r in reqs:
+            if r.grequest is None:
+                raise ValueError("ServeEngine has no progress_engine attached")
+            gs.append(r.grequest)
+        g = self.progress_engine.wait_any(gs, timeout)
+        # a request's grequest carries the Request itself as extra_state
+        return None if g is None else g.extra_state
+
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 

@@ -198,6 +198,88 @@ def test_backpressure_with_covering_progress_thread(eng, offload):
         eng.stop_progress_thread(offload)
 
 
+# --------------------------------------- reserve-via-wait_any parity
+
+
+def _drive_window(eng, offload, n_sends, depth, completer_delay=0.01):
+    """Issue ``n_sends`` externally-completed transfers through a
+    depth-bounded window, a background thread completing them in issue
+    order after ``completer_delay``. Returns (values in completion order,
+    window stats)."""
+    win = OffloadWindow(offload, depth=depth, engine=eng)
+    queue: list = []
+    qlock = threading.Lock()
+    stop = threading.Event()
+
+    def completer():
+        while not stop.is_set():
+            with qlock:
+                r = queue.pop(0) if queue else None
+            if r is None:
+                time.sleep(0.001)
+                continue
+            time.sleep(completer_delay)
+            r.complete()
+
+    ct = threading.Thread(target=completer, daemon=True)
+    ct.start()
+    try:
+        for i in range(n_sends):
+            assert win.reserve(timeout=30.0), f"reserve {i} timed out"
+            r = _external_req(eng, offload)
+            win.register(r, value=i)
+            with qlock:
+                queue.append(r)
+        slots = win.drain(timeout=30.0)
+    finally:
+        stop.set()
+        ct.join(timeout=5.0)
+    return [s.value for s in slots], win.stats(engine=False)
+
+
+def test_reserve_wait_any_parity_with_cv_slice_path(eng, offload):
+    """The window as its own poller (no progress thread → reserve blocks
+    in engine.wait_any) must behave exactly like the covered path (park
+    on the channel wait queue): same admissions, same completion order,
+    same backpressure accounting."""
+    vals_own, st_own = _drive_window(eng, offload, n_sends=8, depth=2)
+
+    eng2 = ProgressEngine()
+    eng2.start_progress_thread(offload, interval=0.001)
+    try:
+        vals_cov, st_cov = _drive_window(eng2, offload, n_sends=8, depth=2)
+    finally:
+        eng2.stop_all()
+
+    assert vals_own == vals_cov == list(range(8))  # issue order == completion order here
+    for st in (st_own, st_cov):
+        assert st["admitted"] == st["reaped"] == 8
+        assert st["max_depth_seen"] <= 2
+        assert st["in_flight"] == 0
+        assert st["backpressure_parks"] >= 1  # depth 2 genuinely backpressured
+    # the self-poller path waited through wait_any (waiter-side parks),
+    # never through a poll loop of its own
+    assert st_own["admitted"] == st_cov["admitted"]
+
+
+def test_reserve_self_poller_blocks_in_wait_any(eng, offload):
+    """With no covering thread, a full window's reserve must resolve as
+    soon as the first in-flight request completes (wait_any), not after a
+    poll interval."""
+    win = OffloadWindow(offload, depth=1, engine=eng)
+    r = _external_req(eng, offload)
+    win.admit(r)
+    threading.Timer(0.15, r.complete).start()
+    t0 = time.monotonic()
+    assert win.reserve(timeout=10.0)
+    waited = time.monotonic() - t0
+    assert 0.1 <= waited < 5.0  # blocked until the completion, promptly after
+    win.unreserve()
+    win.drain(timeout=5.0)
+    # wait_any drove progress for the uncovered poll_fn request itself
+    assert eng.stats()["progress_calls"] >= 1
+
+
 # ------------------------------------------------------------ drain/wait_all
 
 

@@ -431,6 +431,404 @@ def test_channel_affinity_stack_per_thread():
     assert eng.unbind_thread_channel() is None
 
 
+# ----------------------------------------------------- per-channel wait queues
+
+
+def test_notify_wakes_only_matching_waiter():
+    """Two waiters parked on the same channel with different predicates:
+    a notify satisfying one must wake exactly that one (the other stays
+    parked — notify_skips counts it)."""
+    eng = pg.ProgressEngine(spin_s=0.0)
+    flags = {"a": False, "b": False}
+    done = []
+
+    def parker(key):
+        assert eng.park_on_channel(7, lambda k=key: flags[k], timeout=10.0)
+        done.append(key)
+
+    ts = [threading.Thread(target=parker, args=(k,), daemon=True) for k in ("a", "b")]
+    for t in ts:
+        t.start()
+    deadline = time.monotonic() + 5
+    while eng.stats()["parks"] < 2 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    with eng.channel_section(7):
+        flags["b"] = True
+    eng.notify_channel(7)
+    t_b = time.monotonic()
+    while "b" not in done and time.monotonic() - t_b < 5:
+        time.sleep(0.005)
+    assert done == ["b"]  # only the satisfied waiter woke
+    st = eng.stats()
+    assert st["notify_wakeups"] >= 1
+    assert st["notify_skips"] >= 1  # waiter 'a' was evaluated and left asleep
+    with eng.channel_section(7):
+        flags["a"] = True
+    eng.notify_channel(7)
+    for t in ts:
+        t.join(timeout=5)
+    assert sorted(done) == ["a", "b"]
+
+
+def test_notify_other_channel_leaves_waiter_parked():
+    """A waiter on channel A must not wake for a notify on channel B even
+    when both channels share a stripe (the cross-channel herd)."""
+    eng = pg.ProgressEngine(n_stripes=1, spin_s=0.0)  # every channel, one stripe
+    flag = [False]
+    out = []
+
+    def parker():
+        out.append(eng.park_on_channel(3, lambda: flag[0], timeout=1.0))
+
+    t = threading.Thread(target=parker, daemon=True)
+    t.start()
+    deadline = time.monotonic() + 5
+    while eng.stats()["parks"] < 1 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    for _ in range(10):
+        eng.notify_channel(5)  # same stripe, different channel
+    st = eng.stats()
+    assert st["notify_wakeups"] == 0  # none of those notifies woke anyone
+    flag[0] = True
+    eng.notify_channel(3)
+    t.join(timeout=5)
+    assert out == [True]
+
+
+def test_legacy_stripe_cv_mode_broadcasts():
+    """wait_queues=False keeps the pre-queue behaviour: every notify wakes
+    every parked thread on the stripe (the herd baseline the benchmark
+    measures against)."""
+    eng = pg.ProgressEngine(spin_s=0.0, wait_queues=False)
+    release = [False]
+    n = 4
+
+    def parker():
+        eng.park_on_channel(2, lambda: release[0], timeout=10.0)
+
+    ts = [threading.Thread(target=parker, daemon=True) for _ in range(n)]
+    for t in ts:
+        t.start()
+    deadline = time.monotonic() + 5
+    while eng.stats()["parks"] < n and time.monotonic() < deadline:
+        time.sleep(0.005)
+    eng.notify_channel(2)  # satisfies nobody, yet wakes all four
+    time.sleep(0.1)
+    st = eng.stats()
+    assert st["notify_wakeups"] >= n  # the herd, counted
+    release[0] = True
+    eng.notify_channel(2)
+    for t in ts:
+        t.join(timeout=5)
+
+
+def test_consuming_predicate_runs_to_true_exactly_once():
+    """A side-effecting predicate (mailbox match-and-pop shape): one
+    notify with one token wakes exactly one of several identical
+    waiters, and the token is consumed exactly once."""
+    eng = pg.ProgressEngine(spin_s=0.0)
+    tokens = []
+    got = []
+
+    def pred():
+        if tokens:
+            got.append(tokens.pop())
+            return True
+        return False
+
+    ts = [
+        threading.Thread(
+            target=lambda: eng.park_on_channel(9, pred, timeout=2.0), daemon=True
+        )
+        for _ in range(3)
+    ]
+    for t in ts:
+        t.start()
+    deadline = time.monotonic() + 5
+    while eng.stats()["parks"] < 3 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    with eng.channel_section(9):
+        tokens.append("tok")
+    eng.notify_channel(9)
+    for t in ts:
+        t.join(timeout=5)
+    assert got == ["tok"]  # popped once; the other two waiters timed out
+    assert tokens == []
+
+
+# --------------------------------------------------------------- wait_any
+
+
+def _ext(eng, **kw):
+    return eng.grequest_start(**kw)
+
+
+@pytest.mark.parametrize(
+    "case",
+    [
+        "empty",
+        "all_done_lowest_index",
+        "first_completion_order",
+        "cancel_counts",
+        "timeout_none",
+    ],
+)
+def test_wait_any_table(case):
+    """Table-driven wait_any semantics (MPI_Waitany)."""
+    eng = pg.ProgressEngine()
+    if case == "empty":
+        assert eng.wait_any([], timeout=1.0) is None
+    elif case == "all_done_lowest_index":
+        reqs = [_ext(eng) for _ in range(3)]
+        reqs[2].complete()
+        reqs[1].complete()
+        assert eng.wait_any(reqs, timeout=1.0) is reqs[1]  # lowest done index
+        reqs[0].cancel()
+    elif case == "first_completion_order":
+        reqs = [_ext(eng) for _ in range(3)]
+        threading.Timer(0.05, reqs[1].complete).start()
+        got = eng.wait_any(reqs, timeout=5.0)
+        assert got is reqs[1]
+        assert not reqs[0].done and not reqs[2].done  # others untouched
+        for r in (reqs[0], reqs[2]):
+            r.cancel()
+    elif case == "cancel_counts":
+        reqs = [_ext(eng) for _ in range(2)]
+        threading.Timer(0.05, reqs[0].cancel).start()
+        got = eng.wait_any(reqs, timeout=5.0)
+        assert got is reqs[0] and got._state is pg.RequestState.CANCELLED
+        reqs[1].cancel()
+    elif case == "timeout_none":
+        reqs = [_ext(eng) for _ in range(2)]
+        t0 = time.monotonic()
+        assert eng.wait_any(reqs, timeout=0.05) is None
+        assert time.monotonic() - t0 < 2.0
+        for r in reqs:
+            r.cancel()
+
+
+def test_wait_any_timeout_vs_completion_race_never_loses():
+    """A completion racing the deadline is either reported (the request)
+    or not (None with the request still done) — never an exception, and
+    the final re-read means a callback that landed before the deadline
+    check is returned."""
+    eng = pg.ProgressEngine(spin_s=0.0)
+    for i in range(30):
+        r = _ext(eng)
+        threading.Timer(0.01, r.complete).start()
+        got = eng.wait_any([r], timeout=0.01)
+        assert got is r or got is None
+        if got is None:
+            # the completion may land just after; it is never half-reported
+            eng.wait(r, timeout=5.0)
+        assert r.done
+        assert len(r._callbacks) <= 1  # wait_any detached its wake closure
+
+
+def test_wait_any_polls_uncovered_streams():
+    """poll_fn requests with no covering progress thread: wait_any must
+    actively progress the pending streams rather than park forever."""
+    eng = pg.ProgressEngine()
+    pool = ss.StreamPool()
+    s1, s2 = pool.create(), pool.create()
+    state = {"n": 0}
+
+    def poll(st):
+        st["n"] += 1
+        return st["n"] >= 3
+
+    r_slow = eng.grequest_start(poll_fn=lambda st: False, stream=s1)
+    r_fast = eng.grequest_start(poll_fn=poll, extra_state=state, stream=s2)
+    got = eng.wait_any([r_slow, r_fast], timeout=10.0)
+    assert got is r_fast
+    r_slow.cancel()
+
+
+def test_wait_any_parks_when_covered():
+    """Externally-completed requests: the waiter parks (no polling) and
+    the first completion wakes it."""
+    eng = pg.ProgressEngine(spin_s=0.0)
+    reqs = [_ext(eng) for _ in range(3)]
+    threading.Timer(0.15, reqs[2].complete).start()
+    t0 = time.monotonic()
+    got = eng.wait_any(reqs, timeout=5.0)
+    assert got is reqs[2]
+    assert time.monotonic() - t0 >= 0.1
+    st = eng.stats()
+    assert st["waiter_parks"] >= 1 and st["polls"] == 0
+    for r in reqs[:2]:
+        r.cancel()
+
+
+# -------------------------------------------------------------- autotuner
+
+
+def _mk_stream(pool):
+    return pool.create()
+
+
+def test_autotune_policy_validates():
+    with pytest.raises(ValueError, match="hysteresis band"):
+        pg.AutotunePolicy(promote_score=1.0, demote_score=1.0)
+    with pytest.raises(ValueError, match="streak"):
+        pg.AutotunePolicy(hysteresis_up=0)
+    with pytest.raises(ValueError, match="max_threads"):
+        pg.AutotunePolicy(max_threads=0)
+
+
+def test_autotuner_promotes_hot_and_demotes_idle():
+    eng = pg.ProgressEngine()
+    pool = ss.StreamPool()
+    hot, idle = pool.create(), pool.create()
+    tuner = eng.autotune(
+        pg.AutotunePolicy(promote_score=2.0, demote_score=0.0, hysteresis_up=2, hysteresis_down=2)
+    )
+    keep = []
+
+    def burst():
+        for _ in range(4):
+            keep.append(eng.grequest_start(poll_fn=lambda st: True, stream=hot))
+
+    # two hot ticks -> promote (and only the hot channel)
+    burst()
+    r1 = tuner.tick()
+    assert r1["promoted"] == [] and tuner.placements() == []
+    burst()
+    r2 = tuner.tick()
+    assert r2["promoted"] == [hot.channel]
+    assert tuner.placements() == [hot.channel]
+    assert eng.has_poller(hot.channel) and not eng.has_poller(idle.channel)
+    # the promoted thread retires the pending burst without any waiter
+    deadline = time.monotonic() + 5
+    while any(not r.done for r in keep) and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert all(r.done for r in keep)
+    # idle ticks -> demote after the down-hysteresis (the first post-burst
+    # tick still sees the promoted thread's own retirement polls, so the
+    # idle streak starts one tick later)
+    tuner.tick()  # absorbs the retirement-poll delta
+    tuner.tick()
+    assert tuner.placements() == [hot.channel]  # one idle tick: still held
+    r5 = tuner.tick()
+    assert r5["demoted"] == [hot.channel]
+    assert tuner.placements() == []
+    assert not eng.has_poller(hot.channel)
+    st = tuner.stats()
+    assert st["promotions"] == 1 and st["demotions"] == 1 and st["ticks"] == 5
+
+
+def test_autotuner_hysteresis_band_prevents_flapping():
+    """Scores oscillating inside the (demote, promote) band must not
+    change placement in either direction."""
+    eng = pg.ProgressEngine()
+    pool = ss.StreamPool()
+    s = pool.create()
+    tuner = eng.autotune(
+        pg.AutotunePolicy(promote_score=10.0, demote_score=0.0, hysteresis_up=2, hysteresis_down=2)
+    )
+    keep = []
+    for _ in range(12):  # 12 ticks of mid-band activity (score ~2 each)
+        keep.append(eng.grequest_start(poll_fn=lambda st: True, stream=s))
+        eng.progress(s)
+        tuner.tick()
+    assert tuner.stats()["promotions"] == 0
+    assert tuner.placements() == []
+
+
+def test_autotuner_respects_hand_placed_threads_and_cap():
+    eng = pg.ProgressEngine()
+    pool = ss.StreamPool()
+    hand = pool.create()
+    others = [pool.create() for _ in range(3)]
+    eng.start_progress_thread(hand, interval=0.0)
+    try:
+        tuner = eng.autotune(
+            pg.AutotunePolicy(
+                promote_score=1.0, demote_score=0.0, hysteresis_up=1, max_threads=2
+            )
+        )
+        keep = []
+        for s in [hand] + others:
+            for _ in range(3):
+                keep.append(eng.grequest_start(poll_fn=lambda st: True, stream=s))
+        tuner.tick()
+        placed = tuner.placements()
+        assert hand.channel not in placed  # hand placement respected
+        assert len(placed) == 2  # capped at max_threads
+        tuner.stop()
+        assert tuner.placements() == []
+    finally:
+        eng.stop_all()
+
+
+def test_autotuner_never_adopts_foreign_thread():
+    """Regression: a hand-placed thread that is spun down (IDLE) makes
+    has_poller False, so the tuner tries to promote — start_progress_thread
+    refuses (channel occupied) and the tuner must NOT adopt it: demoting
+    later would stop a thread the user owns."""
+    eng = pg.ProgressEngine()
+    pool = ss.StreamPool()
+    s = pool.create()
+    assert eng.start_progress_thread(s, interval=0.0) is True
+    assert eng.start_progress_thread(s, interval=0.0) is False  # already placed
+    hand = eng._threads[s.channel]
+    hand.spin_down()  # IDLE: has_poller() goes False
+    try:
+        tuner = eng.autotune(
+            pg.AutotunePolicy(promote_score=1.0, demote_score=0.0, hysteresis_up=1, hysteresis_down=1)
+        )
+        keep = [eng.grequest_start(poll_fn=lambda st: True, stream=s) for _ in range(4)]
+        tuner.tick()
+        assert tuner.placements() == []  # refused, not adopted
+        assert tuner.stats()["promotions"] == 0
+        for _ in range(3):  # idle ticks must not demote the user's thread
+            tuner.tick()
+        assert s.channel in eng._threads and eng._threads[s.channel] is hand
+        hand.spin_up()
+        for r in keep:
+            assert eng.wait(r, timeout=5.0)
+    finally:
+        eng.stop_all()
+
+
+def test_autotuner_background_start_stop():
+    eng = pg.ProgressEngine()
+    pool = ss.StreamPool()
+    s = pool.create()
+    tuner = eng.autotune(
+        pg.AutotunePolicy(interval=0.01, promote_score=1.0, hysteresis_up=1)
+    )
+    tuner.start()
+    tuner.start()  # idempotent
+    keep = [eng.grequest_start(poll_fn=lambda st: True, stream=s) for _ in range(5)]
+    deadline = time.monotonic() + 5
+    while not tuner.placements() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert tuner.placements() == [s.channel]
+    tuner.stop()
+    assert tuner.placements() == []
+    assert not eng.has_poller(s.channel)
+    assert tuner.stats()["ticks"] >= 1
+    assert all(r.done for r in keep)
+
+
+def test_per_channel_stats_view():
+    eng = pg.ProgressEngine()
+    pool = ss.StreamPool()
+    a, b = pool.create(), pool.create()
+    for _ in range(3):
+        eng.grequest_start(poll_fn=lambda st: True, stream=a)
+    eng.grequest_start(poll_fn=lambda st: False, stream=b)
+    eng.progress(a)
+    st = eng.stats(per_channel=True)["channels"]
+    assert st[a.channel]["enqueued"] == 3
+    assert st[a.channel]["polls"] == 3
+    assert st[a.channel]["pending"] == 0
+    assert st[b.channel]["enqueued"] == 1 and st[b.channel]["pending"] == 1
+    eng.reset_stats()
+    assert eng.stats(per_channel=True)["channels"].get(a.channel, {"enqueued": 0})["enqueued"] == 0
+
+
 def test_channel_section_counts_contention():
     eng = pg.ProgressEngine()
     hold = threading.Event()

@@ -1,0 +1,256 @@
+"""Concurrency soak for the progress runtime (the machinery of PRs 1-5).
+
+Deterministic-seed randomized schedules: N worker threads × M channels
+churn generalized requests (polled, externally-completed, batch-waited),
+park/notify pairs, offload-window admissions, channel affinity
+bind/unbind, while a chaos thread starts/stops progress threads and
+ticks the autotuner — all concurrently on one engine. Every schedule
+asserts the three invariants that define the runtime:
+
+* **no deadlock** — every thread joins within the watchdog (each test
+  also carries the ``timeout`` marker for pytest-timeout);
+* **no lost wakeups** — every blocking call (wait/wait_all/wait_any,
+  park_on_channel, window reserve) returns success within its generous
+  timeout; a wakeup swallowed anywhere surfaces as a failure here;
+* **counter conservation** — at quiescence, everything admitted was
+  retired: engine ``enqueued == completions`` with nothing pending, and
+  window ``admitted == reaped`` with nothing in flight.
+
+The seed matrix (configs × seeds) is 100+ schedules spanning per-channel
+wait queues, the legacy stripe-CV broadcast, a single shared stripe
+(maximum cross-channel interference), the global-lock engine, spin
+enabled/disabled, and autotuner on/off. ``scripts/ci.sh`` runs this file
+as its ``stress`` step.
+"""
+
+import threading
+import time
+from collections import deque
+from random import Random
+
+import pytest
+
+from repro.core import progress as pg
+from repro.core import streams as ss
+from repro.core.enqueue import OffloadWindow
+
+# Watchdog for any single blocking op; a wakeup lost anywhere turns into
+# a timeout here, well inside the per-test timeout marker.
+_OP_TIMEOUT = 30.0
+_JOIN_TIMEOUT = 60.0
+
+CONFIGS = {
+    # per-channel wait queues (the default runtime), chaos + autotuner
+    "waitq": dict(engine=dict(), n_threads=4, n_channels=3, chaos=True, autotune=True),
+    # no spin: every blocked caller pays a real park (max CV traffic)
+    "waitq-park": dict(
+        engine=dict(spin_s=0.0), n_threads=4, n_channels=2, chaos=True, autotune=False
+    ),
+    # the legacy stripe-CV broadcast must stay correct too (herd baseline)
+    "legacy-cv": dict(
+        engine=dict(wait_queues=False), n_threads=3, n_channels=2, chaos=True, autotune=False
+    ),
+    # every channel on ONE stripe: maximum cross-channel interference
+    "one-stripe": dict(
+        engine=dict(n_stripes=1, spin_s=0.0), n_threads=4, n_channels=3, chaos=False,
+        autotune=True,
+    ),
+    # pre-VCI global critical section
+    "global-lock": dict(
+        engine=dict(global_lock=True), n_threads=3, n_channels=2, chaos=False, autotune=False
+    ),
+}
+SEEDS = range(20)  # 5 configs x 20 seeds = 100 schedules
+
+
+class _Completer(threading.Thread):
+    """Services externally-completed work with small seeded delays:
+    grequests to complete, park tokens to set+notify."""
+
+    def __init__(self, engine, seed):
+        super().__init__(daemon=True, name="stress-completer")
+        self.engine = engine
+        self.rng = Random(seed ^ 0xC0FFEE)
+        self.queue: deque = deque()
+        self.lock = threading.Lock()
+        self.stop_evt = threading.Event()
+
+    def submit(self, kind, payload) -> None:
+        with self.lock:
+            self.queue.append((kind, payload))
+
+    def run(self) -> None:
+        while True:
+            with self.lock:
+                item = self.queue.popleft() if self.queue else None
+            if item is None:
+                if self.stop_evt.is_set():
+                    return
+                time.sleep(0.0005)
+                continue
+            if self.rng.random() < 0.5:
+                time.sleep(self.rng.random() * 0.002)
+            kind, payload = item
+            if kind == "complete":
+                payload.complete()
+            else:  # ("park", (channel, token))
+                ch, token = payload
+                with self.engine.channel_section(ch):
+                    token["set"] = True
+                self.engine.notify_channel(ch)
+
+
+def _worker(engine, streams, window, completer, seed, tid, n_ops, errors):
+    rng = Random((seed << 8) | tid)
+    try:
+        for op_i in range(n_ops):
+            stream = rng.choice(streams)
+            op = rng.choice(
+                ["greq_poll", "greq_ext", "park", "window", "affinity", "progress"]
+            )
+            if op == "greq_poll":
+                state = {"left": rng.randint(1, 3)}
+
+                def poll(st):
+                    st["left"] -= 1
+                    return st["left"] <= 0
+
+                r = engine.grequest_start(poll_fn=poll, extra_state=state, stream=stream)
+                mode = rng.choice(["wait", "wait_all", "wait_any"])
+                if mode == "wait":
+                    assert engine.wait(r, _OP_TIMEOUT), "lost wakeup: wait(poll)"
+                elif mode == "wait_all":
+                    assert engine.wait_all([r], _OP_TIMEOUT), "lost wakeup: wait_all(poll)"
+                else:
+                    assert engine.wait_any([r], _OP_TIMEOUT) is r, "lost wakeup: wait_any(poll)"
+            elif op == "greq_ext":
+                r = engine.grequest_start(stream=stream, name=f"ext-{tid}-{op_i}")
+                completer.submit("complete", r)
+                if rng.random() < 0.5:
+                    assert engine.wait_all([r], _OP_TIMEOUT), "lost wakeup: wait_all(ext)"
+                else:
+                    assert engine.wait_any([r], _OP_TIMEOUT) is r, "lost wakeup: wait_any(ext)"
+            elif op == "park":
+                ch = stream.channel
+                token = {"set": False}
+                completer.submit("park", (ch, token))
+                ok = engine.park_on_channel(ch, lambda t=token: t["set"], _OP_TIMEOUT)
+                assert ok, "lost wakeup: park_on_channel"
+            elif op == "window":
+                ok = window.reserve(timeout=_OP_TIMEOUT)
+                assert ok, "lost wakeup: window.reserve"
+                r = engine.grequest_start(stream=window.stream, name=f"win-{tid}-{op_i}")
+                window.register(r, value=(tid, op_i))
+                completer.submit("complete", r)
+                if rng.random() < 0.3:
+                    window.reap()
+            elif op == "affinity":
+                ch = stream.channel
+                engine.bind_thread_to_channel(ch)
+                try:
+                    assert engine.thread_channel() == ch
+                    engine.progress(stream)
+                finally:
+                    assert engine.unbind_thread_channel(ch) == ch
+            else:  # progress
+                engine.progress(stream if rng.random() < 0.7 else None)
+    except BaseException as e:  # surfaced by the test thread
+        errors.append((tid, e))
+
+
+def _chaos(engine, streams, tuner, stop_evt, seed, errors):
+    """Start/stop progress threads and tick the autotuner concurrently
+    with the churn — placement changes must never strand a waiter."""
+    rng = Random(seed ^ 0xD00D)
+    try:
+        while not stop_evt.is_set():
+            roll = rng.random()
+            s = rng.choice(streams)
+            if roll < 0.3:
+                engine.start_progress_thread(s, interval=0.0, park=True)
+            elif roll < 0.6:
+                engine.stop_progress_thread(s)
+            elif roll < 0.8 and tuner is not None:
+                tuner.tick()
+            else:
+                engine.stats(per_stripe=True, per_channel=True)  # reader mixes in
+            time.sleep(rng.random() * 0.003)
+    except BaseException as e:
+        errors.append(("chaos", e))
+
+
+@pytest.mark.timeout(180)
+@pytest.mark.parametrize("cfg_name", sorted(CONFIGS))
+@pytest.mark.parametrize("seed", SEEDS)
+def test_progress_soak(cfg_name, seed):
+    cfg = CONFIGS[cfg_name]
+    engine = pg.ProgressEngine(**cfg["engine"])
+    pool = ss.StreamPool()
+    streams = [pool.create(name=f"soak-{i}") for i in range(cfg["n_channels"])]
+    win_stream = pool.create(name="soak-win")
+    window = OffloadWindow(win_stream, depth=2, engine=engine)
+    tuner = (
+        engine.autotune(
+            pg.AutotunePolicy(promote_score=3.0, hysteresis_up=2, hysteresis_down=2, max_threads=2)
+        )
+        if cfg["autotune"]
+        else None
+    )
+    completer = _Completer(engine, seed)
+    completer.start()
+    errors: list = []
+    stop_chaos = threading.Event()
+    chaos = None
+    if cfg["chaos"]:
+        chaos = threading.Thread(
+            target=_chaos,
+            args=(engine, streams + [win_stream], tuner, stop_chaos, seed, errors),
+            daemon=True,
+        )
+        chaos.start()
+
+    n_ops = 10
+    workers = [
+        threading.Thread(
+            target=_worker,
+            args=(engine, streams, window, completer, seed, tid, n_ops, errors),
+            daemon=True,
+            name=f"soak-w{tid}",
+        )
+        for tid in range(cfg["n_threads"])
+    ]
+    for w in workers:
+        w.start()
+    for w in workers:
+        w.join(timeout=_JOIN_TIMEOUT)
+    hung = [w.name for w in workers if w.is_alive()]
+    # -- invariant 1: no deadlock --------------------------------------
+    assert not hung, f"deadlocked workers (cfg={cfg_name} seed={seed}): {hung}"
+    stop_chaos.set()
+    if chaos is not None:
+        chaos.join(timeout=10.0)
+        assert not chaos.is_alive(), "chaos thread hung"
+    completer.stop_evt.set()
+    completer.join(timeout=10.0)
+    assert not completer.is_alive(), "completer hung with undrained queue"
+    # -- invariant 2: no lost wakeups (worker asserts) -----------------
+    assert not errors, f"(cfg={cfg_name} seed={seed}) {errors[0]}"
+
+    # window drains completely
+    window.drain(timeout=_OP_TIMEOUT)
+    wst = window.stats(engine=False)
+    assert wst["admitted"] == wst["reaped"], wst
+    assert wst["in_flight"] == 0 and wst["completed_unreaped"] == 0, wst
+
+    if tuner is not None:
+        tuner.stop()
+    engine.stop_all()
+    # retire anything completed-but-unswept, then check conservation
+    engine.progress()
+    st = engine.stats()
+    # -- invariant 3: counter conservation -----------------------------
+    assert st["enqueued"] == st["completions"] + engine.pending(), st
+    assert engine.pending() == 0, "requests left pending at quiescence"
+    # every notify either woke a matching waiter or counted a skip; the
+    # per-channel mode never reports more wakeups than notify decisions
+    assert st["notify_wakeups"] >= 0 and st["notifies"] >= 0
