@@ -83,8 +83,10 @@ def bench_dma(depth: int, n_micro: int, nbytes: int, latency_s: float, bw: float
     dst = np.empty_like(payload)
     t0 = time.perf_counter()
     for _ in range(n_micro):
-        win.reserve()
-        win.register(_dma_send(payload, dst, latency_s, bw, eng, stream))
+        # issue() = reserve + register with the slot released on ANY exit
+        # (MPIX002: a raise between reserve() and register() leaks a slot)
+        with win.issue() as submit:
+            submit(_dma_send(payload, dst, latency_s, bw, eng, stream))
     win.drain()
     elapsed = time.perf_counter() - t0
     return n_micro / elapsed, win.stats(engine=False)
@@ -106,9 +108,9 @@ def bench_xla(depth: int, n_micro: int, dim: int, repeats: int):
         win = OffloadWindow(stream, depth=depth, engine=eng)
         t0 = time.perf_counter()
         for _ in range(n_micro):
-            win.reserve()
-            y = f(x)
-            win.register(dispatch_enqueue(y, stream=stream, engine=eng), value=y)
+            with win.issue() as submit:
+                y = f(x)
+                submit(dispatch_enqueue(y, stream=stream, engine=eng), value=y)
         win.drain()
         return n_micro / (time.perf_counter() - t0)
 
@@ -132,9 +134,9 @@ def bench_datatype(depth: int, n_micro: int, nseg: int):
     dst = np.empty(halo.size, dtype=np.uint8)
     t0 = time.perf_counter()
     for _ in range(n_micro):
-        win.reserve()
-        packed = np.asarray(pack_send(buf, halo))  # on-stream pack, then d2h for the dma model
-        win.register(_dma_send(packed.view(np.uint8), dst, 0.0005, 8e9, eng, stream))
+        with win.issue() as submit:
+            packed = np.asarray(pack_send(buf, halo))  # on-stream pack, then d2h for the dma model
+            submit(_dma_send(packed.view(np.uint8), dst, 0.0005, 8e9, eng, stream))
     win.drain()
     elapsed = time.perf_counter() - t0
     ref = dt.pack(np.asarray(buf), halo)

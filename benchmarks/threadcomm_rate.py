@@ -67,32 +67,41 @@ def bench_msg_rate(n_pairs: int, n_msgs: int, nbytes: int, shared: bool):
     start_gate = threading.Barrier(n_ranks + 1)
     done_gate = threading.Barrier(2 * n_pairs + 1)
 
+    # MPIX005: detach in a finally — a recv timeout mid-run must not leave
+    # the rank attached (finish(drain=True) would hang on it)
+
     def left(r):
         h = comm.attach(rank=r)
-        start_gate.wait()
-        for k in range(n_msgs):
-            h.send(r + n_pairs, payload, tag=0)
-            h.recv(src=r + n_pairs, tag=0, timeout=60.0)
-        done_gate.wait()
-        if r == 0:  # timed region over: wake the bystanders home
-            for idle in range(2 * n_pairs, n_ranks):
-                h.send(idle, None, tag=_RELEASE_TAG)
-        h.detach()
+        try:
+            start_gate.wait()
+            for k in range(n_msgs):
+                h.send(r + n_pairs, payload, tag=0)
+                h.recv(src=r + n_pairs, tag=0, timeout=60.0)
+            done_gate.wait()
+            if r == 0:  # timed region over: wake the bystanders home
+                for idle in range(2 * n_pairs, n_ranks):
+                    h.send(idle, None, tag=_RELEASE_TAG)
+        finally:
+            h.detach()
 
     def right(r):
         h = comm.attach(rank=r)
-        start_gate.wait()
-        for k in range(n_msgs):
-            got = h.recv(src=r - n_pairs, tag=0, timeout=60.0)
-            h.send(r - n_pairs, got, tag=0)
-        done_gate.wait()
-        h.detach()
+        try:
+            start_gate.wait()
+            for k in range(n_msgs):
+                got = h.recv(src=r - n_pairs, tag=0, timeout=60.0)
+                h.send(r - n_pairs, got, tag=0)
+            done_gate.wait()
+        finally:
+            h.detach()
 
     def idler(r):
         h = comm.attach(rank=r)
-        start_gate.wait()
-        h.recv(src=0, tag=_RELEASE_TAG, timeout=120.0)  # parked throughout
-        h.detach()
+        try:
+            start_gate.wait()
+            h.recv(src=0, tag=_RELEASE_TAG, timeout=120.0)  # parked throughout
+        finally:
+            h.detach()
 
     def body(r):
         return left if r < n_pairs else (right if r < 2 * n_pairs else idler)
@@ -100,15 +109,19 @@ def bench_msg_rate(n_pairs: int, n_msgs: int, nbytes: int, shared: bool):
     threads = [
         threading.Thread(target=body(r), args=(r,), daemon=True) for r in range(n_ranks)
     ]
-    for t in threads:
-        t.start()
-    start_gate.wait()
-    t0 = time.perf_counter()
-    done_gate.wait()
-    elapsed = time.perf_counter() - t0
-    for t in threads:
-        t.join(timeout=30.0)
-    comm.finish(timeout=10.0)
+    try:
+        for t in threads:
+            t.start()
+        start_gate.wait()
+        t0 = time.perf_counter()
+        done_gate.wait()
+        elapsed = time.perf_counter() - t0
+        for t in threads:
+            t.join(timeout=30.0)
+    finally:
+        # MPIX005: the epoch must close even when a gate/join raises, or
+        # the comm's VCI channels leak for the rest of the process
+        comm.finish(timeout=10.0)
     st = eng.stats()
     rate = 2 * n_msgs * n_pairs / elapsed
     return rate, {
@@ -131,24 +144,28 @@ def bench_collectives(n_threads: int, reps: int):
 
     def worker(r):
         h = comm.attach(rank=r)
-        h.barrier()  # align before timing
-        for _ in range(reps):
-            t0 = time.perf_counter()
-            h.barrier()
-            t1 = time.perf_counter()
-            h.allreduce(value + r, op="sum")
-            t2 = time.perf_counter()
-            with lock:
-                bar_times.append(t1 - t0)
-                ar_times.append(t2 - t1)
-        h.detach()
+        try:
+            h.barrier()  # align before timing
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                h.barrier()
+                t1 = time.perf_counter()
+                h.allreduce(value + r, op="sum")
+                t2 = time.perf_counter()
+                with lock:
+                    bar_times.append(t1 - t0)
+                    ar_times.append(t2 - t1)
+        finally:
+            h.detach()
 
     threads = [threading.Thread(target=worker, args=(r,), daemon=True) for r in range(n_threads)]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join(timeout=60.0)
-    comm.finish(timeout=10.0)
+    try:
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60.0)
+    finally:
+        comm.finish(timeout=10.0)
     return statistics.median(bar_times) * 1e6, statistics.median(ar_times) * 1e6
 
 

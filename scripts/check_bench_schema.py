@@ -1,0 +1,267 @@
+#!/usr/bin/env python
+"""Validate every committed ``BENCH_*.json`` record (and any ``.smoke``
+sibling) against the schemas documented in ``docs/benchmarks.md``.
+
+Run from the repo root (``scripts/ci.sh`` does, right after the bench
+smoke runs regenerate the ``.smoke`` files):
+
+    python scripts/check_bench_schema.py
+
+The schema language is deliberately tiny — just enough to pin the shapes
+the doc promises, with per-entry maps (``depths.<d>``, ``workloads.<name>``)
+expressed as a value schema applied to every key:
+
+* a type (or tuple of types) leaf: ``float`` accepts int-or-float
+  (json round-trips 2.0 → 2), ``bool`` does NOT accept 0/1;
+* a dict: required keys with nested schemas. Unknown extra keys are
+  allowed (benchmarks may grow fields before the doc catches up) but
+  missing ones fail;
+* ``Each(schema)``: a non-empty str-keyed map whose every value matches;
+* ``ListOf(schema)``: a list whose every element matches.
+
+Cross-field acceptance invariants recorded in the docs are re-checked
+too: smoke files must say ``"smoke": true`` and full files ``false``,
+and the headline speedup ratios must be present and finite.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+from dataclasses import dataclass
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@dataclass(frozen=True)
+class Each:
+    """A {str: value} map: every value must match ``schema``; at least
+    one entry must exist (an empty depths/workloads table means the
+    benchmark silently did nothing)."""
+
+    schema: object
+
+
+@dataclass(frozen=True)
+class ListOf:
+    schema: object
+
+
+_NUM = (int, float)  # json has no int/float wall; bool is excluded below
+
+
+def _check(value, schema, path, errors):
+    if isinstance(schema, Each):
+        if not isinstance(value, dict):
+            errors.append(f"{path}: expected mapping, got {type(value).__name__}")
+            return
+        if not value:
+            errors.append(f"{path}: mapping is empty")
+            return
+        for k, v in value.items():
+            _check(v, schema.schema, f"{path}.{k}", errors)
+        return
+    if isinstance(schema, ListOf):
+        if not isinstance(value, list):
+            errors.append(f"{path}: expected list, got {type(value).__name__}")
+            return
+        for i, v in enumerate(value):
+            _check(v, schema.schema, f"{path}[{i}]", errors)
+        return
+    if isinstance(schema, dict):
+        if not isinstance(value, dict):
+            errors.append(f"{path}: expected object, got {type(value).__name__}")
+            return
+        for key, sub in schema.items():
+            if key not in value:
+                errors.append(f"{path}: missing required key '{key}'")
+            else:
+                _check(value[key], sub, f"{path}.{key}", errors)
+        return
+    # type leaf
+    if schema is bool:
+        if not isinstance(value, bool):
+            errors.append(f"{path}: expected bool, got {value!r}")
+        return
+    if isinstance(value, bool) or not isinstance(value, schema):
+        errors.append(
+            f"{path}: expected {getattr(schema, '__name__', schema)}, got {value!r}"
+        )
+        return
+    if isinstance(value, float) and not math.isfinite(value):
+        errors.append(f"{path}: non-finite number {value!r}")
+
+
+_ENGINE_STATS = {
+    "parks": _NUM,
+    "wakes": _NUM,
+    "spin_hits": _NUM,
+    "lock_waits": _NUM,
+    "polls": _NUM,
+}
+
+# docs/benchmarks.md ## BENCH_datatype.json
+DATATYPE = {
+    "smoke": bool,
+    "workloads": Each(
+        {
+            "bytes": _NUM,
+            "nseg": _NUM,
+            "nruns": _NUM,
+            "uniform": bool,
+            "pack_MBps": {"naive": _NUM, "coalesced": _NUM, "vectorized": _NUM},
+            "unpack_MBps": {"vectorized": _NUM},
+            "speedup_vectorized_over_naive": _NUM,
+        }
+    ),
+    "descriptor_vs_enumerate": Each(
+        {"descriptor_us": _NUM, "enumerate_us": _NUM, "nseg": _NUM}
+    ),
+}
+
+# docs/benchmarks.md ## BENCH_enqueue.json
+ENQUEUE = {
+    "smoke": bool,
+    "config": {
+        "n_micro": _NUM,
+        "payload_bytes": _NUM,
+        "dma_latency_s": _NUM,
+        "dma_bandwidth_Bps": _NUM,
+        "xla_dim": _NUM,
+        "xla_repeats": _NUM,
+    },
+    "depths": Each(
+        {
+            "dma_microbatches_per_s": _NUM,
+            "xla_microbatches_per_s_median": _NUM,
+            "xla_rates": ListOf(_NUM),
+            "datatype_dma_microbatches_per_s": _NUM,
+            "window": {"admitted": _NUM, "reaped": _NUM, "max_depth_seen": _NUM},
+        }
+    ),
+    "speedup_depth2_over_depth1": _NUM,
+    "speedup_best_over_depth1": _NUM,
+}
+
+# docs/benchmarks.md ## BENCH_threadcomm.json
+THREADCOMM = {
+    "smoke": bool,
+    "config": {
+        "n_msgs": _NUM,
+        "payload_bytes": _NUM,
+        "n_idle": _NUM,
+        "coll_reps": _NUM,
+        "trials": _NUM,
+    },
+    "message_rate": Each(
+        {
+            "per_thread_vci_msgs_per_s": _NUM,
+            "shared_channel_msgs_per_s": _NUM,
+            "per_thread_vci_trials": ListOf(_NUM),
+            "shared_channel_trials": ListOf(_NUM),
+            "speedup": _NUM,
+            "vci_engine": _ENGINE_STATS,
+            "shared_engine": _ENGINE_STATS,
+        }
+    ),
+    "collectives": Each({"barrier_us": _NUM, "allreduce64_us": _NUM}),
+    "speedup_vci_over_shared_widest": _NUM,
+}
+
+_LATENCY_ROW = {
+    "mean_completion_latency_ms": _NUM,
+    "p95_completion_latency_ms": _NUM,
+    "phase1_mean_ms": _NUM,
+    "phase2_mean_ms": _NUM,
+    "n_requests": _NUM,
+}
+
+# docs/benchmarks.md ## BENCH_progress.json
+PROGRESS = {
+    "smoke": bool,
+    "config": {
+        "herd_rounds": _NUM,
+        "rounds_per_phase": _NUM,
+        "m_reqs": _NUM,
+        "work_ms": _NUM,
+        "compute_ms": _NUM,
+    },
+    "wakeups_per_notify": Each(
+        {
+            "per_channel_queues": _NUM,
+            "stripe_cv": _NUM,
+            "herd_reduction": _NUM,
+            # notify→wake percentiles per mode (per_channel_queues / stripe_cv)
+            "wake_latency_us": Each({"p50": _NUM, "p95": _NUM}),
+        }
+    ),
+    "autotune": {
+        "static_hand_placed": _LATENCY_ROW,
+        "autotuned": dict(
+            _LATENCY_ROW, promotions=_NUM, demotions=_NUM, ticks=_NUM
+        ),
+        "static_all_streams": dict(_LATENCY_ROW, threads=_NUM),
+    },
+    "speedup_autotune_over_static_hand_placed": _NUM,
+    "herd_reduction_widest": _NUM,
+}
+
+SCHEMAS = {
+    "BENCH_datatype.json": DATATYPE,
+    "BENCH_enqueue.json": ENQUEUE,
+    "BENCH_threadcomm.json": THREADCOMM,
+    "BENCH_progress.json": PROGRESS,
+}
+
+# the committed full-size records are mandatory; .smoke siblings are
+# validated whenever present (ci.sh regenerates them just before this runs)
+REQUIRED = set(SCHEMAS)
+
+
+def validate_file(path: str, schema: dict, smoke_expected: bool, errors: list) -> None:
+    rel = os.path.relpath(path, REPO_ROOT)
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError) as e:
+        errors.append(f"{rel}: unreadable ({e})")
+        return
+    before = len(errors)
+    _check(data, schema, rel, errors)
+    if isinstance(data, dict) and data.get("smoke") is not smoke_expected:
+        errors.append(
+            f"{rel}: smoke={data.get('smoke')!r} but this file must record a "
+            f"{'smoke' if smoke_expected else 'full-size'} run"
+        )
+    if len(errors) == before:
+        print(f"ok: {rel}")
+
+
+def main(argv=None) -> int:
+    root = (argv or [None])[1] if argv and len(argv) > 1 else REPO_ROOT
+    errors: list = []
+    checked = 0
+    for name, schema in sorted(SCHEMAS.items()):
+        full = os.path.join(root, name)
+        if os.path.exists(full):
+            validate_file(full, schema, smoke_expected=False, errors=errors)
+            checked += 1
+        elif name in REQUIRED:
+            errors.append(f"{name}: committed record is missing")
+        smoke = os.path.join(root, name.replace(".json", ".smoke.json"))
+        if os.path.exists(smoke):
+            validate_file(smoke, schema, smoke_expected=True, errors=errors)
+            checked += 1
+    if errors:
+        print(f"\n{len(errors)} schema violation(s) across {checked} file(s):", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print(f"{checked} benchmark record(s) match docs/benchmarks.md")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

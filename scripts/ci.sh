@@ -8,6 +8,12 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# lint gate: the concurrency-contract analyzer over the runtime sources.
+# New findings (anything not fingerprinted in scripts/mpixlint_baseline.txt
+# with a justification) fail the build; see docs/api/analysis.md.
+python -m repro.analysis.mpixlint src/
+
 python -m pytest -q -m "not slow" "$@"
 
 # stress step: the randomized concurrency soak over its fixed seed
@@ -33,6 +39,12 @@ python -m benchmarks.datatype_iov --smoke
 python -m benchmarks.enqueue_window --smoke
 python -m benchmarks.threadcomm_rate --smoke
 python -m benchmarks.progress_autotune --smoke
+
+# schema gate: every BENCH_*.json just written (and the committed
+# full-size records) must match the shapes documented in
+# docs/benchmarks.md — a benchmark that silently drops a field breaks
+# the cross-PR perf trajectory
+python scripts/check_bench_schema.py
 
 # docs step: every fenced Python snippet in README.md and docs/ must
 # execute cleanly (the documentation is part of the test surface)

@@ -1,0 +1,49 @@
+"""Correctness tooling for the progress runtime (PR 6).
+
+Two halves:
+
+* :mod:`repro.analysis.mpixlint` — the MPIX001–006 static linter
+  (``python -m repro.analysis.mpixlint src/``); programmatic entry
+  points :func:`lint_source` / :func:`lint_paths` re-exported here.
+* :mod:`repro.analysis.sanitizer` — the runtime lock/park/leak sanitizer
+  behind ``ProgressEngine(sanitize=True)`` /
+  ``engine.sanitizer_report()``.
+
+Pure stdlib (``ast`` + ``threading``): importable anywhere, no new
+dependencies.
+"""
+
+from repro.analysis.core import Finding
+
+__all__ = [
+    "Finding",
+    "lint_source",
+    "lint_paths",
+    "load_baseline",
+    "ALL_RULES",
+    "RULES_BY_ID",
+    "Sanitizer",
+]
+
+# Lazy re-exports (PEP 562): `python -m repro.analysis.mpixlint` imports
+# this package before executing the submodule as __main__ — an eager
+# `from .mpixlint import ...` here would trip runpy's double-import
+# warning and execute the module twice.
+_LAZY = {
+    "lint_source": ("repro.analysis.mpixlint", "lint_source"),
+    "lint_paths": ("repro.analysis.mpixlint", "lint_paths"),
+    "load_baseline": ("repro.analysis.mpixlint", "load_baseline"),
+    "ALL_RULES": ("repro.analysis.rules", "ALL_RULES"),
+    "RULES_BY_ID": ("repro.analysis.rules", "RULES_BY_ID"),
+    "Sanitizer": ("repro.analysis.sanitizer", "Sanitizer"),
+}
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+
+    return getattr(importlib.import_module(mod_name), attr)

@@ -1,0 +1,172 @@
+"""Shared machinery for the ``mpixlint`` static rules.
+
+A rule is a module under :mod:`repro.analysis.rules` exposing a ``RULE``
+instance of :class:`Rule`. Rules are AST-level: each gets the parsed
+module plus a :class:`FileContext` to report :class:`Finding`\\ s into.
+Cross-file rules (lock-order consistency) additionally stash facts in
+``FileContext.project`` — a dict shared across the whole lint run — and
+emit their findings from :meth:`Rule.finalize`.
+
+Findings are identified by a **stable fingerprint**
+(``file::RULE::qualname::key``) rather than a line number, so the
+baseline file does not thrash every time a module is edited above a
+known exception.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+__all__ = [
+    "Finding",
+    "FileContext",
+    "Rule",
+    "call_name",
+    "receiver_name",
+    "dotted_name",
+    "iter_functions",
+    "enclosing_qualname",
+]
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One diagnostic. ``key`` is a short slug naming the violation kind
+    within the rule (it feeds the baseline fingerprint); ``qualname`` is
+    the enclosing function/class path (``<module>`` at top level)."""
+
+    file: str
+    line: int
+    col: int
+    rule: str
+    message: str
+    qualname: str = "<module>"
+    key: str = "violation"
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.file}::{self.rule}::{self.qualname}::{self.key}"
+
+    def render(self) -> str:
+        return (
+            f"{self.file}:{self.line}:{self.col}: {self.rule} {self.message} "
+            f"[{self.qualname}/{self.key}]"
+        )
+
+
+class FileContext:
+    """Per-file lint state handed to every rule."""
+
+    def __init__(self, file: str, tree: ast.Module, source: str, project: Dict):
+        self.file = file
+        self.tree = tree
+        self.source = source
+        self.project = project  # shared across all files of the run
+        self.findings: List[Finding] = []
+        self._parents: Optional[Dict[int, ast.AST]] = None
+        self._qualnames: Optional[Dict[int, str]] = None
+
+    def add(self, node: ast.AST, rule: str, message: str, key: str = "violation") -> None:
+        self.findings.append(
+            Finding(
+                file=self.file,
+                line=getattr(node, "lineno", 0),
+                col=getattr(node, "col_offset", 0),
+                rule=rule,
+                message=message,
+                qualname=self.qualname_of(node),
+                key=key,
+            )
+        )
+
+    # -- parent / qualname maps (built lazily, shared by the rules) ------
+    def parents(self) -> Dict[int, ast.AST]:
+        if self._parents is None:
+            self._parents = {}
+            for parent in ast.walk(self.tree):
+                for child in ast.iter_child_nodes(parent):
+                    self._parents[id(child)] = parent
+        return self._parents
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self.parents().get(id(node))
+
+    def ancestors(self, node: ast.AST):
+        """Yield ancestors innermost-first (excluding ``node`` itself)."""
+        cur = self.parent(node)
+        while cur is not None:
+            yield cur
+            cur = self.parent(cur)
+
+    def qualname_of(self, node: ast.AST) -> str:
+        """Dotted class/function path enclosing ``node``."""
+        names: List[str] = []
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                names.append(cur.name)
+            cur = self.parent(cur)
+        return ".".join(reversed(names)) or "<module>"
+
+
+@dataclass
+class Rule:
+    """One lint rule. ``check`` runs per file; ``finalize`` (optional)
+    runs once after every file, for cross-file rules."""
+
+    rule_id: str
+    name: str
+    summary: str
+    check: Callable[[FileContext], None]
+    finalize: Optional[Callable[[Dict], List[Finding]]] = None
+
+
+# ----------------------------------------------------------------------
+# Small AST helpers shared by the rules
+# ----------------------------------------------------------------------
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    """Terminal name of the called function: ``engine.channel_section``
+    → ``channel_section``, ``recv`` → ``recv``; None for computed calls."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """Dotted source form of a Name/Attribute chain (``self._tc``,
+    ``comm``); None if the chain contains calls/subscripts."""
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def receiver_name(call: ast.Call) -> Optional[str]:
+    """Dotted receiver of a method call: ``self._tc.start()`` →
+    ``self._tc``; None for bare-name calls or computed receivers."""
+    if isinstance(call.func, ast.Attribute):
+        return dotted_name(call.func.value)
+    return None
+
+
+def iter_functions(tree: ast.Module):
+    """Every function/method (including nested) in the module."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def enclosing_qualname(ctx: FileContext, node: ast.AST) -> str:
+    return ctx.qualname_of(node)

@@ -1,0 +1,257 @@
+"""``mpixlint`` — concurrency-contract linter for the progress runtime.
+
+Usage::
+
+    python -m repro.analysis.mpixlint src/ [more paths] [options]
+
+Walks every ``*.py`` under the given paths, runs the MPIX001–006 rules
+(see :mod:`repro.analysis.rules`), and prints ``file:line:col: RULEID
+message`` diagnostics. Exit status is 0 iff every finding is covered by
+the baseline file, so CI gates on **new** violations only.
+
+Baseline format — one fingerprint per line, ``#`` comments and blank
+lines ignored, optional inline justification after two spaces + ``#``::
+
+    src/repro/data/pipeline.py::MPIX005::SyntheticPipeline.start_workers::start-no-finish  # epoch closed by stop_workers()
+
+Fingerprints are ``file::RULE::qualname::key`` (no line numbers), so
+edits above a baselined site do not thrash the file. ``--write-baseline``
+regenerates it from the current findings.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+import ast
+
+from repro.analysis.core import FileContext, Finding
+from repro.analysis.rules import ALL_RULES, RULES_BY_ID
+
+__all__ = ["lint_source", "lint_paths", "load_baseline", "main"]
+
+DEFAULT_BASELINE_CANDIDATES = (
+    "mpixlint_baseline.txt",
+    os.path.join("scripts", "mpixlint_baseline.txt"),
+)
+
+
+def _select_rules(select: Optional[Iterable[str]]):
+    if not select:
+        return ALL_RULES
+    wanted = {s.strip().upper() for s in select if s.strip()}
+    unknown = wanted - set(RULES_BY_ID)
+    if unknown:
+        raise ValueError(f"unknown rule id(s): {sorted(unknown)}")
+    return [r for r in ALL_RULES if r.rule_id in wanted]
+
+
+def _dedupe(findings: List[Finding]) -> List[Finding]:
+    seen: Set[Tuple] = set()
+    out: List[Finding] = []
+    for f in findings:
+        k = (f.file, f.rule, f.line, f.col, f.qualname, f.key)
+        if k not in seen:
+            seen.add(k)
+            out.append(f)
+    return out
+
+
+def lint_source(
+    source: str,
+    filename: str = "<string>",
+    select: Optional[Iterable[str]] = None,
+    project: Optional[Dict] = None,
+    finalize: bool = True,
+) -> List[Finding]:
+    """Lint one source string. The programmatic API used by the tests and
+    the executable doc snippets. ``project`` threads cross-file state for
+    multi-file runs; with the default (fresh) project plus ``finalize``,
+    cross-file rules reconcile over just this source."""
+    rules = _select_rules(select)
+    project = {} if project is None else project
+    tree = ast.parse(source, filename=filename)
+    ctx = FileContext(filename.replace(os.sep, "/"), tree, source, project)
+    for rule in rules:
+        rule.check(ctx)
+    findings = list(ctx.findings)
+    if finalize:
+        for rule in rules:
+            if rule.finalize is not None:
+                findings.extend(rule.finalize(project))
+    return _dedupe(sorted(findings, key=lambda f: (f.file, f.line, f.col, f.rule)))
+
+
+def _iter_py_files(paths: Sequence[str]) -> List[str]:
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, names in os.walk(p):
+                dirs[:] = sorted(d for d in dirs if d not in {"__pycache__", ".git"})
+                files.extend(
+                    os.path.join(root, n) for n in sorted(names) if n.endswith(".py")
+                )
+        elif p.endswith(".py"):
+            files.append(p)
+        else:
+            raise FileNotFoundError(f"mpixlint: not a directory or .py file: {p}")
+    return files
+
+
+def lint_paths(
+    paths: Sequence[str], select: Optional[Iterable[str]] = None
+) -> List[Finding]:
+    """Lint every ``*.py`` under ``paths``; cross-file rules reconcile
+    over the whole set."""
+    rules = _select_rules(select)
+    project: Dict = {}
+    findings: List[Finding] = []
+    for path in _iter_py_files(paths):
+        with open(path, "r", encoding="utf-8") as fh:
+            source = fh.read()
+        try:
+            findings.extend(
+                lint_source(
+                    source,
+                    filename=os.path.relpath(path).replace(os.sep, "/"),
+                    select=select,
+                    project=project,
+                    finalize=False,
+                )
+            )
+        except SyntaxError as e:
+            findings.append(
+                Finding(
+                    file=path,
+                    line=e.lineno or 0,
+                    col=e.offset or 0,
+                    rule="MPIX000",
+                    message=f"syntax error: {e.msg}",
+                    key="syntax-error",
+                )
+            )
+    for rule in rules:
+        if rule.finalize is not None:
+            findings.extend(rule.finalize(project))
+    return _dedupe(sorted(findings, key=lambda f: (f.file, f.line, f.col, f.rule)))
+
+
+# ----------------------------------------------------------------------
+# Baseline handling
+# ----------------------------------------------------------------------
+
+
+def load_baseline(path: str) -> Set[str]:
+    fingerprints: Set[str] = set()
+    with open(path, "r", encoding="utf-8") as fh:
+        for raw in fh:
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            # inline justification: "<fingerprint>  # why this is OK"
+            if "  #" in line:
+                line = line.split("  #", 1)[0].rstrip()
+            fingerprints.add(line)
+    return fingerprints
+
+
+def _find_default_baseline() -> Optional[str]:
+    for cand in DEFAULT_BASELINE_CANDIDATES:
+        if os.path.isfile(cand):
+            return cand
+    return None
+
+
+def write_baseline(path: str, findings: Sequence[Finding]) -> None:
+    lines = [
+        "# mpixlint baseline — known findings the CI gate tolerates.",
+        "# One fingerprint (file::RULE::qualname::key) per line; append",
+        "# '  # justification' to each entry explaining why it is intentional.",
+        "# Regenerate with: python -m repro.analysis.mpixlint <paths> --write-baseline",
+        "",
+    ]
+    for fp in sorted({f.fingerprint for f in findings}):
+        lines.append(fp)
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write("\n".join(lines) + "\n")
+
+
+# ----------------------------------------------------------------------
+# CLI
+# ----------------------------------------------------------------------
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.mpixlint",
+        description="concurrency-contract linter for the repro progress runtime",
+    )
+    ap.add_argument("paths", nargs="+", help="directories or .py files to lint")
+    ap.add_argument(
+        "--baseline",
+        default=None,
+        help="baseline file of tolerated fingerprints "
+        "(default: ./mpixlint_baseline.txt or ./scripts/mpixlint_baseline.txt)",
+    )
+    ap.add_argument(
+        "--no-baseline", action="store_true", help="report every finding; ignore any baseline"
+    )
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="write the current findings to the baseline file and exit 0",
+    )
+    ap.add_argument(
+        "--select", default=None, help="comma-separated rule ids (e.g. MPIX001,MPIX004)"
+    )
+    ap.add_argument(
+        "--show-baselined",
+        action="store_true",
+        help="also print findings suppressed by the baseline",
+    )
+    ap.add_argument("--list-rules", action="store_true", help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.rule_id}  {rule.name:<22} {rule.summary}")
+        return 0
+
+    select = args.select.split(",") if args.select else None
+    try:
+        findings = lint_paths(args.paths, select=select)
+    except (FileNotFoundError, ValueError) as e:
+        print(str(e), file=sys.stderr)
+        return 2
+
+    baseline_path = args.baseline or _find_default_baseline()
+    if args.write_baseline:
+        baseline_path = baseline_path or DEFAULT_BASELINE_CANDIDATES[1]
+        write_baseline(baseline_path, findings)
+        print(f"mpixlint: wrote {len(findings)} fingerprint(s) to {baseline_path}")
+        return 0
+
+    baseline: Set[str] = set()
+    if not args.no_baseline and baseline_path:
+        baseline = load_baseline(baseline_path)
+
+    new = [f for f in findings if f.fingerprint not in baseline]
+    suppressed = [f for f in findings if f.fingerprint in baseline]
+    for f in new:
+        print(f.render())
+    if args.show_baselined:
+        for f in suppressed:
+            print(f"{f.render()}  (baselined)")
+    tail = f", {len(suppressed)} baselined" if baseline else ""
+    print(
+        f"mpixlint: {len(new)} new finding(s){tail} "
+        f"across {len(_iter_py_files(args.paths))} file(s)"
+    )
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

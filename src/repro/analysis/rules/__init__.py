@@ -1,0 +1,33 @@
+"""Rule registry for :mod:`repro.analysis.mpixlint`.
+
+Each ``mpix00N_*`` module exports ``RULE``; ``ALL_RULES`` is the ordered
+registry the driver iterates. Adding a rule = adding a module here.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.analysis.core import Rule
+
+from repro.analysis.rules import (
+    mpix001_blocking_in_section,
+    mpix002_reserve_bracket,
+    mpix003_coll_tag_namespace,
+    mpix004_request_leak,
+    mpix005_epoch_bracket,
+    mpix006_lock_order,
+)
+
+ALL_RULES: List[Rule] = [
+    mpix001_blocking_in_section.RULE,
+    mpix002_reserve_bracket.RULE,
+    mpix003_coll_tag_namespace.RULE,
+    mpix004_request_leak.RULE,
+    mpix005_epoch_bracket.RULE,
+    mpix006_lock_order.RULE,
+]
+
+RULES_BY_ID: Dict[str, Rule] = {r.rule_id: r for r in ALL_RULES}
+
+__all__ = ["ALL_RULES", "RULES_BY_ID"]

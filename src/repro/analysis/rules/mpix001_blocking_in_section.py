@@ -1,0 +1,84 @@
+"""MPIX001 — blocking call inside a ``channel_section`` body.
+
+``engine.channel_section(ch)`` (and ``engine.lock_for(ch)`` used as a
+context manager) holds the channel's stripe lock for the whole body.
+Blocking inside it — ``recv``/``wait``/``wait_all``/``wait_any``/
+``park_on_channel``/``reserve`` — stalls every other thread that needs
+the same stripe (including the completer that would satisfy the wait):
+a single-thread recipe for deadlock, and under load a guaranteed
+progress stall.
+
+The check is lexical, as specified: any blocking call whose source
+position is inside the ``with`` body is flagged, including calls inside
+nested ``def``/``lambda`` bodies (closures defined there are usually
+predicates that run under the stripe lock anyway). Condition-variable
+waits on the section's own machinery (receiver chain ending in ``.cv``)
+are exempt — that is the engine's own park implementation, which
+releases the lock while sleeping.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import FileContext, Rule, call_name, dotted_name
+
+RULE_ID = "MPIX001"
+
+_SECTION_NAMES = {"channel_section", "lock_for"}
+_BLOCKING = {"recv", "wait", "wait_all", "wait_any", "park_on_channel", "reserve"}
+
+
+def _section_withitems(node: ast.AST):
+    """Yield withitem context calls that open a stripe critical section."""
+    if not isinstance(node, (ast.With, ast.AsyncWith)):
+        return
+    for item in node.items:
+        ctx = item.context_expr
+        if isinstance(ctx, ast.Call) and call_name(ctx) in _SECTION_NAMES:
+            yield item
+
+
+def _is_cv_wait(call: ast.Call) -> bool:
+    # threading.Condition.wait on the engine's own waiter objects:
+    # `w.cv.wait(...)`, `stripe.cv.wait(...)` — releases the lock, exempt.
+    if isinstance(call.func, ast.Attribute) and call.func.attr == "wait":
+        recv = dotted_name(call.func.value)
+        return recv is not None and (recv == "cv" or recv.endswith(".cv"))
+    return False
+
+
+def check(ctx: FileContext) -> None:
+    seen = set()  # one finding per call even under nested sections
+    for node in ast.walk(ctx.tree):
+        if not any(True for _ in _section_withitems(node)):
+            continue
+        for inner in ast.walk(node):
+            if inner is node or not isinstance(inner, ast.Call):
+                continue
+            name = call_name(inner)
+            if name not in _BLOCKING:
+                continue
+            # the section opener itself (`with x.lock_for(ch):`) is not a
+            # blocking call in the body
+            if any(inner is item.context_expr for item in node.items):
+                continue
+            if _is_cv_wait(inner) or id(inner) in seen:
+                continue
+            seen.add(id(inner))
+            ctx.add(
+                inner,
+                RULE_ID,
+                f"blocking call '{name}()' inside a channel_section/lock_for "
+                f"body holds the stripe lock while sleeping (deadlock hazard) "
+                f"— move the blocking call outside the section",
+                key=f"blocking-{name}",
+            )
+
+
+RULE = Rule(
+    rule_id=RULE_ID,
+    name="blocking-in-section",
+    summary="blocking call lexically inside `with engine.channel_section(...)`",
+    check=check,
+)

@@ -1,0 +1,156 @@
+"""MPIX002 — ``reserve()`` whose success path can leak the slot.
+
+The :class:`~repro.core.enqueue.OffloadWindow` contract: every
+successful ``reserve()`` must be paired with exactly one of
+``register()`` / ``admit()`` / ``unreserve()`` — or the caller should
+use the ``issue()`` context manager, which guarantees the release in a
+``finally``. A reserve that can exit (return or raise) without one of
+those permanently shrinks the window: after ``depth`` leaks every
+subsequent ``reserve`` parks forever.
+
+Two variants are flagged, per function:
+
+* ``reserve-unreleased`` — a ``reserve()`` call in a function that
+  contains **no** ``register``/``admit``/``unreserve``/``issue``/
+  ``submit`` call at all (the slot can never be released locally);
+* ``reserve-unprotected`` — other calls execute between the
+  ``reserve()`` and the first releasing call in the same statement
+  list, and no enclosing ``try`` releases the slot in a ``finally`` or
+  handler — an exception from the intermediate call leaks the slot.
+  The fix is ``with window.issue() as submit: ...``.
+
+Scope is a single function: a reserve whose release lives in another
+method is invisible to this pass and should be baselined with a
+justification.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.core import FileContext, Rule, call_name, iter_functions
+
+RULE_ID = "MPIX002"
+
+_RELEASES = {"register", "admit", "unreserve", "issue", "submit"}
+
+
+def _calls_in(node: ast.AST, *, skip_defs: bool = True, enter_root_def: bool = False):
+    """Call nodes in ``node``. With ``skip_defs`` (default) function/lambda
+    bodies are pruned — a call inside a ``def`` does not execute at the
+    point the ``def`` statement runs. ``enter_root_def`` admits the root
+    node's own body even if the root is a function (for scanning a
+    function we are analyzing)."""
+    stack = [(node, True)]
+    while stack:
+        cur, is_root = stack.pop()
+        if (
+            skip_defs
+            and isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda))
+            and not (is_root and enter_root_def)
+        ):
+            continue
+        if isinstance(cur, ast.Call):
+            yield cur
+        stack.extend((c, False) for c in ast.iter_child_nodes(cur))
+
+
+def _has_release(node: ast.AST, *, skip_defs: bool = True) -> bool:
+    return any(call_name(c) in _RELEASES for c in _calls_in(node, skip_defs=skip_defs))
+
+
+def _stmt_list_of(ctx: FileContext, stmt: ast.stmt) -> Optional[List[ast.stmt]]:
+    parent = ctx.parent(stmt)
+    if parent is None:
+        return None
+    for field in ("body", "orelse", "finalbody"):
+        block = getattr(parent, field, None)
+        if isinstance(block, list) and stmt in block:
+            return block
+    return None
+
+
+def _containing_stmt(ctx: FileContext, node: ast.AST, fn: ast.AST) -> Optional[ast.stmt]:
+    """Innermost statement containing ``node`` within ``fn``."""
+    cur: Optional[ast.AST] = node
+    while cur is not None and cur is not fn:
+        parent = ctx.parent(cur)
+        if isinstance(cur, ast.stmt) and parent is not None:
+            return cur
+        cur = parent
+    return None
+
+
+def _released_in_finally(ctx: FileContext, stmt: ast.stmt, fn: ast.AST) -> bool:
+    """True if an enclosing try releases the slot in finally/handler."""
+    cur: Optional[ast.AST] = stmt
+    while cur is not None and cur is not fn:
+        if isinstance(cur, ast.Try):
+            for blk in [cur.finalbody] + [h.body for h in cur.handlers]:
+                if any(_has_release(s) for s in blk):
+                    return True
+        cur = ctx.parent(cur)
+    return False
+
+
+def check(ctx: FileContext) -> None:
+    for fn in iter_functions(ctx.tree):
+        reserves = [
+            c
+            for c in _calls_in(fn, skip_defs=False)
+            if call_name(c) == "reserve"
+            and isinstance(c.func, ast.Attribute)  # method call on a window
+        ]
+        if not reserves:
+            continue
+        fn_has_release = _has_release(fn, skip_defs=False)
+        for call in reserves:
+            stmt = _containing_stmt(ctx, call, fn)
+            if stmt is None:
+                continue
+            if not fn_has_release:
+                ctx.add(
+                    call,
+                    RULE_ID,
+                    "reserve() with no register()/admit()/unreserve() reachable "
+                    "in this function — the window slot can never be released "
+                    "(use `with window.issue() as submit:` instead)",
+                    key="reserve-unreleased",
+                )
+                continue
+            if _released_in_finally(ctx, stmt, fn):
+                continue
+            # scan forward in the same statement list for the release;
+            # any intermediate statement that makes calls can raise and
+            # leak the slot
+            block = _stmt_list_of(ctx, stmt)
+            if block is None:
+                continue
+            risky = False
+            for later in block[block.index(stmt) + 1 :]:
+                if _has_release(later):
+                    break
+                if any(True for _ in _calls_in(later)):
+                    risky = True
+            else:
+                # release not found in this statement list at all —
+                # treat as unprotected unless a finally covers it
+                risky = True
+            if risky:
+                ctx.add(
+                    call,
+                    RULE_ID,
+                    "code between reserve() and its release can raise and leak "
+                    "the window slot — wrap the bracket in "
+                    "`with window.issue() as submit:` or release in a finally",
+                    key="reserve-unprotected",
+                )
+
+
+RULE = Rule(
+    rule_id=RULE_ID,
+    name="reserve-bracket",
+    summary="reserve() whose success path can exit without issue()/admit()/unreserve()",
+    check=check,
+)

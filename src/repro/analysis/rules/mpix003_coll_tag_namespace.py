@@ -1,0 +1,60 @@
+"""MPIX003 — user code constructing tags in the collective namespace.
+
+:mod:`repro.core.threadcoll` reserves the tag shape ``(_COLL, op, seq,
+round)`` (first element the sentinel string ``"__tc_coll__"``) for its
+collective protocol. A user-constructed tuple tag whose first element is
+that sentinel — by importing ``_COLL`` or by spelling the string — can
+match-steal a collective's message and corrupt an unrelated barrier/
+bcast/reduce. Only ``core/threadcoll.py`` may build such tags.
+
+Comparisons against the sentinel (``tag[0] == threadcoll._COLL``) are
+fine — that is how dispatch code *recognizes* collective traffic — so
+only tuple **constructions** are flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import FileContext, Rule
+
+RULE_ID = "MPIX003"
+
+_SENTINEL = "__tc_coll__"
+_ALLOWED_SUFFIXES = ("core/threadcoll.py", "core\\threadcoll.py")
+
+
+def _is_coll_head(node: ast.expr) -> bool:
+    if isinstance(node, ast.Constant) and node.value == _SENTINEL:
+        return True
+    if isinstance(node, ast.Name) and node.id == "_COLL":
+        return True
+    if isinstance(node, ast.Attribute) and node.attr == "_COLL":
+        return True
+    return False
+
+
+def check(ctx: FileContext) -> None:
+    if ctx.file.endswith(_ALLOWED_SUFFIXES):
+        return
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Tuple) and node.elts):
+            continue
+        if _is_coll_head(node.elts[0]):
+            ctx.add(
+                node,
+                RULE_ID,
+                f"tuple tag in the reserved collective namespace "
+                f"(first element {_SENTINEL!r}/_COLL) constructed outside "
+                f"core/threadcoll.py — this can match-steal collective "
+                f"protocol messages; use your own tag namespace",
+                key="coll-tag-construction",
+            )
+
+
+RULE = Rule(
+    rule_id=RULE_ID,
+    name="coll-tag-namespace",
+    summary="user-constructed (_COLL, ...) tag outside core/threadcoll.py",
+    check=check,
+)

@@ -1,0 +1,131 @@
+"""MPIX004 — request handles that are never waited, reaped, or cancelled.
+
+``grequest_start`` / ``irecv`` / ``isend_enqueue`` / ``dispatch_enqueue``
+return live handles registered with the progress engine. Dropping the
+handle leaks it: the engine's pending count never drains, ``stop_all``
+reports phantom work, and for posted receives the mailbox slot is held
+forever.
+
+Flagged shapes:
+
+* ``dropped-result`` — the producer call is an expression statement
+  (its result is discarded on the spot);
+* ``unused-handle`` — the result is bound to a plain local name that is
+  never read again in the enclosing function.
+
+Anything that lets the handle **escape** — storing into an attribute or
+container, passing it to another call, returning/yielding it — is
+treated as consumption: lifetime is then someone else's responsibility
+(the runtime sanitizer checks the dynamic side of this contract).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from repro.analysis.core import FileContext, Rule, call_name, iter_functions
+
+RULE_ID = "MPIX004"
+
+_PRODUCERS = {"grequest_start", "irecv", "isend_enqueue", "dispatch_enqueue"}
+
+
+def _direct_functions(tree: ast.Module):
+    """Functions with their *own* subtree ownership: a nested def's body
+    belongs to the nested def, not the outer one."""
+    owned: Dict[int, ast.AST] = {}
+
+    def _assign(scope: ast.AST, node: ast.AST) -> None:
+        owned[id(node)] = scope
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                _assign_fn(child)
+            else:
+                _assign(scope, child)
+
+    def _assign_fn(fn: ast.AST) -> None:
+        owned[id(fn)] = fn
+        for child in ast.iter_child_nodes(fn):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                _assign_fn(child)
+            else:
+                _assign(fn, child)
+
+    for stmt in tree.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            _assign_fn(stmt)
+        else:
+            _assign(tree, stmt)
+    return owned
+
+
+def check(ctx: FileContext) -> None:
+    owned = _direct_functions(ctx.tree)
+
+    scopes: List[ast.AST] = [ctx.tree] + list(iter_functions(ctx.tree))
+    for scope in scopes:
+        # nodes owned by this scope only (closures analyzed separately)
+        nodes = [n for n in ast.walk(scope) if owned.get(id(n)) is scope]
+        loads: Set[str] = {
+            n.id for n in nodes if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+        }
+        # names captured by closures nested in this scope also count as reads
+        for n in nodes:
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                for sub in ast.walk(n):
+                    if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load):
+                        loads.add(sub.id)
+
+        for node in nodes:
+            if not (isinstance(node, ast.Call) and call_name(node) in _PRODUCERS):
+                continue
+            parent = ctx.parent(node)
+            if isinstance(parent, ast.Expr):
+                ctx.add(
+                    node,
+                    RULE_ID,
+                    f"result of {call_name(node)}() is discarded — the request "
+                    f"handle is never waited, reaped, or cancelled (request leak)",
+                    key=f"dropped-{call_name(node)}",
+                )
+                continue
+            if isinstance(parent, ast.Assign):
+                # only plain-name targets; attribute/subscript targets escape.
+                # A tuple-unpack (isend_enqueue's (y, req)) can't tell which
+                # element is the handle, so it leaks only if NO element is
+                # ever read.
+                groups: List[List[str]] = []
+                escaped = False
+                for tgt in parent.targets:
+                    if isinstance(tgt, ast.Name):
+                        groups.append([tgt.id])
+                    elif isinstance(tgt, (ast.Tuple, ast.List)) and all(
+                        isinstance(e, ast.Name) for e in tgt.elts
+                    ):
+                        groups.append([e.id for e in tgt.elts])
+                    else:
+                        escaped = True
+                        break
+                if escaped:
+                    continue
+                for names in groups:
+                    if any(nm == "_" or nm in loads for nm in names):
+                        continue
+                    label = "/".join(names)
+                    ctx.add(
+                        node,
+                        RULE_ID,
+                        f"'{label}' holds a {call_name(node)}() handle but is "
+                        f"never used — the request is never waited, reaped, "
+                        f"or cancelled (request leak)",
+                        key=f"unused-{label.replace('/', '-')}",
+                    )
+
+
+RULE = Rule(
+    rule_id=RULE_ID,
+    name="request-leak",
+    summary="grequest_start/irecv/isend_enqueue results never waited/reaped/cancelled",
+    check=check,
+)

@@ -1,0 +1,164 @@
+"""MPIX005 — threadcomm epoch brackets without a guaranteed close.
+
+``HostThreadComm.start()`` opens an epoch that pins VCI channels out of
+the engine's finite :class:`~repro.core.streams.StreamPool`; ``finish()``
+returns them. ``attach()`` similarly binds a thread rank that
+``detach()`` must release before ``finish(drain=True)`` can drain. If
+the code between ``start()`` and ``finish()`` can raise, and ``finish``
+is not in a ``finally``, the channels leak for the life of the process.
+
+Because ``.start()``/``.finish()`` are common method names, this rule
+only fires on receivers it can *prove* are threadcomms: names or
+attributes assigned from ``HostThreadComm(...)``,
+``host_threadcomm_init(...)``, or ``.with_host_threads(...)`` anywhere
+in the module.
+
+Per function containing a tracked ``x.start()``:
+
+* ``start-no-finish`` — no ``x.finish(...)`` anywhere in the function
+  (lifecycles split across methods must be baselined with justification);
+* ``finish-not-in-finally`` — a ``finish`` exists but no enclosing
+  ``finally`` runs it, so an exception skips the close.
+
+Per function containing a tracked ``x.attach(...)``: a ``.detach()``
+call must appear inside some ``finally`` of the same function
+(``attach-no-detach`` otherwise).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Optional, Set
+
+from repro.analysis.core import (
+    FileContext,
+    Rule,
+    call_name,
+    dotted_name,
+    iter_functions,
+    receiver_name,
+)
+
+RULE_ID = "MPIX005"
+
+_CONSTRUCTORS = {"HostThreadComm", "host_threadcomm_init", "with_host_threads"}
+
+
+def _tracked_receivers(tree: ast.Module) -> Set[str]:
+    tracked: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        val = node.value
+        if not (isinstance(val, ast.Call) and call_name(val) in _CONSTRUCTORS):
+            continue
+        for tgt in node.targets:
+            name = dotted_name(tgt)
+            if name:
+                tracked.add(name)
+    return tracked
+
+
+def _calls_named(fn: ast.AST, method: str, tracked: Set[str]):
+    for node in ast.walk(fn):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == method
+        ):
+            recv = receiver_name(node)
+            if recv in tracked:
+                yield node
+
+
+def _in_finally(ctx: FileContext, node: ast.AST, fn: ast.AST) -> bool:
+    cur: Optional[ast.AST] = node
+    while cur is not None and cur is not fn:
+        parent = ctx.parent(cur)
+        if isinstance(parent, ast.Try) and _stmt_in_block(cur, parent.finalbody):
+            return True
+        cur = parent
+    return False
+
+
+def _stmt_in_block(node: ast.AST, block) -> bool:
+    return isinstance(block, list) and any(node is s for s in block)
+
+
+def _any_finally_calls(ctx: FileContext, fn: ast.AST, method: str) -> bool:
+    """Does any finally block in ``fn`` call ``.method(...)`` (on any
+    receiver — attach handles detach via the returned rank handle)?"""
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Try) or not node.finalbody:
+            continue
+        for stmt in node.finalbody:
+            for sub in ast.walk(stmt):
+                if (
+                    isinstance(sub, ast.Call)
+                    and isinstance(sub.func, ast.Attribute)
+                    and sub.func.attr == method
+                ):
+                    return True
+    return False
+
+
+def check(ctx: FileContext) -> None:
+    tracked = _tracked_receivers(ctx.tree)
+    if not tracked:
+        return
+    for fn in iter_functions(ctx.tree):
+        starts = list(_calls_named(fn, "start", tracked))
+        for call in starts:
+            recv = receiver_name(call)
+            finishes = [
+                c
+                for c in ast.walk(fn)
+                if isinstance(c, ast.Call)
+                and isinstance(c.func, ast.Attribute)
+                and c.func.attr == "finish"
+                and receiver_name(c) == recv
+            ]
+            if not finishes:
+                ctx.add(
+                    call,
+                    RULE_ID,
+                    f"{recv}.start() opens a threadcomm epoch but this function "
+                    f"never calls {recv}.finish() — VCI channels leak if the "
+                    f"epoch is abandoned",
+                    key="start-no-finish",
+                )
+            elif not any(_in_finally(ctx, _stmt_of(ctx, c, fn), fn) for c in finishes):
+                ctx.add(
+                    call,
+                    RULE_ID,
+                    f"{recv}.finish() is not in a finally — an exception between "
+                    f"start() and finish() leaks the epoch's VCI channels",
+                    key="finish-not-in-finally",
+                )
+        for call in _calls_named(fn, "attach", tracked):
+            if not _any_finally_calls(ctx, fn, "detach"):
+                ctx.add(
+                    call,
+                    RULE_ID,
+                    f"{receiver_name(call)}.attach() binds a thread rank but no "
+                    f"finally in this function calls detach() — "
+                    f"finish(drain=True) will hang on the abandoned rank",
+                    key="attach-no-detach",
+                )
+
+
+def _stmt_of(ctx: FileContext, node: ast.AST, fn: ast.AST) -> ast.AST:
+    cur: Optional[ast.AST] = node
+    while cur is not None and cur is not fn:
+        if isinstance(cur, ast.stmt):
+            return cur
+        cur = ctx.parent(cur)
+    return node
+
+
+RULE = Rule(
+    rule_id=RULE_ID,
+    name="epoch-bracket",
+    summary="threadcomm start()/attach() without finish()/detach() in a finally",
+    check=check,
+)

@@ -1,0 +1,103 @@
+"""MPIX006 — inconsistent nesting order of stripe critical sections.
+
+Nesting ``channel_section``/``lock_for`` acquisitions is legal (stripe
+locks are independent), but only if every call site agrees on the
+order: one site taking ``(a → b)`` while another takes ``(b → a)`` is
+the classic two-lock deadlock, and with many channels hashed onto few
+stripes it fires in production long after the code reviews clean.
+
+The rule records every lexically nested section pair, keyed by the
+*source text* of the channel argument (``ast.unparse``, whitespace
+normalized), and reconciles globally in ``finalize``: a pair ``(x, y)``
+observed alongside ``(y, x)`` anywhere in the run flags **all**
+participating sites. Matching is textual — ``cfg.ch_a`` vs ``ch_a`` are
+different keys — so the rule under-approximates aliasing but never
+needs to execute code.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Tuple
+
+from repro.analysis.core import FileContext, Finding, Rule, call_name
+
+RULE_ID = "MPIX006"
+
+_SECTION_NAMES = {"channel_section", "lock_for"}
+_PAIRS_KEY = "mpix006_pairs"  # (outer, inner) -> [(file, line, col, qualname)]
+
+
+def _section_arg_key(call: ast.Call) -> str:
+    if call.args:
+        return re.sub(r"\s+", "", ast.unparse(call.args[0]))
+    for kw in call.keywords:
+        if kw.arg == "channel":
+            return re.sub(r"\s+", "", ast.unparse(kw.value))
+    return "<default>"
+
+
+def _section_calls(node: ast.AST):
+    if not isinstance(node, (ast.With, ast.AsyncWith)):
+        return
+    for item in node.items:
+        c = item.context_expr
+        if isinstance(c, ast.Call) and call_name(c) in _SECTION_NAMES:
+            yield c
+
+
+def check(ctx: FileContext) -> None:
+    pairs: Dict[Tuple[str, str], List] = ctx.project.setdefault(_PAIRS_KEY, {})
+    for node in ast.walk(ctx.tree):
+        outers = list(_section_calls(node))
+        if not outers:
+            continue
+        for inner_with in ast.walk(node):
+            if inner_with is node:
+                continue
+            for inner in _section_calls(inner_with):
+                for outer in outers:
+                    ok, ik = _section_arg_key(outer), _section_arg_key(inner)
+                    if ok == ik:
+                        continue  # same-channel nesting is re-entrant, not an order
+                    pairs.setdefault((ok, ik), []).append(
+                        (ctx.file, inner.lineno, inner.col_offset, ctx.qualname_of(inner))
+                    )
+
+
+def finalize(project: Dict) -> List[Finding]:
+    pairs: Dict[Tuple[str, str], List] = project.get(_PAIRS_KEY, {})
+    findings: List[Finding] = []
+    reported = set()
+    for (a, b), sites in sorted(pairs.items()):
+        if (b, a) not in pairs or (b, a) in reported:
+            continue
+        reported.add((a, b))
+        for file, line, col, qualname in sites + pairs[(b, a)]:
+            findings.append(
+                Finding(
+                    file=file,
+                    line=line,
+                    col=col,
+                    rule=RULE_ID,
+                    message=(
+                        f"lock-order inversion: this call site nests stripe "
+                        f"sections for ({a!r}, {b!r}) while another site nests "
+                        f"({b!r}, {a!r}) — pick one global order (e.g. by "
+                        f"channel index) for every nested acquisition"
+                    ),
+                    qualname=qualname,
+                    key=f"inversion-{min(a, b)}-{max(a, b)}",
+                )
+            )
+    return findings
+
+
+RULE = Rule(
+    rule_id=RULE_ID,
+    name="lock-order",
+    summary="nested channel_section/lock_for order inconsistent across call sites",
+    check=check,
+    finalize=finalize,
+)

@@ -252,6 +252,7 @@ class _Stripe:
         "index",
         "lock",
         "cv",
+        "sanitizer",
         "queues",
         "wait_queues",
         "polls",
@@ -278,6 +279,8 @@ class _Stripe:
         # RLock: poll_fn → complete() → wake callbacks re-enter the stripe.
         self.lock = threading.RLock()
         self.cv = threading.Condition(self.lock)
+        # acquisition recorder when the engine runs with sanitize=True
+        self.sanitizer = None
         self.queues: Dict[int, List[GeneralizedRequest]] = {}
         # channel → parked _Waiters (predicate and kick waiters alike)
         self.wait_queues: Dict[int, List[_Waiter]] = {}
@@ -308,11 +311,16 @@ class _Stripe:
         else:
             self.lock.acquire()
             contended = True
+        san = self.sanitizer
+        if san is not None:
+            san.on_acquire(self.index)
         try:
             if contended:
                 self.lock_waits += 1
             yield self
         finally:
+            if san is not None:
+                san.on_release(self.index)
             self.lock.release()
 
     def needs_polling(self, channel: Optional[int]) -> bool:
@@ -334,6 +342,7 @@ class ProgressEngine:
         spin_s: float = 1e-4,
         adaptive_spin: bool = True,
         wait_queues: bool = True,
+        sanitize: bool = False,
     ):
         # global_lock=True emulates the pre-4.0 MPICH global critical
         # section (benchmark baseline); False = per-VCI critical sections.
@@ -351,12 +360,23 @@ class ProgressEngine:
         # spin_s / _SPIN_SHRINK_MAX) — spin_s=0 disables spinning entirely.
         self.spin_s = max(0.0, float(spin_s))
         self.adaptive_spin = bool(adaptive_spin)
+        # sanitize=True threads a repro.analysis.sanitizer.Sanitizer
+        # through the stripe locks, blocking entries, and the request
+        # lifecycle; engine.sanitizer_report() returns its findings.
+        # (Deferred import: analysis is optional tooling layered on core.)
+        self.sanitize = bool(sanitize)
+        self._sanitizer = None
+        if self.sanitize:
+            from repro.analysis.sanitizer import Sanitizer
+
+            self._sanitizer = Sanitizer(self)
         # +1: the last stripe homes the implicit channel (STREAM_NULL, -1).
         self._stripes: Tuple[_Stripe, ...] = tuple(
             _Stripe(i) for i in range(self.n_stripes + 1)
         )
         for s in self._stripes:
             s.spin_budget = self.spin_s
+            s.sanitizer = self._sanitizer
         self._threads: Dict[int, "_ProgressThread"] = {}
         self._threads_lock = threading.Lock()
         # single-attribute mirror of "a NULL-stream thread is registered":
@@ -470,6 +490,8 @@ class ProgressEngine:
         )
         ch = stream.channel
         stripe = self._stripe(ch)
+        if self._sanitizer is not None:
+            self._sanitizer.on_request_start(req)
         # completion from any thread wakes exactly the waiters it satisfies
         # on the request's own channel (notify_channel evaluates their
         # predicates; the legacy mode broadcasts to the whole stripe)
@@ -530,8 +552,7 @@ class ProgressEngine:
                 return
             self._notify_matching_locked(stripe, channel)
 
-    @staticmethod
-    def _notify_matching_locked(stripe: _Stripe, channel: int) -> None:
+    def _notify_matching_locked(self, stripe: _Stripe, channel: int) -> None:
         """Evaluate the predicates of ``channel``'s parked waiters and wake
         exactly the satisfied ones. Caller holds the stripe lock. The
         predicate may run on the *notifier's* thread — park predicates
@@ -539,15 +560,22 @@ class ProgressEngine:
         q = stripe.wait_queues.get(channel)
         if not q:
             return
+        true_predicates = woken = 0
         for w in list(q):
             if w.satisfied or w.predicate is None:
                 continue  # already woken / kick waiter (re-scans on its own)
             if w.predicate():
+                true_predicates += 1
                 w.satisfied = True
                 w.cv.notify()
+                woken += 1
                 stripe.notify_wakeups += 1
             else:
                 stripe.notify_skips += 1
+        if self._sanitizer is not None:
+            # no-lost-wakeup invariant: a true predicate always wakes its
+            # waiter (a tripwire for future refactors of this path)
+            self._sanitizer.on_notify(channel, true_predicates, woken)
 
     def _notify_work_locked(self, stripe: _Stripe, channel: int) -> None:
         """New pollable work arrived on ``channel``: wake the progress
@@ -602,6 +630,10 @@ class ProgressEngine:
         once per park. It must not touch this stripe's lock-ordered
         resources beyond its own state."""
         stripe = self._stripe(channel)
+        if self._sanitizer is not None:
+            # entering a park while holding any stripe lock pins that
+            # stripe for the whole sleep (dynamic MPIX001)
+            self._sanitizer.on_block("park_on_channel", stripe.index)
         deadline = None if timeout is None else time.monotonic() + timeout
 
         # -- spin phase: optimistically re-check before paying a CV park --
@@ -697,14 +729,15 @@ class ProgressEngine:
         between parking (someone else polls) and actively progressing."""
         return self._has_poller(channel)
 
-    @staticmethod
-    def _retire_locked(stripe: _Stripe, r: GeneralizedRequest) -> bool:
+    def _retire_locked(self, stripe: _Stripe, r: GeneralizedRequest) -> bool:
         """Count the completion + run free_fn exactly once. Caller holds the
         stripe lock. Returns True only for the first retirement."""
         if r._retired:
             return False
         r._retired = True
         stripe.completions += 1
+        if self._sanitizer is not None:
+            self._sanitizer.on_request_retired(r)
         if r.free_fn is not None:
             r.free_fn(r.extra_state)
         return True
@@ -770,6 +803,8 @@ class ProgressEngine:
         one call); the remainder parks on a CV when nothing needs host
         polling, else actively progresses the pending streams."""
         reqs = list(reqs)
+        if self._sanitizer is not None:
+            self._sanitizer.on_block("wait_all")
         deadline = None if timeout is None else time.monotonic() + timeout
 
         # batch wait_fn hook: one call per (wait_fn, stream-channel) batch
@@ -882,6 +917,8 @@ class ProgressEngine:
         reqs = list(reqs)
         if not reqs:
             return None
+        if self._sanitizer is not None:
+            self._sanitizer.on_block("wait_any")
         for r in reqs:
             if r.done:
                 return r
@@ -1006,6 +1043,19 @@ class ProgressEngine:
             t.stop()
         for t in threads:
             t.join(timeout=5.0)
+        if self._sanitizer is not None:
+            # engine shutdown: anything started but never completed or
+            # cancelled is reported as a request leak (dynamic MPIX004)
+            self._sanitizer.on_stop_all()
+
+    def sanitizer_report(self) -> dict:
+        """Findings from the runtime sanitizer (lock-order cycles,
+        parks-while-locked, request leaks, lost wakeups). With
+        ``sanitize=False`` returns ``{"enabled": False, "findings": []}``
+        so callers can assert on the findings list unconditionally."""
+        if self._sanitizer is None:
+            return {"enabled": False, "findings": [], "counts": {}}
+        return self._sanitizer.report()
 
     def autotune(self, policy: Optional["AutotunePolicy"] = None) -> "Autotuner":
         """Build a stats()-driven :class:`Autotuner` for this engine: it

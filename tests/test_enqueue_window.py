@@ -611,3 +611,36 @@ def test_checkpoint_max_inflight_bounds_saves(eng, tmp_path):
     assert mgr.available_steps() == list(range(6))
     st = mgr._window.stats(engine=False)
     assert st["admitted"] == 6 and st["max_depth_seen"] <= 2
+
+
+def test_enqueued_request_wait_timeout_expires_then_succeeds(eng, offload):
+    """EnqueuedRequest.wait(timeout=...) must honor the deadline: a request
+    whose dispatch never completes returns False within the budget, and the
+    same handle returns True once the underlying grequest completes —
+    expiry does not poison the handle."""
+    req = enq.EnqueuedRequest(grequest=_external_req(eng, offload), engine=eng)
+    t0 = time.monotonic()
+    assert req.wait(timeout=0.1) is False
+    elapsed = time.monotonic() - t0
+    assert elapsed < 5.0, f"wait(0.1) blocked for {elapsed:.1f}s"
+    assert not req.done
+    req.grequest.complete()
+    assert req.wait(timeout=5.0) is True
+    assert req.done
+    # waiting on an already-done handle is a cheap no-op, not a re-park
+    assert req.wait(timeout=0.0) is True
+
+
+def test_enqueued_request_wait_routes_through_bound_engine(offload):
+    """The handle waits on ITS engine, not the process default: the bound
+    engine observes the wait traffic in its stats."""
+    mine = ProgressEngine()
+    try:
+        req = enq.EnqueuedRequest(grequest=_external_req(mine, offload), engine=mine)
+        before = mine.stats()["polls"]
+        assert req.wait(timeout=0.05) is False
+        assert mine.stats()["polls"] > before  # poll happened on the bound engine
+        req.grequest.complete()
+        assert req.wait(timeout=5.0) is True
+    finally:
+        mine.stop_all()

@@ -1,0 +1,392 @@
+"""mpixlint rule tests: every rule MPIX001–006 fires on a known-bad
+snippet and stays silent on the corrected version (the PR's acceptance
+criterion), plus baseline round-trip, CLI gating semantics, and the
+repo-clean regression gates (src/ vs the committed baseline; the
+benchmark true positives this PR fixed must stay fixed)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import lint_paths, lint_source, load_baseline
+from repro.analysis.mpixlint import main as mpixlint_main, write_baseline
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def rules_fired(src, select=None):
+    return {f.rule for f in lint_source(textwrap.dedent(src), filename="snippet.py", select=select)}
+
+
+# ----------------------------------------------------------------------
+# MPIX001 — blocking call inside channel_section
+# ----------------------------------------------------------------------
+
+
+def test_mpix001_fires_on_blocking_call_in_section():
+    bad = """
+    def f(engine, ch, req):
+        with engine.channel_section(ch):
+            engine.wait_all([req], 5.0)
+    """
+    assert "MPIX001" in rules_fired(bad)
+
+
+def test_mpix001_all_blocking_names_fire():
+    for call in ["h.recv(src=0)", "engine.wait(r)", "engine.wait_any([r])",
+                 "engine.park_on_channel(ch, p)", "win.reserve()"]:
+        bad = f"""
+        def f(engine, h, win, r, ch, p):
+            with engine.lock_for(ch):
+                {call}
+        """
+        assert "MPIX001" in rules_fired(bad), call
+
+
+def test_mpix001_silent_on_corrected_and_on_cv_wait():
+    good = """
+    def f(engine, ch, req):
+        with engine.channel_section(ch):
+            token = {"set": True}
+        engine.wait_all([req], 5.0)
+
+    def engine_internal(stripe, w):
+        # the engine's own park: cv.wait releases the lock while sleeping
+        with stripe.held():
+            w.cv.wait(timeout=0.25)
+    """
+    assert "MPIX001" not in rules_fired(good)
+
+
+# ----------------------------------------------------------------------
+# MPIX002 — reserve() bracket leaks
+# ----------------------------------------------------------------------
+
+
+def test_mpix002_fires_when_no_release_exists():
+    bad = """
+    def f(window):
+        window.reserve(timeout=5.0)
+        return compute()
+    """
+    findings = lint_source(textwrap.dedent(bad), filename="s.py")
+    assert any(f.rule == "MPIX002" and f.key == "reserve-unreleased" for f in findings)
+
+
+def test_mpix002_fires_on_raise_between_reserve_and_register():
+    # the exact shape this PR fixed in benchmarks/enqueue_window.py
+    bad = """
+    def f(window, dispatch, x):
+        window.reserve()
+        y = dispatch(x)
+        window.register(y)
+    """
+    findings = lint_source(textwrap.dedent(bad), filename="s.py")
+    assert any(f.rule == "MPIX002" and f.key == "reserve-unprotected" for f in findings)
+
+
+def test_mpix002_silent_on_issue_bracket_and_guarded_finally():
+    good = """
+    def f(window, dispatch, x):
+        with window.issue() as submit:
+            y = dispatch(x)
+            submit(y)
+
+    def g(window, dispatch, x):
+        if not window.reserve(timeout=5.0):
+            return None
+        try:
+            y = dispatch(x)
+            window.register(y)
+        except BaseException:
+            window.unreserve()
+            raise
+
+    def h(window):
+        # release immediately follows the reserve: nothing can raise between
+        if not window.reserve():
+            return None
+        return window.register(make())
+    """
+    assert "MPIX002" not in rules_fired(good)
+
+
+# ----------------------------------------------------------------------
+# MPIX003 — collective tag namespace
+# ----------------------------------------------------------------------
+
+
+def test_mpix003_fires_on_coll_tag_construction():
+    bad = """
+    from repro.core.threadcoll import _COLL
+
+    def f(h):
+        h.send(1, None, tag=(_COLL, "bar", 0, 0))
+        h.send(2, None, tag=("__tc_coll__", "bc", 1, 0))
+    """
+    findings = lint_source(textwrap.dedent(bad), filename="user.py")
+    assert sum(f.rule == "MPIX003" for f in findings) == 2
+
+
+def test_mpix003_silent_on_comparison_and_inside_threadcoll():
+    good = """
+    def dispatch(t, threadcoll):
+        # recognizing collective traffic is fine — only construction is reserved
+        return isinstance(t, tuple) and len(t) == 4 and t[0] == threadcoll._COLL
+    """
+    assert "MPIX003" not in rules_fired(good)
+    inside = 'TAG = (_COLL, "bar", 0, 0)\n'
+    assert not lint_source(inside, filename="src/repro/core/threadcoll.py")
+
+
+# ----------------------------------------------------------------------
+# MPIX004 — request leaks
+# ----------------------------------------------------------------------
+
+
+def test_mpix004_fires_on_dropped_and_unused_handles():
+    bad = """
+    def f(engine, h):
+        engine.grequest_start(name="dropped")
+        req = h.irecv(src=0, tag=1)
+        return None
+    """
+    findings = lint_source(textwrap.dedent(bad), filename="s.py")
+    keys = {f.key for f in findings if f.rule == "MPIX004"}
+    assert "dropped-grequest_start" in keys
+    assert "unused-req" in keys
+
+
+def test_mpix004_silent_on_waited_escaped_or_cancelled():
+    good = """
+    def f(engine, h, submit, self):
+        r1 = engine.grequest_start(name="waited")
+        engine.wait(r1, 5.0)
+        r2 = h.irecv(src=0, tag=1)
+        r2.cancel()
+        submit(engine.grequest_start(name="as-arg"))
+        self._pending = engine.grequest_start(name="escapes-attr")
+        y, req = h.isend_enqueue(1, x)
+        return req
+    """
+    assert "MPIX004" not in rules_fired(good)
+
+
+def test_mpix004_closure_read_counts_as_use():
+    good = """
+    def f(engine):
+        req = engine.grequest_start(name="x")
+        def waiter():
+            return engine.wait(req, 1.0)
+        return waiter
+    """
+    assert "MPIX004" not in rules_fired(good)
+
+
+# ----------------------------------------------------------------------
+# MPIX005 — epoch brackets
+# ----------------------------------------------------------------------
+
+
+def test_mpix005_fires_on_unclosed_epoch_and_bare_finish():
+    bad = """
+    from repro.core.threadcomm import HostThreadComm
+
+    def no_finish(engine):
+        comm = HostThreadComm(2, engine=engine)
+        comm.start()
+        run(comm)
+
+    def bare_finish(engine):
+        comm = HostThreadComm(2, engine=engine)
+        comm.start()
+        run(comm)
+        comm.finish(timeout=5.0)
+    """
+    findings = lint_source(textwrap.dedent(bad), filename="s.py")
+    keys = {f.key for f in findings if f.rule == "MPIX005"}
+    assert keys == {"start-no-finish", "finish-not-in-finally"}
+
+
+def test_mpix005_fires_on_attach_without_detach_in_finally():
+    bad = """
+    def worker(comm, rank):
+        comm = HostThreadComm(2)
+        comm.start()
+        h = comm.attach(rank=rank)
+        h.barrier()
+        comm.finish()
+    """
+    findings = lint_source(textwrap.dedent(bad), filename="s.py")
+    assert any(f.key == "attach-no-detach" for f in findings)
+
+
+def test_mpix005_silent_on_bracketed_epoch():
+    good = """
+    from repro.core.threadcomm import HostThreadComm
+
+    def f(engine):
+        comm = HostThreadComm(2, engine=engine)
+        comm.start()
+        try:
+            def worker(rank):
+                h = comm.attach(rank=rank)
+                try:
+                    h.barrier()
+                finally:
+                    h.detach()
+            run(worker)
+        finally:
+            comm.finish(timeout=5.0, drain=True)
+    """
+    assert "MPIX005" not in rules_fired(good)
+
+
+def test_mpix005_ignores_untracked_start_calls():
+    good = """
+    import threading
+
+    def f(tuner):
+        t = threading.Thread(target=run)
+        t.start()
+        tuner.start()
+    """
+    assert "MPIX005" not in rules_fired(good)
+
+
+# ----------------------------------------------------------------------
+# MPIX006 — lock-order inversion
+# ----------------------------------------------------------------------
+
+
+def test_mpix006_fires_on_inverted_nesting():
+    bad = """
+    def f(engine, a, b):
+        with engine.channel_section(a):
+            with engine.channel_section(b):
+                pass
+
+    def g(engine, a, b):
+        with engine.channel_section(b):
+            with engine.lock_for(a):
+                pass
+    """
+    findings = lint_source(textwrap.dedent(bad), filename="s.py")
+    sites = [f for f in findings if f.rule == "MPIX006"]
+    assert len(sites) == 2  # both call sites are reported
+    assert {f.qualname for f in sites} == {"f", "g"}
+
+
+def test_mpix006_silent_on_consistent_order_and_reentrant_nesting():
+    good = """
+    def f(engine, a, b):
+        with engine.channel_section(a):
+            with engine.channel_section(b):
+                pass
+
+    def g(engine, a, b):
+        with engine.channel_section(a):
+            with engine.channel_section(b):
+                pass
+
+    def reentrant(engine, a):
+        with engine.channel_section(a):
+            with engine.channel_section(a):
+                pass
+    """
+    assert "MPIX006" not in rules_fired(good)
+
+
+def test_mpix006_reconciles_across_files():
+    project = {}
+    lint_source(
+        "def f(e, a, b):\n with e.channel_section(a):\n  with e.channel_section(b):\n   pass\n",
+        filename="one.py", project=project, finalize=False,
+    )
+    findings = lint_source(
+        "def g(e, a, b):\n with e.channel_section(b):\n  with e.channel_section(a):\n   pass\n",
+        filename="two.py", project=project, finalize=True,
+    )
+    files = {f.file for f in findings if f.rule == "MPIX006"}
+    assert files == {"one.py", "two.py"}
+
+
+# ----------------------------------------------------------------------
+# baseline + CLI gating
+# ----------------------------------------------------------------------
+
+
+def test_baseline_roundtrip_suppresses_exactly_the_written_findings(tmp_path):
+    bad = "def f(engine, ch, r):\n with engine.channel_section(ch):\n  engine.wait(r)\n"
+    src = tmp_path / "mod.py"
+    src.write_text(bad)
+    findings = lint_paths([str(src)])
+    assert findings
+    baseline = tmp_path / "baseline.txt"
+    write_baseline(str(baseline), findings)
+    fingerprints = load_baseline(str(baseline))
+    assert {f.fingerprint for f in findings} == fingerprints
+    # gate: everything baselined -> exit 0; --no-baseline -> exit 1
+    assert mpixlint_main([str(src), "--baseline", str(baseline)]) == 0
+    assert mpixlint_main([str(src), "--no-baseline"]) == 1
+
+
+def test_baseline_inline_justification_comment_is_stripped(tmp_path):
+    baseline = tmp_path / "b.txt"
+    baseline.write_text(
+        "# header comment\n"
+        "a.py::MPIX001::f::blocking-wait  # justified: engine-internal\n"
+        "\n"
+    )
+    assert load_baseline(str(baseline)) == {"a.py::MPIX001::f::blocking-wait"}
+
+
+def test_cli_list_rules_and_unknown_select():
+    assert mpixlint_main(["--list-rules", "dummy"]) == 0
+    assert mpixlint_main(["--select", "MPIX999", "."]) == 2
+
+
+def test_module_entrypoint_runs(tmp_path):
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.mpixlint", str(clean), "--no-baseline"],
+        capture_output=True, text=True, env=env, cwd=str(tmp_path),
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "0 new finding(s)" in proc.stdout
+
+
+# ----------------------------------------------------------------------
+# repo gates (regression tests for this PR's fixes)
+# ----------------------------------------------------------------------
+
+
+def test_src_is_clean_against_committed_baseline():
+    findings = lint_paths([str(REPO / "src")])
+    baseline = load_baseline(str(REPO / "scripts" / "mpixlint_baseline.txt"))
+    new = [f for f in findings if _norm(f.fingerprint) not in baseline]
+    assert not new, "\n".join(f.render() for f in new)
+    # the baselined exceptions still exist (stale entries should be pruned)
+    assert {_norm(f.fingerprint) for f in findings} == baseline
+
+
+def test_benchmark_true_positives_stay_fixed():
+    # this PR rewrote the reserve/register loops in enqueue_window.py to
+    # win.issue() and bracketed threadcomm_rate.py's epochs in finally
+    findings = lint_paths([str(REPO / "benchmarks"), str(REPO / "examples")])
+    hazards = [f for f in findings if f.rule in ("MPIX002", "MPIX005")]
+    assert not hazards, "\n".join(f.render() for f in hazards)
+
+
+def _norm(fingerprint: str) -> str:
+    # lint_paths reports paths relative to the cwd; the committed baseline
+    # is rooted at the repo
+    file, rest = fingerprint.split("::", 1)
+    rel = os.path.relpath(os.path.join(os.getcwd(), file), str(REPO))
+    return f"{rel.replace(os.sep, '/')}::{rest}"

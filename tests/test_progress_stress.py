@@ -59,8 +59,15 @@ CONFIGS = {
     "global-lock": dict(
         engine=dict(global_lock=True), n_threads=3, n_channels=2, chaos=False, autotune=False
     ),
+    # default runtime under the lock/park sanitizer: the recorder watches
+    # every stripe acquisition, park entry, notify and request lifecycle,
+    # and the test asserts it ends with ZERO findings — the soak traffic
+    # is certified contract-clean, not just deadlock-free-this-time
+    "sanitized": dict(
+        engine=dict(sanitize=True), n_threads=4, n_channels=3, chaos=True, autotune=True
+    ),
 }
-SEEDS = range(20)  # 5 configs x 20 seeds = 100 schedules
+SEEDS = range(20)  # 6 configs x 20 seeds = 120 schedules
 
 
 class _Completer(threading.Thread):
@@ -254,3 +261,11 @@ def test_progress_soak(cfg_name, seed):
     # every notify either woke a matching waiter or counted a skip; the
     # per-channel mode never reports more wakeups than notify decisions
     assert st["notify_wakeups"] >= 0 and st["notifies"] >= 0
+
+    # -- invariant 4: the sanitized config certifies the contract ------
+    if cfg["engine"].get("sanitize"):
+        rep = engine.sanitizer_report()
+        assert rep["findings"] == [], (
+            f"sanitizer findings (cfg={cfg_name} seed={seed}): {rep['findings']}"
+        )
+        assert rep["counts"]["live_requests"] == 0, rep["counts"]

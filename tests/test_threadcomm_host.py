@@ -762,3 +762,71 @@ def test_cross_thread_detach_leaves_other_threads_binding_alone():
     t.join(timeout=10.0)
     h0.detach()
     comm.finish(timeout=5.0)
+
+
+def test_collective_seq_numbers_reset_across_epochs():
+    """Back-to-back epochs (start → collectives → finish → start) must not
+    let epoch-1 collective sequence numbers bleed into epoch 2: each
+    attach hands out a fresh ``_coll_seq``, so a tag ``(_COLL, seq)`` from
+    the old epoch can never match a new-epoch recv. A stale counter (or an
+    undrained ``(_COLL, ...)`` message surviving ``finish``) would deliver
+    epoch-1 partials here and break the numeric oracle."""
+    eng = _engine()
+    comm = HostThreadComm(4, engine=eng, pool=StreamPool(), name="epoch-seq")
+    for epoch, base in enumerate((0.0, 100.0), start=1):
+        comm.start()
+        results = {}
+        lock = threading.Lock()
+
+        def body(h, base=base):
+            # several rounds so per-rank seq counters advance past 1 and
+            # interleave (barrier seqs and allreduce seqs share the space)
+            acc = []
+            for round_i in range(3):
+                h.barrier()
+                val = np.full(8, base + h.rank + 10.0 * round_i)
+                acc.append(h.allreduce(val, op="sum"))
+            with lock:
+                results[h.rank] = acc
+
+        _run_ranks(comm, body)
+        comm.finish(timeout=10.0)
+        assert comm.stats()["epoch"] == epoch
+        ranks = sum(range(4))  # 0+1+2+3
+        for r in range(4):
+            assert len(results[r]) == 3
+            for round_i, got in enumerate(results[r]):
+                want = np.full(8, 4 * (base + 10.0 * round_i) + ranks)
+                np.testing.assert_allclose(got, want), (epoch, r, round_i)
+
+
+def test_epoch_restart_with_inflight_point_to_point_drains_clean():
+    """finish(drain=True) between epochs: sends still queued when ranks
+    detach are drained, and the next epoch's mailboxes start empty — an
+    epoch-1 message must never be received in epoch 2."""
+    eng = _engine()
+    comm = HostThreadComm(2, engine=eng, pool=StreamPool(), name="epoch-drain")
+    comm.start()
+
+    def epoch1(h):
+        if h.rank == 0:
+            # fire-and-forget: rank 1 never receives these in epoch 1
+            for k in range(3):
+                h.send(1, np.full(4, 1000.0 + k), tag=7)
+        h.barrier()
+
+    _run_ranks(comm, epoch1)
+    comm.finish(timeout=10.0, drain=True)
+
+    comm.start()
+    got = {}
+
+    def epoch2(h):
+        if h.rank == 0:
+            h.send(1, np.full(4, 42.0), tag=7)
+        else:
+            got["msg"] = h.recv(src=0, tag=7, timeout=10.0)
+
+    _run_ranks(comm, epoch2)
+    comm.finish(timeout=10.0)
+    np.testing.assert_allclose(got["msg"], np.full(4, 42.0))
