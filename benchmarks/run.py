@@ -16,6 +16,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * enqueue_window    — depth-N in-flight offload windows per transport
                         (dma / xla / datatype); also writes
                         ``BENCH_enqueue.json``
+  * schedule_replay   — recorded schedules: replay-vs-eager per-step
+                        issue overhead on the pipeline tick loop and the
+                        grad-bucket round-robin; also writes
+                        ``BENCH_schedule.json``
   * datatype_iov      — paper §Derived Datatypes iovec costs + the host
                         pack-engine tiers (naive/coalesced/vectorized);
                         also writes ``BENCH_datatype.json`` (machine-
@@ -39,6 +43,7 @@ def main() -> None:
         progress_autotune,
         progress_overlap,
         roofline_table,
+        schedule_replay,
         threadcomm_latency,
         threadcomm_rate,
     )
@@ -50,6 +55,7 @@ def main() -> None:
         ("progress_overlap", progress_overlap),
         ("progress_autotune", progress_autotune),
         ("enqueue_window", enqueue_window),
+        ("schedule_replay", schedule_replay),
         ("datatype_iov", datatype_iov),
         ("kernels_bench", kernels_bench),
         ("roofline_table", roofline_table),

@@ -208,11 +208,35 @@ PROGRESS = {
     "herd_reduction_widest": _NUM,
 }
 
+_REPLAY_ROW = {
+    "eager_step_us": _NUM,
+    "recorded_step_us": _NUM,
+    "recorded_issue_us": _NUM,
+    "speedup": _NUM,
+    "ops": _NUM,
+    "parts": _NUM,
+    "replays": _NUM,
+}
+
+# docs/benchmarks.md ## BENCH_schedule.json
+SCHEDULE = {
+    "smoke": bool,
+    "config": {
+        "steps": _NUM,
+        "pipeline": {"n_micro": _NUM, "mb": _NUM, "d": _NUM, "layers": _NUM},
+        "grad_buckets": {"total_elems": _NUM, "bucket_bytes": _NUM, "n_comms": _NUM},
+    },
+    "pipeline": dict(_REPLAY_ROW, ticks=_NUM),
+    "grad_buckets": dict(_REPLAY_ROW, n_buckets=_NUM),
+    "speedup_recorded_over_eager_min": _NUM,
+}
+
 SCHEMAS = {
     "BENCH_datatype.json": DATATYPE,
     "BENCH_enqueue.json": ENQUEUE,
     "BENCH_threadcomm.json": THREADCOMM,
     "BENCH_progress.json": PROGRESS,
+    "BENCH_schedule.json": SCHEDULE,
 }
 
 # the committed full-size records are mandatory; .smoke siblings are

@@ -33,12 +33,14 @@ fi
 # invariant — threadcomm: per-thread-VCI message rate beats the
 # shared-channel baseline; progress: per-channel queues wake >2x fewer
 # waiters per notify than stripe CVs and the autotuner matches/beats
-# static placement — and writes BENCH_*.smoke.json, never the committed
-# full-size records)
+# static placement; schedule: recorded replays beat the eager loops
+# they replace and stay byte-identical — and writes
+# BENCH_*.smoke.json, never the committed full-size records)
 python -m benchmarks.datatype_iov --smoke
 python -m benchmarks.enqueue_window --smoke
 python -m benchmarks.threadcomm_rate --smoke
 python -m benchmarks.progress_autotune --smoke
+python -m benchmarks.schedule_replay --smoke
 
 # schema gate: every BENCH_*.json just written (and the committed
 # full-size records) must match the shapes documented in

@@ -17,6 +17,7 @@ from repro.analysis.rules import (
     mpix004_request_leak,
     mpix005_epoch_bracket,
     mpix006_lock_order,
+    mpix007_schedule_bracket,
 )
 
 ALL_RULES: List[Rule] = [
@@ -26,6 +27,7 @@ ALL_RULES: List[Rule] = [
     mpix004_request_leak.RULE,
     mpix005_epoch_bracket.RULE,
     mpix006_lock_order.RULE,
+    mpix007_schedule_bracket.RULE,
 ]
 
 RULES_BY_ID: Dict[str, Rule] = {r.rule_id: r for r in ALL_RULES}

@@ -17,6 +17,12 @@ Anything that lets the handle **escape** — storing into an attribute or
 container, passing it to another call, returning/yielding it — is
 treated as consumption: lifetime is then someone else's responsibility
 (the runtime sanitizer checks the dynamic side of this contract).
+
+Handles handed to a **schedule** are owned: a producer call carrying a
+``schedule=`` keyword (``isend_enqueue_scheduled`` and friends) records
+an op whose replay lifetime belongs to the schedule's fused request set
+— the record-pass handle is retired by the recording loop itself, so
+dropping it is not a leak and is never flagged.
 """
 
 from __future__ import annotations
@@ -28,7 +34,19 @@ from repro.analysis.core import FileContext, Rule, call_name, iter_functions
 
 RULE_ID = "MPIX004"
 
-_PRODUCERS = {"grequest_start", "irecv", "isend_enqueue", "dispatch_enqueue"}
+_PRODUCERS = {
+    "grequest_start",
+    "irecv",
+    "isend_enqueue",
+    "isend_enqueue_scheduled",
+    "dispatch_enqueue",
+}
+
+
+def _schedule_owned(call: ast.Call) -> bool:
+    """A producer invoked with ``schedule=``: the schedule owns the op's
+    replay lifetime (fused parts, cancelled or completed as a set)."""
+    return any(kw.arg == "schedule" for kw in call.keywords)
 
 
 def _direct_functions(tree: ast.Module):
@@ -79,6 +97,8 @@ def check(ctx: FileContext) -> None:
 
         for node in nodes:
             if not (isinstance(node, ast.Call) and call_name(node) in _PRODUCERS):
+                continue
+            if _schedule_owned(node):
                 continue
             parent = ctx.parent(node)
             if isinstance(parent, ast.Expr):

@@ -1,0 +1,169 @@
+"""MPIX007 — ``Schedule.record()`` opened without a guaranteed close.
+
+:meth:`repro.core.schedule.Schedule.record` flips the schedule into the
+RECORDING state; until ``seal()`` (or ``abort()``) runs, every replay
+raises and the op layers keep appending into a graph that may never
+freeze. If the recording body can raise and neither close is
+``finally``-protected, the schedule is stuck RECORDING for the life of
+the process — ``record()`` itself then raises on the retry path.
+
+The safe shapes are the context-manager form::
+
+    with sched.record():
+        ...ops...            # seals on success, aborts on error
+
+and the explicit bracket (``abort()`` is a no-op once sealed)::
+
+    rec = sched.record()
+    try:
+        ...ops...
+        rec.seal()
+    finally:
+        rec.abort()
+
+Because ``.record()`` is a common method name, this rule only fires on
+receivers it can *prove* are schedules: names or attributes assigned
+from ``Schedule(...)`` anywhere in the module. Aliases bound from the
+tracked receiver's ``record()`` call (``rec = sched.record()`` — record
+returns ``self``) count as the same schedule for ``seal``/``abort``.
+
+Per function containing a tracked, non-``with`` ``x.record()``:
+
+* ``record-no-seal`` — no ``seal()`` on the schedule (or its record
+  alias) anywhere in the function;
+* ``seal-not-in-finally`` — a ``seal()`` exists, but no ``finally``
+  in the function runs ``seal()`` or ``abort()``, so an exception
+  mid-recording skips both closes.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Optional, Set
+
+from repro.analysis.core import (
+    FileContext,
+    Rule,
+    call_name,
+    dotted_name,
+    iter_functions,
+    receiver_name,
+)
+
+RULE_ID = "MPIX007"
+
+_CONSTRUCTORS = {"Schedule"}
+
+
+def _tracked_receivers(tree: ast.Module) -> Set[str]:
+    tracked: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        val = node.value
+        if not (isinstance(val, ast.Call) and call_name(val) in _CONSTRUCTORS):
+            continue
+        for tgt in node.targets:
+            name = dotted_name(tgt)
+            if name:
+                tracked.add(name)
+    return tracked
+
+
+def _is_with_item(ctx: FileContext, call: ast.Call) -> bool:
+    parent = ctx.parent(call)
+    return isinstance(parent, ast.withitem) and parent.context_expr is call
+
+
+def _aliases_of(fn: ast.AST, call: ast.Call) -> Set[str]:
+    """Names bound from this exact record() call (record returns self)."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and node.value is call:
+            for tgt in node.targets:
+                name = dotted_name(tgt)
+                if name:
+                    out.add(name)
+    return out
+
+
+def _close_calls(fn: ast.AST, receivers: Set[str]):
+    for node in ast.walk(fn):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in ("seal", "abort")
+            and receiver_name(node) in receivers
+        ):
+            yield node
+
+
+def _in_finally(ctx: FileContext, node: ast.AST, fn: ast.AST) -> bool:
+    cur: Optional[ast.AST] = node
+    while cur is not None and cur is not fn:
+        parent = ctx.parent(cur)
+        if isinstance(parent, ast.Try) and _stmt_in_block(cur, parent.finalbody):
+            return True
+        cur = parent
+    return False
+
+
+def _stmt_in_block(node: ast.AST, block) -> bool:
+    return isinstance(block, list) and any(node is s for s in block)
+
+
+def _stmt_of(ctx: FileContext, node: ast.AST, fn: ast.AST) -> ast.AST:
+    cur: Optional[ast.AST] = node
+    while cur is not None and cur is not fn:
+        if isinstance(cur, ast.stmt):
+            return cur
+        cur = ctx.parent(cur)
+    return node
+
+
+def check(ctx: FileContext) -> None:
+    tracked = _tracked_receivers(ctx.tree)
+    if not tracked:
+        return
+    for fn in iter_functions(ctx.tree):
+        for call in ast.walk(fn):
+            if not (
+                isinstance(call, ast.Call)
+                and isinstance(call.func, ast.Attribute)
+                and call.func.attr == "record"
+            ):
+                continue
+            recv = receiver_name(call)
+            if recv not in tracked:
+                continue
+            if _is_with_item(ctx, call):
+                continue  # `with sched.record():` seals/aborts itself
+            receivers = {recv} | _aliases_of(fn, call)
+            closes = list(_close_calls(fn, receivers))
+            if not any(c.func.attr == "seal" for c in closes):
+                ctx.add(
+                    call,
+                    RULE_ID,
+                    f"{recv}.record() opens a recording but this function "
+                    f"never calls seal() on it — the schedule can never be "
+                    f"replayed (use `with {recv}.record():` or the "
+                    f"try/seal/finally/abort bracket)",
+                    key="record-no-seal",
+                )
+            elif not any(_in_finally(ctx, _stmt_of(ctx, c, fn), fn) for c in closes):
+                ctx.add(
+                    call,
+                    RULE_ID,
+                    f"neither seal() nor abort() for {recv}.record() is in a "
+                    f"finally — an exception mid-recording leaves the "
+                    f"schedule stuck RECORDING",
+                    key="seal-not-in-finally",
+                )
+
+
+RULE = Rule(
+    rule_id=RULE_ID,
+    name="schedule-bracket",
+    summary="Schedule.record() without a finally-protected seal()/abort()",
+    check=check,
+)

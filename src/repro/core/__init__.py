@@ -7,8 +7,10 @@
 5. thread communicators              → :mod:`repro.core.threadcomm`
 6. general progress                  → :mod:`repro.core.progress`
 
-plus the stream-tagged collective layer (:mod:`repro.core.collectives`)
-and hierarchical multi-pod schedules (:mod:`repro.core.hierarchical`).
+plus the stream-tagged collective layer (:mod:`repro.core.collectives`),
+hierarchical multi-pod schedules (:mod:`repro.core.hierarchical`), and
+recorded record-once/replay-many communication schedules
+(:mod:`repro.core.schedule`).
 """
 
 from repro.core.datatype import (
@@ -25,6 +27,7 @@ from repro.core.datatype import (
     hvector,
     indexed,
     iter_runs,
+    make_packer,
     pack,
     pack_info,
     pack_naive,
@@ -46,6 +49,7 @@ from repro.core.enqueue import (
     WindowSlot,
     dispatch_enqueue,
     isend_enqueue,
+    isend_enqueue_scheduled,
     pack_send,
     send_enqueue,
     shift_enqueue,
@@ -54,6 +58,7 @@ from repro.core.enqueue import (
 from repro.core.progress import (
     AutotunePolicy,
     Autotuner,
+    FusedRequestSet,
     GeneralizedRequest,
     ProgressEngine,
     default_engine,
@@ -95,5 +100,12 @@ from repro.core.threadcomm import (
     tc_send,
     threadcomm_free,
     threadcomm_init,
+)
+from repro.core.schedule import (
+    ReplayContext,
+    Schedule,
+    ScheduleError,
+    ScheduleStale,
+    ScheduleStateError,
 )
 from repro.core import threadcoll

@@ -84,6 +84,7 @@ __all__ = [
     "pack_naive",
     "unpack_naive",
     "pack_info",
+    "make_packer",
 ]
 
 
@@ -863,6 +864,81 @@ def pack(buf: np.ndarray, dt: Datatype, count: int = 1) -> np.ndarray:
         reps = np.arange(count, dtype=np.intp) * dt.extent
         out.reshape(count, dt.size)[...] = flat[idx[None, :] + reps[:, None]]
     return out
+
+
+def make_packer(dt: Datatype, count: int = 1, *, nbytes: int):
+    """Pre-resolve a pack program for record-once / replay-many callers
+    (``core.schedule``): the :func:`pack_info` proof, origin rebase,
+    bounds check, engine-branch dispatch and (for irregular layouts) the
+    full ``count``-replicated gather index are all resolved NOW against a
+    fixed source-buffer size; the returned closure does none of that
+    per call — it is the descriptor-proof memoized into a recorded op.
+
+    Returns ``(packer, proof)`` where ``packer(buf) -> np.uint8[count *
+    dt.size]`` is byte-identical to ``pack(buf, dt, count)`` and
+    ``proof`` is the :func:`pack_info` tuple (``None`` = irregular, host
+    gather path). The buffer-size contract is enforced: a buffer whose
+    flat byte size differs from ``nbytes`` raises ``ValueError`` —
+    re-resolve (re-record) instead of silently re-deriving.
+    """
+    if nbytes < 0:
+        raise ValueError("make_packer: nbytes must be >= 0")
+    size = count * dt.size
+    if count <= 0 or dt.size == 0:
+        def packer_empty(buf: np.ndarray) -> np.ndarray:
+            return np.empty(max(0, size), dtype=np.uint8)
+
+        return packer_empty, pack_info(dt)
+    shift = _origin_shift(dt)
+    _check_bounds(dt, count, shift, nbytes, "pack")
+    u = pack_info(dt)
+
+    def _flat(buf: np.ndarray) -> np.ndarray:
+        flat = np.ascontiguousarray(buf).view(np.uint8).reshape(-1)
+        if flat.size != nbytes:
+            raise ValueError(
+                f"make_packer: resolved for a {nbytes}-byte buffer, got "
+                f"{flat.size} bytes — the layout changed; re-resolve"
+            )
+        return flat
+
+    if u is not None:
+        n, seg, stride, d0 = u
+        if stride >= 0 and (count == 1 or dt.extent >= 0):
+            extent = dt.extent
+            base = shift + d0
+
+            def packer_strided(buf: np.ndarray) -> np.ndarray:
+                flat = _flat(buf)
+                out = np.empty(size, dtype=np.uint8)
+                window = np.lib.stride_tricks.as_strided(
+                    flat[base:], shape=(count, n, seg), strides=(extent, stride, 1)
+                )
+                out.reshape(count, n, seg)[...] = window
+                return out
+
+            return packer_strided, u
+    idx = _gather_index(dt, shift)
+    if count == 1:
+
+        def packer_gather(buf: np.ndarray) -> np.ndarray:
+            out = np.empty(size, dtype=np.uint8)
+            np.take(_flat(buf), idx, out=out)
+            return out
+
+        return packer_gather, u
+    # replicate the per-element index across count up front (pack() pays
+    # this add per call)
+    reps = np.arange(count, dtype=np.intp) * dt.extent
+    full_idx = (idx[None, :] + reps[:, None]).reshape(-1)
+    full_idx.setflags(write=False)
+
+    def packer_gather_n(buf: np.ndarray) -> np.ndarray:
+        out = np.empty(size, dtype=np.uint8)
+        np.take(_flat(buf), full_idx, out=out)
+        return out
+
+    return packer_gather_n, u
 
 
 def unpack(packed: np.ndarray, dt: Datatype, out: np.ndarray, count: int = 1) -> np.ndarray:

@@ -78,6 +78,7 @@ __all__ = [
     "recv_enqueue",
     "sendrecv_enqueue",
     "isend_enqueue",
+    "isend_enqueue_scheduled",
     "wait_enqueue",
     "EnqueuedRequest",
     "shift_enqueue",
@@ -390,6 +391,18 @@ def _swallow_runtime_error(fn):
     return run
 
 
+def _poll_dispatched(state) -> bool:
+    """Shared ``poll_fn`` for dispatched device work (``state["y"]``): jax
+    arrays expose ready-ness via block-free ``is_ready`` on the underlying
+    future; deleted/donated arrays count as done. Used by eager enqueued
+    requests and by scheduled-replay fused parts alike."""
+    arr = state["y"]
+    try:
+        return arr.is_ready() if hasattr(arr, "is_ready") else True
+    except RuntimeError:
+        return True
+
+
 def dispatch_enqueue(
     y,
     stream: MPIXStream = STREAM_NULL,
@@ -402,19 +415,9 @@ def dispatch_enqueue(
     future (the ``cudaEventQuery`` analogue) and whose batched ``wait_fn``
     blocks on the per-stream group. The building block under
     :func:`isend_enqueue` and :class:`OffloadWindow`."""
-
-    def _poll(state) -> bool:
-        arr = state["y"]
-        # jax arrays expose ready-ness via block-free is_ready on the
-        # underlying future; is_deleted arrays count as done.
-        try:
-            return arr.is_ready() if hasattr(arr, "is_ready") else True
-        except RuntimeError:
-            return True
-
     eng = engine or default_engine()
     req = eng.grequest_start(
-        poll_fn=_poll,
+        poll_fn=_poll_dispatched,
         wait_fn=_wait_dispatched,
         extra_state={"y": y},
         stream=stream,
@@ -458,6 +461,99 @@ def isend_enqueue(
         x = pack_send(x, datatype, count)
     y, tok = sendrecv_enqueue(x, comm, _ring_perm(comm, dest_offset), token)
     req = dispatch_enqueue(y, stream=comm.stream, engine=engine or default_engine(), token=tok, name="isend_enqueue")
+    return y, req
+
+
+def _make_stacked_packer(x, datatype: dtt.Datatype, count: int, n: int):
+    """Pre-resolved replay twin of :func:`_pack_stacked`: the branch
+    decision (vectorized row pack vs per-rank engine), the row-resized
+    descriptor, and the :func:`~repro.core.datatype.make_packer` pack
+    program (bounds + ``pack_info`` proof) are all resolved once, at
+    record time. The returned closure produces bytes identical to
+    ``_pack_stacked`` for same-shaped buffers."""
+    row_bytes = 0 if x.ndim < 2 else int(x.dtype.itemsize * np.prod(x.shape[1:]))
+    if n > 1 and count == 1 and datatype.lb >= 0 and datatype.ub <= row_bytes:
+        rowed = dtt.resized(datatype, datatype.lb, row_bytes)
+        packer, _proof = dtt.make_packer(rowed, count=n, nbytes=int(x.nbytes))
+        item = np.dtype(x.dtype).itemsize
+        view_dtype = np.dtype(x.dtype) if datatype.size % item == 0 else None
+
+        def run_vectorized(xv):
+            packed = packer(np.asarray(xv))
+            if view_dtype is not None:
+                return jnp.asarray(packed.view(view_dtype).reshape(n, -1))
+            return jnp.asarray(packed.reshape(n, -1))
+
+        return run_vectorized
+
+    def run_per_rank(xv):
+        return jnp.stack([pack_send(xv[i], datatype, count) for i in range(n)])
+
+    return run_per_rank
+
+
+def isend_enqueue_scheduled(
+    x,
+    comm: StreamComm,
+    dest_offset: int,
+    *,
+    schedule,
+    window: "OffloadWindow",
+    bind: Optional[str] = None,
+    out: Optional[str] = None,
+    datatype: Optional[dtt.Datatype] = None,
+    count: int = 1,
+) -> Tuple[jax.Array, EnqueuedRequest]:
+    """Record a windowed ring send into ``schedule``.
+
+    The record pass IS an eager windowed :func:`isend_enqueue`: full
+    validation (host-side check, window/stream match, ring-size check),
+    the datatype pack-engine branch, and the jitted ring program resolve
+    exactly once, here, and the dispatched result is returned as usual.
+    The recorded op re-issues with none of that — one shape/dtype compare
+    (mismatch raises ``ScheduleStale``), the pre-resolved packer, the
+    cached ring program, a window reserve, and a fused *part* registered
+    with the window in place of an engine-queued request.
+
+    ``bind=`` names the replay binding supplying the buffer (omit to
+    replay the recorded constant); ``out=`` stores each replay's
+    dispatched array under ``ctx.outputs[out]``. Returns the record
+    pass's ``(y, request)`` — the request is window-owned.
+    """
+    from repro.core.schedule import ScheduleError
+
+    if not schedule.recording:
+        raise ScheduleError("isend_enqueue_scheduled: schedule is not recording")
+    x = jnp.asarray(x)
+    y, req = _windowed_isend(x, comm, dest_offset, datatype, count, window)
+    ring = _mapped_ring_send(comm.mesh, comm.axes, dest_offset)
+    n = comm.mesh.shape[comm.axes[0]]
+    pack_fn = None if datatype is None else _make_stacked_packer(x, datatype, count, n)
+    shape0, dtype0 = tuple(x.shape), x.dtype
+
+    def issue(ctx):
+        xv = jnp.asarray(ctx.bound(bind)) if bind is not None else x
+        if tuple(xv.shape) != shape0 or xv.dtype != dtype0:
+            ctx.schedule._stale(
+                f"isend buffer changed: recorded {shape0}/{dtype0}, "
+                f"now {tuple(xv.shape)}/{xv.dtype}"
+            )
+        if pack_fn is not None:
+            xv = pack_fn(xv)
+        window.reserve(timeout=None)
+        try:
+            yv = ring(xv)
+            part = ctx.fused.part(
+                poll_fn=_poll_dispatched, extra_state={"y": yv}, name="sched-isend"
+            )
+            window.register(part, value=yv)
+        except BaseException:
+            window.unreserve()
+            raise
+        if out is not None:
+            ctx.outputs[out] = yv
+
+    schedule.add_op("isend_enqueue", issue, parts=1, label=f"isend+{dest_offset}")
     return y, req
 
 

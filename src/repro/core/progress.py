@@ -89,6 +89,7 @@ from repro.core.streams import DEFAULT_NUM_CHANNELS, MPIXStream, STREAM_NULL
 __all__ = [
     "RequestState",
     "GeneralizedRequest",
+    "FusedRequestSet",
     "ProgressEngine",
     "AutotunePolicy",
     "Autotuner",
@@ -331,6 +332,119 @@ class _Stripe:
         return any(r.poll_fn is not None and not r.done for q in queues for r in q)
 
 
+class FusedRequestSet:
+    """A recorded-schedule replay batch: many *parts* behind ONE queued
+    generalized request — the batched-grequest fast path that
+    ``core.schedule`` replays issue through.
+
+    :meth:`part` mints a :class:`GeneralizedRequest` that is **not**
+    enqueued on any channel queue and never registers with a wait queue
+    on its own — replaying a recorded step skips the per-request
+    ``grequest_start`` bookkeeping (queue append, sweep, notify) that the
+    eager path pays per op. The single *parent* request (:attr:`request`)
+    is the engine-visible unit: its ``poll_fn`` sweeps the pollable
+    parts, every part completion (swept or external) counts toward
+    ``expected``, and when the last part lands the parent completes —
+    one notify for the whole batch. Parts are ordinary requests in every
+    other respect: consumers may attach done-callbacks (an
+    :class:`~repro.core.enqueue.OffloadWindow` releasing a slot) or hand
+    them to ``window.register``.
+
+    ``part()`` raises once more parts are minted than were recorded —
+    a replay that grew is a stale schedule, caught here rather than
+    silently miscounted.
+    """
+
+    def __init__(
+        self,
+        engine: "ProgressEngine",
+        expected: int,
+        stream: MPIXStream = STREAM_NULL,
+        name: str = "fused",
+    ):
+        if expected < 0:
+            raise ValueError("FusedRequestSet: expected part count must be >= 0")
+        self.engine = engine
+        self.expected = int(expected)
+        self.stream = stream
+        self.name = name
+        self._lock = threading.Lock()
+        self.parts: List[GeneralizedRequest] = []
+        self._pollable: List[GeneralizedRequest] = []
+        self._done = 0
+        # the one engine-registered request for the whole batch
+        self.request = engine.grequest_start(
+            poll_fn=self._sweep, stream=stream, name=name
+        )
+
+    def part(
+        self,
+        poll_fn: Optional[Callable] = None,
+        *,
+        extra_state: object = None,
+        name: Optional[str] = None,
+    ) -> GeneralizedRequest:
+        """Mint the next part (unregistered request). ``poll_fn`` parts
+        are completed by the parent's sweep; parts without one must be
+        completed externally (``part.complete()``)."""
+        with self._lock:
+            if len(self.parts) >= self.expected:
+                raise ValueError(
+                    f"fused set {self.name!r}: part #{len(self.parts) + 1} "
+                    f"exceeds the recorded count ({self.expected}) — the op "
+                    f"graph changed since record(); re-record the schedule"
+                )
+            p = GeneralizedRequest(
+                poll_fn=poll_fn,
+                extra_state=extra_state,
+                stream=self.stream,
+                name=name or f"{self.name}-part{len(self.parts)}",
+            )
+            self.parts.append(p)
+            if poll_fn is not None:
+                self._pollable.append(p)
+        p.add_done_callback(self._part_done)
+        self.engine._count_fused_part()
+        return p
+
+    def _part_done(self, _part) -> None:
+        with self._lock:
+            self._done += 1
+            finished = self._done >= self.expected
+        if finished:
+            self.request.complete()
+
+    def _sweep(self, _state) -> bool:
+        """Parent poll_fn: one progress visit polls every still-pending
+        pollable part. Completions fire ``_part_done`` (outside our
+        lock); the parent reports done once all ``expected`` parts are."""
+        with self._lock:
+            pending = [p for p in self._pollable if not p.done]
+            self._pollable = pending
+        for p in pending:
+            p._poll()
+        with self._lock:
+            return self._done >= self.expected
+
+    def cancel(self) -> None:
+        """Abandon a replay mid-issue (stale schedule): cancel every part
+        and the parent so the engine queue drains at the next sweep."""
+        with self._lock:
+            parts = list(self.parts)
+        for p in parts:
+            p.cancel()
+        self.request.cancel()
+
+    @property
+    def done(self) -> bool:
+        return self.request.done
+
+    @property
+    def done_count(self) -> int:
+        with self._lock:
+            return self._done
+
+
 class ProgressEngine:
     """Sharded VCI runtime: lock-striped channel table + parkable waits
     and progress threads."""
@@ -389,6 +503,9 @@ class ProgressEngine:
         self._waiter_parks = 0
         self._waiter_wakes = 0
         self._waiter_spin_hits = 0
+        # fused replay batches (core.schedule): sets opened / parts minted
+        self._fused_sets = 0
+        self._fused_parts = 0
         # per-thread channel affinity (bind/unbind is a stack so a thread
         # attached to several communicators keeps nested bindings straight)
         self._tls = threading.local()
@@ -518,6 +635,27 @@ class ProgressEngine:
             # parks on the implicit stripe — wake it for the new work
             self._notify_stripe(self._stripes[self.n_stripes])
         return req
+
+    def fused_start(
+        self,
+        n_parts: int,
+        stream: MPIXStream = STREAM_NULL,
+        name: str = "fused",
+    ) -> FusedRequestSet:
+        """Open a :class:`FusedRequestSet` expecting exactly ``n_parts``
+        parts: ONE queued request (one wait/notify unit) standing for a
+        whole replayed op graph. This is the batched-grequest fast path
+        ``core.schedule`` replays through — per-op requests skip the
+        channel-queue append, sweep, and per-request notify that
+        :meth:`grequest_start` pays."""
+        fused = FusedRequestSet(self, n_parts, stream=stream, name=name)
+        with self._meta_lock:
+            self._fused_sets += 1
+        return fused
+
+    def _count_fused_part(self) -> None:
+        with self._meta_lock:
+            self._fused_parts += 1
 
     def _notify_stripe(self, stripe: _Stripe) -> None:
         """Broad kick: wake EVERY waiter on the stripe for an unconditional
@@ -1167,6 +1305,8 @@ class ProgressEngine:
             out["waiter_parks"] = self._waiter_parks
             out["waiter_wakes"] = self._waiter_wakes
             out["waiter_spin_hits"] = self._waiter_spin_hits
+            out["fused_sets"] = self._fused_sets
+            out["fused_parts"] = self._fused_parts
         with self._threads_lock:
             out["thread_loops"] = sum(t.loops for t in self._threads.values())
             out["n_progress_threads"] = len(self._threads)
@@ -1188,6 +1328,7 @@ class ProgressEngine:
                 s.chan_parks.clear()
         with self._meta_lock:
             self._waiter_parks = self._waiter_wakes = self._waiter_spin_hits = 0
+            self._fused_sets = self._fused_parts = 0
 
     @property
     def poll_visits(self) -> int:
@@ -1307,7 +1448,18 @@ class AutotunePolicy:
     ``<= demote_score`` for ``hysteresis_down`` consecutive ticks is
     demoted. The open band between the two thresholds holds the current
     placement — together with the streak requirements this is the
-    hysteresis that keeps the tuner from flapping on bursty load."""
+    hysteresis that keeps the tuner from flapping on bursty load.
+
+    ``tune_spin=True`` additionally feeds the engine's ``spin_hits`` /
+    ``parks`` counters back into its spin budget each tick: with at least
+    ``spin_samples`` blocked-caller outcomes since the last tick, a hit
+    ratio ``>= spin_hi`` (spinning keeps winning) multiplies ``spin_s``
+    by ``spin_grow``, and a ratio ``<= spin_lo`` (callers spin the full
+    budget and park anyway — pure burned CPU) multiplies it by
+    ``spin_shrink``, clamped to ``[spin_min, spin_max]`` and applied via
+    :meth:`ProgressEngine.configure` (which re-seeds the per-stripe
+    adaptive budgets). An engine running with ``spin_s == 0`` — spinning
+    explicitly disabled — is never touched."""
 
     interval: float = 0.05  # background tick period (Autotuner.start)
     promote_score: float = 4.0  # per-tick activity that counts as hot
@@ -1317,6 +1469,15 @@ class AutotunePolicy:
     max_threads: int = 4  # cap on autotuner-managed progress threads
     thread_interval: float = 0.0  # interval= for promoted threads
     park: bool = True  # park= for promoted threads
+    # -- autotuner-driven spin budget (ROADMAP item 4) -------------------
+    tune_spin: bool = False  # feed spin_hits/parks back into configure()
+    spin_hi: float = 0.6  # hit ratio at/above which the budget grows
+    spin_lo: float = 0.2  # hit ratio at/below which it shrinks
+    spin_grow: float = 2.0  # multiplicative grow step
+    spin_shrink: float = 0.5  # multiplicative shrink step
+    spin_min: float = 1e-6  # floor (a tuned budget never reaches 0)
+    spin_max: float = 1e-3  # ceiling
+    spin_samples: int = 4  # min (Δhits + Δparks) per tick to act on
 
     def __post_init__(self):
         if self.demote_score >= self.promote_score:
@@ -1328,6 +1489,19 @@ class AutotunePolicy:
             raise ValueError("AutotunePolicy: hysteresis streaks must be >= 1")
         if self.max_threads < 1:
             raise ValueError("AutotunePolicy: max_threads must be >= 1")
+        if not (0.0 <= self.spin_lo < self.spin_hi <= 1.0):
+            raise ValueError(
+                "AutotunePolicy: need 0 <= spin_lo < spin_hi <= 1 (the gap "
+                "is the spin-tuning hysteresis band)"
+            )
+        if self.spin_grow <= 1.0 or not (0.0 < self.spin_shrink < 1.0):
+            raise ValueError(
+                "AutotunePolicy: spin_grow must be > 1 and spin_shrink in (0, 1)"
+            )
+        if not (0.0 < self.spin_min <= self.spin_max):
+            raise ValueError("AutotunePolicy: need 0 < spin_min <= spin_max")
+        if self.spin_samples < 1:
+            raise ValueError("AutotunePolicy: spin_samples must be >= 1")
 
 
 class Autotuner:
@@ -1353,6 +1527,10 @@ class Autotuner:
         self._ticks = 0
         self._promotions = 0
         self._demotions = 0
+        # spin-budget feedback baseline + move counters (tune_spin)
+        self._spin_last: Tuple[int, int] = (0, 0)
+        self._spin_grows = 0
+        self._spin_shrinks = 0
         self._thread: Optional[threading.Thread] = None
         self._stop_evt = threading.Event()
 
@@ -1361,7 +1539,8 @@ class Autotuner:
         """Sample per-channel activity and apply the policy once. Returns
         ``{"promoted": [...], "demoted": [...], "scores": {...}}``."""
         pol = self.policy
-        chans = self.engine.stats(per_channel=True)["channels"]
+        st = self.engine.stats(per_channel=True)
+        chans = st["channels"]
         with self._lock:
             self._ticks += 1
             promoted: List[int] = []
@@ -1412,8 +1591,39 @@ class Autotuner:
                     self._demotions += 1
                     self._idle.pop(c, None)
                     demoted.append(c)
+            if pol.tune_spin:
+                self._tune_spin_locked(st)
             self._scores = scores
-            return {"promoted": promoted, "demoted": demoted, "scores": scores}
+            return {
+                "promoted": promoted,
+                "demoted": demoted,
+                "scores": scores,
+                "spin_s": self.engine.spin_s,
+            }
+
+    def _tune_spin_locked(self, st: dict) -> None:
+        """Feed the blocked-caller spin/park outcome ratio back into the
+        engine's spin budget (see :class:`AutotunePolicy`). Caller holds
+        ``self._lock``; ``configure`` takes only stripe locks."""
+        pol = self.policy
+        cur = (st["spin_hits"], st["parks"])
+        prev, self._spin_last = self._spin_last, cur
+        # clamp: a reset_stats() mid-flight re-baselines, not shrinks
+        hits = max(0, cur[0] - prev[0])
+        parks = max(0, cur[1] - prev[1])
+        total = hits + parks
+        spin = self.engine.spin_s
+        # spin_s == 0 is an explicit "never spin" — do not re-enable it;
+        # and under spin_samples outcomes the ratio is noise.
+        if spin <= 0.0 or total < pol.spin_samples:
+            return
+        ratio = hits / total
+        if ratio >= pol.spin_hi and spin < pol.spin_max:
+            self.engine.configure(spin_s=min(pol.spin_max, spin * pol.spin_grow))
+            self._spin_grows += 1
+        elif ratio <= pol.spin_lo and spin > pol.spin_min:
+            self.engine.configure(spin_s=max(pol.spin_min, spin * pol.spin_shrink))
+            self._spin_shrinks += 1
 
     # -- background mode ---------------------------------------------------
     def start(self) -> "Autotuner":
@@ -1463,6 +1673,9 @@ class Autotuner:
                 "demotions": self._demotions,
                 "active": sorted(self._managed),
                 "scores": dict(self._scores),
+                "spin_s": self.engine.spin_s,
+                "spin_grows": self._spin_grows,
+                "spin_shrinks": self._spin_shrinks,
             }
 
 

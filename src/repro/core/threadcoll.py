@@ -42,7 +42,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-__all__ = ["barrier", "bcast", "reduce", "allreduce", "alltoall", "REDUCE_OPS"]
+__all__ = ["barrier", "bcast", "reduce", "allreduce", "alltoall", "record_barrier", "REDUCE_OPS"]
 
 # namespace marker: first element of every collective-internal tag
 _COLL = "__tc_coll__"
@@ -83,6 +83,29 @@ def barrier(h, timeout: Optional[float] = None) -> None:
         dist = 1 << k
         h.send((r + dist) % n, None, tag=(_COLL, "bar", seq, k))
         h.recv(src=(r - dist) % n, tag=(_COLL, "bar", seq, k), timeout=timeout)
+
+
+def record_barrier(h, schedule, timeout: Optional[float] = None) -> None:
+    """Record one dissemination barrier into ``schedule``: the collective
+    tag sequence number is consumed exactly once, HERE, and baked into
+    every hop's recorded tag — replays re-issue the same hops (the
+    scheduled-tag epoch keeps back-to-back replays apart) with no seq
+    counter traffic and no per-hop validation or request registration.
+
+    All ranks must record together (the record pass executes the barrier
+    eagerly), mirroring the MPI same-order collective contract. A
+    replayed barrier keeps the barrier property: a rank's fused wait
+    completes only after it received every round's message, and each of
+    those was sent by a peer that had itself entered replay."""
+    n = h.comm.nthreads
+    seq = h._next_coll_seq()
+    if n == 1:
+        return
+    r = h.rank
+    for k in range(_nrounds(n)):
+        dist = 1 << k
+        h.send_scheduled(schedule, (r + dist) % n, None, tag=(_COLL, "bar", seq, k))
+        h.recv_scheduled(schedule, (r - dist) % n, tag=(_COLL, "bar", seq, k), timeout=timeout)
 
 
 def bcast(h, obj=None, root: int = 0, timeout: Optional[float] = None):

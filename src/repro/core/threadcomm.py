@@ -438,6 +438,29 @@ class ThreadRank:
     def _next_coll_seq(self) -> int:
         return next(self._coll_seq)
 
+    # -- recorded schedules (core.schedule) ------------------------------
+    def send_scheduled(self, schedule, dst: int, obj=None, tag=0, *, bind: Optional[str] = None) -> None:
+        """Record a send to ``dst`` into ``schedule`` — validation,
+        destination channel and mailbox resolve once, at record time; the
+        record pass delivers eagerly. ``bind=`` names the replay binding
+        that supplies the payload (omit to replay the constant ``obj``)."""
+        self.comm._record_send(schedule, self, dst, obj, tag, bind)
+
+    def recv_scheduled(
+        self,
+        schedule,
+        src: int,
+        tag=0,
+        *,
+        out: Optional[str] = None,
+        timeout: Optional[float] = None,
+    ):
+        """Record the matching receive: each replay posts a fused *part*
+        the sender's delivery completes (no per-recv engine request).
+        ``out=`` stores each replay's payload in ``ctx.outputs[out]``.
+        Blocks for and returns the record pass's payload."""
+        return self.comm._record_recv(schedule, self, src, tag, out, timeout)
+
     # -- identity -------------------------------------------------------
     def as_stream_comm(self, mesh=None, axes: Sequence[str] = ()) -> StreamComm:
         """This thread's execution context as a stream communicator
@@ -790,6 +813,136 @@ class HostThreadComm:
         if self.heartbeat is not None:
             self.heartbeat.record(handle.rank)
         return found[0][2]
+
+    # -- recorded schedules (pt2pt over pre-resolved bindings) ------------
+    def _record_send(self, schedule, handle: ThreadRank, dst: int, obj, tag, bind) -> None:
+        """Record a mailbox send (paper ext. 5 meets user-level
+        schedules): handle/range validation and the destination channel +
+        mailbox resolution happen once, HERE, and the record pass
+        delivers eagerly on the epoch-0 scheduled tag — recording IS an
+        execution. The recorded op is the pre-resolved single-critical-
+        section handoff guarded by two integer staleness checks (comm
+        epoch, handle liveness) in place of the eager path's full
+        validation. Scheduled tags live in the ``("__sched__", tag,
+        replay_epoch)`` namespace (see the ``core.schedule`` module doc),
+        so back-to-back replays never cross-match."""
+        from repro.core.schedule import ScheduleError
+
+        if not schedule.recording:
+            raise ScheduleError("send_scheduled: schedule is not recording")
+        self._check_handle(handle)
+        if not (0 <= dst < self.nthreads):
+            raise ValueError(f"send dst {dst} out of range [0, {self.nthreads})")
+        mb = self._mailboxes[dst]
+        dst_ch = self._streams[dst].channel
+        comm_epoch = self._epoch
+        src_rank = handle.rank
+
+        def deliver(payload, stamped_tag):
+            matched = None
+            with self.engine.channel_section(dst_ch):
+                entry = mb.match_pending(src_rank, stamped_tag)
+                if entry is not None:
+                    _ws, _wt, state = entry
+                    state["payload"] = payload
+                    state["src"] = src_rank
+                    state["tag"] = stamped_tag
+                    state["matched"] = True
+                    matched = state
+                else:
+                    mb.messages.append((src_rank, stamped_tag, payload))
+            handle.sends += 1
+            if self.heartbeat is not None:
+                self.heartbeat.record(src_rank)
+            if matched is not None:
+                # outside the critical section, exactly as _send
+                matched["request"].complete()
+            else:
+                self.engine.notify_channel(dst_ch)
+
+        def issue(ctx):
+            if self._epoch != comm_epoch or not self._active:
+                ctx.schedule._stale(
+                    f"threadcomm {self.name!r} epoch changed under the schedule"
+                )
+            if handle._detached:
+                ctx.schedule._stale(f"rank {src_rank} detached since record()")
+            payload = ctx.bound(bind) if bind is not None else obj
+            deliver(payload, ("__sched__", tag, ctx.epoch))
+
+        schedule.add_op("tc-send", issue, label=f"send r{src_rank}->r{dst}")
+        deliver(obj, ("__sched__", tag, 0))
+
+    def _record_recv(self, schedule, handle: ThreadRank, src: int, tag, out, timeout):
+        """Record the matching receive. Each replay posts a fused *part*
+        as the pending entry — the sender's (eager or replayed) delivery
+        fulfills and completes it through the existing ``match_pending``
+        machinery — so a replayed recv skips both ``grequest_start``
+        registration and the per-recv wait: the schedule's single fused
+        wait covers every recv in the graph. ``ANY_SOURCE`` is not
+        schedulable (channel bindings must resolve at record time). The
+        record pass blocks for and returns the epoch-0 payload."""
+        from repro.core.schedule import ScheduleError
+
+        if not schedule.recording:
+            raise ScheduleError("recv_scheduled: schedule is not recording")
+        if src == ANY_SOURCE:
+            raise ScheduleError(
+                "recv_scheduled: ANY_SOURCE cannot be recorded — a schedule "
+                "resolves its source/channel bindings at record time"
+            )
+        self._check_handle(handle)
+        if not (0 <= src < self.nthreads):
+            raise ValueError(f"recv src {src} out of range [0, {self.nthreads})")
+        mb = self._mailboxes[handle.rank]
+        ch = handle.channel
+        comm_epoch = self._epoch
+        rank = handle.rank
+
+        def issue(ctx):
+            if self._epoch != comm_epoch or not self._active:
+                ctx.schedule._stale(
+                    f"threadcomm {self.name!r} epoch changed under the schedule"
+                )
+            if handle._detached:
+                ctx.schedule._stale(f"rank {rank} detached since record()")
+            part = ctx.fused.part(name=f"sched-recv-r{rank}")
+            state = {
+                "payload": None,
+                "src": None,
+                "tag": None,
+                "matched": False,
+                "request": part,
+            }
+            stamped = ("__sched__", tag, ctx.epoch)
+            complete_now = False
+            with self.engine.channel_section(ch):
+                m = mb.match_pop(src, stamped)
+                if m is not None:
+                    state["payload"] = m[2]
+                    state["src"] = m[0]
+                    state["tag"] = m[1]
+                    state["matched"] = True
+                    complete_now = True
+                else:
+                    mb.pending.append((src, stamped, state))
+            if complete_now:
+                part.complete()
+            handle.recvs += 1
+            if out is not None:
+
+                def extract(st=state):
+                    if not st["matched"]:
+                        raise RuntimeError(
+                            "scheduled recv completed without a payload "
+                            "(post cancelled by an epoch finish?)"
+                        )
+                    ctx.outputs[out] = st["payload"]
+
+                ctx.finalizers.append(extract)
+
+        schedule.add_op("tc-recv", issue, parts=1, label=f"recv r{rank}<-r{src}")
+        return self._recv(handle, src, ("__sched__", tag, 0), timeout)
 
     def _probe(self, handle: ThreadRank, src: int, tag, timeout: Optional[float]):
         """Blocking probe: park until a matching message is queued; return

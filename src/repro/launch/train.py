@@ -141,6 +141,10 @@ class Trainer:
         # static hand placement (one thread per known stream for the whole
         # run) is kept behind autotune=False for comparison/benchmarks
         self.autotune = autotune
+        # default policy closes both feedback loops: thread placement AND
+        # the spin budget (stats() spin_hits/parks ratio -> configure())
+        if autotune and autotune_policy is None:
+            autotune_policy = AutotunePolicy(tune_spin=True)
         self.tuner = self.engine.autotune(autotune_policy) if autotune else None
         self.ckpt_stream = stream_create(name="ckpt")
         self.data_stream = stream_create(name="data")
@@ -249,7 +253,9 @@ class Trainer:
                 ts = self.tuner.stats()
                 print(
                     f"[trainer] autotuner: {ts['ticks']} ticks, "
-                    f"{ts['promotions']} promotions / {ts['demotions']} demotions"
+                    f"{ts['promotions']} promotions / {ts['demotions']} demotions, "
+                    f"spin_s {ts['spin_s']*1e6:.0f}us "
+                    f"({ts['spin_grows']} grows / {ts['spin_shrinks']} shrinks)"
                 )
         return self.history
 

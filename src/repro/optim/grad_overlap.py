@@ -20,12 +20,22 @@ from typing import List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import datatype as dt
 from repro.core.collectives import all_reduce, reduce_scatter
+from repro.core.enqueue import _poll_dispatched, dispatch_enqueue
+from repro.core.progress import default_engine
 from repro.core.streams import StreamComm, MPIXStream, new_token
 
-__all__ = ["GradBuckets", "build_buckets", "bucketed_all_reduce", "flatten_grads", "unflatten_grads"]
+__all__ = [
+    "GradBuckets",
+    "build_buckets",
+    "bucketed_all_reduce",
+    "bucketed_all_reduce_host",
+    "flatten_grads",
+    "unflatten_grads",
+]
 
 
 @dataclass(frozen=True)
@@ -111,3 +121,156 @@ def bucketed_all_reduce(
             y, tokens[i % k] = all_reduce(chunk, comm_i, token=tokens[i % k])
         outs.append(y)
     return jnp.concatenate(outs), tokens
+
+
+# ----------------------------------------------------------------------
+# Host-driven bucket round-robin (record/replay capable)
+# ----------------------------------------------------------------------
+
+
+_bucket_programs: dict = {}
+
+
+def _bucket_program(comm: StreamComm, start: int, n: int, scatter: bool):
+    """One jitted per-bucket collective program: slice (start, n) baked
+    static, reduced over ``comm``'s axis on ``comm``'s stream. Shared by
+    the eager host path and the recorded replay — byte-identity between
+    the two is inherited from running the *same* executable. Memoized:
+    a fresh closure per call would defeat jit's trace cache and re-trace
+    every bucket on every eager step."""
+    from repro.core.threadcomm import shard_map  # deferred: import order
+
+    key = (comm, start, n, bool(scatter))
+    cached = _bucket_programs.get(key)
+    if cached is not None:
+        return cached
+    mesh, axis = comm.mesh, comm.axes[0]
+
+    def body(flat):
+        chunk = jax.lax.dynamic_slice_in_dim(flat, start, n)
+        if scatter:
+            y, _ = reduce_scatter(chunk, comm, axis=0, token=new_token())
+        else:
+            y, _ = all_reduce(chunk, comm, token=new_token())
+        return y
+
+    out_spec = P(axis) if scatter else P()
+    prog = jax.jit(
+        shard_map(body, mesh=mesh, in_specs=P(), out_specs=out_spec, check_vma=False)
+    )
+    _bucket_programs[key] = prog
+    return prog
+
+
+def _grad_fingerprint(flat_grads, plan: GradBuckets, comms, scatter: bool) -> dict:
+    return {
+        "kind": "grad_buckets",
+        "flat_shape": tuple(flat_grads.shape),
+        "flat_dtype": str(flat_grads.dtype),
+        "bucket_slices": tuple(plan.bucket_slices),
+        "n_comms": len(comms),
+        "comm_axes": tuple(c.axes[0] for c in comms),
+        "scatter": bool(scatter),
+    }
+
+
+def bucketed_all_reduce_host(
+    flat_grads,
+    plan: GradBuckets,
+    comms: Sequence[StreamComm],
+    scatter: bool = False,
+    engine=None,
+    schedule=None,
+):
+    """Host-driven twin of :func:`bucketed_all_reduce`: each bucket is its
+    own jitted collective program dispatched from the host in stream
+    round-robin, its completion a generalized request on the bucket's
+    stream channel — the host overlaps bucket i's collective with bucket
+    i+1's dispatch and blocks once, in one batched ``wait_all``.
+
+    ``schedule=`` makes the round-robin record-then-replay: the first
+    call records (running the eager path while capturing one pre-resolved
+    issue closure per bucket — the jitted program and stream binding are
+    resolved at record time) and seals; later calls replay the whole
+    round-robin as one fused request set with a single wait — no per-
+    bucket request registration, no per-bucket validation. Replay output
+    is byte-identical (same executables, same inputs). A changed flat
+    length/dtype, bucket plan, or comm set raises ``ScheduleStale``.
+
+    Returns the reduced flat vector (no tokens: host-side ordering comes
+    from dataflow + the engine, the paper's get-the-host-out point).
+    """
+    if isinstance(flat_grads, jax.core.Tracer):
+        raise ValueError(
+            "bucketed_all_reduce_host is host-side (engine waits cannot run "
+            "under tracing); use bucketed_all_reduce inside shard_map/jit"
+        )
+    eng = engine or default_engine()
+    k = len(comms)
+    if schedule is not None and schedule.sealed:
+        meta = schedule.meta.get("grad_buckets")
+        if meta is None:
+            raise ValueError(
+                "bucketed_all_reduce_host: the sealed schedule was not "
+                "recorded by this loop (no meta['grad_buckets'])"
+            )
+        # the recorded fingerprint op re-checks on every replay — no
+        # second wrapper-level check needed
+        ctx = schedule.replay(binding={"flat_grads": flat_grads})
+        return ctx.outputs["flat"]
+
+    progs = [
+        _bucket_program(comms[i % k], start, n, scatter)
+        for i, (start, n) in enumerate(plan.bucket_slices)
+    ]
+
+    def run_eager():
+        outs, reqs = [], []
+        for i, prog in enumerate(progs):
+            y = prog(flat_grads)
+            reqs.append(
+                dispatch_enqueue(y, stream=comms[i % k].stream, engine=eng, name="grad-bucket")
+            )
+            outs.append(y)
+        eng.wait_all([r.grequest for r in reqs])
+        return jnp.concatenate(outs)
+
+    if schedule is None:
+        return run_eager()
+
+    fp = _grad_fingerprint(flat_grads, plan, comms, scatter)
+
+    def check_and_reset(ctx):
+        ctx.schedule.check(
+            **_grad_fingerprint(ctx.bound("flat_grads"), plan, comms, scatter)
+        )
+        ctx.scratch["outs"] = []
+
+    def make_bucket(i, prog):
+        def issue(ctx):
+            y = prog(ctx.bound("flat_grads"))
+            ctx.fused.part(poll_fn=_poll_dispatched, extra_state={"y": y}, name="grad-bucket")
+            ctx.scratch["outs"].append(y)
+
+        return issue
+
+    def collect(ctx):
+        # blocking completion assist (see ReplayContext.prewaits)
+        ctx.prewaits.append(lambda: jax.block_until_ready(ctx.scratch["outs"]))
+        ctx.finalizers.append(
+            lambda: ctx.outputs.__setitem__("flat", jnp.concatenate(ctx.scratch["outs"]))
+        )
+
+    rec = schedule.record()
+    try:
+        schedule.fingerprint(**fp)
+        schedule.add_op("check", check_and_reset, parts=0, label="fingerprint")
+        for i, prog in enumerate(progs):
+            schedule.add_op("grad_bucket", make_bucket(i, prog), parts=1, label=f"bucket{i}")
+        schedule.add_op("collect", collect, parts=0, label="concat")
+        out = run_eager()
+        schedule.meta["grad_buckets"] = {"n_buckets": plan.n_buckets, "n_comms": k}
+        rec.seal()
+    finally:
+        rec.abort()
+    return out

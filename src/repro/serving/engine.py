@@ -25,7 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.enqueue import _poll_dispatched
 from repro.core.progress import GeneralizedRequest, ProgressEngine
+from repro.core.schedule import Schedule, ScheduleStale
 from repro.core.streams import MPIXStream, STREAM_NULL
 from repro.models import api
 from repro.models.config import ModelConfig
@@ -53,6 +55,7 @@ class ServeEngine:
         max_len: int = 512,
         progress_engine: Optional[ProgressEngine] = None,
         stream: MPIXStream = STREAM_NULL,
+        step_schedule=False,
     ):
         self.cfg = cfg
         self.params = params
@@ -60,6 +63,15 @@ class ServeEngine:
         self.max_len = max_len
         self.progress_engine = progress_engine
         self.stream = stream
+        # steady-state decode as a recorded schedule: step() always decodes
+        # the full (max_batch,) vectors, so the op graph is one decode
+        # dispatch whose shape never depends on the active set — recorded
+        # once, replayed every step (see _decode_scheduled)
+        if step_schedule is True:
+            step_schedule = Schedule(
+                engine=progress_engine, stream=stream, name="serve-step"
+            )
+        self.step_schedule: Optional[Schedule] = step_schedule or None
         self.cache = api.init_cache(cfg, max_batch, max_len)
         self.pos = np.zeros((max_batch,), np.int32)
         self.cur_tok = np.zeros((max_batch,), np.int32)
@@ -134,10 +146,66 @@ class ServeEngine:
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return active, None
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.cur_tok), jnp.asarray(self.pos)
-        )
+        if self.step_schedule is not None:
+            logits = self._decode_scheduled()
+        else:
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self.cur_tok), jnp.asarray(self.pos)
+            )
         return active, np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+
+    def _decode_scheduled(self):
+        """The recorded steady-state decode. First active step records and
+        seals a one-op graph (the op reads the *live* ``cur_tok``/``pos``/
+        ``cache`` at issue time, so membership churn never invalidates);
+        every later step is a replay — one fused issue, one wait, no
+        per-step request registration. Structure drift (a swapped params
+        tree, a resized batch) raises :class:`ScheduleStale` internally;
+        this engine owns the schedule, so it answers the raise the only
+        correct way — a full re-record — rather than surfacing it to
+        ``step()`` callers who never saw the schedule. Byte-identity with
+        the unscheduled path is trivial: the op runs the same jitted
+        ``_decode`` on the same live state."""
+        sched = self.step_schedule
+        if sched.sealed:
+            try:
+                sched.check(
+                    params_id=id(self.params),
+                    max_batch=self.max_batch,
+                    max_len=self.max_len,
+                    cache_tree=str(jax.tree_util.tree_structure(self.cache)),
+                )
+                return sched.replay().outputs["logits"]
+            except ScheduleStale:
+                pass  # invalidated; fall through to re-record
+        rec = sched.record()
+        try:
+            sched.fingerprint(
+                params_id=id(self.params),
+                max_batch=self.max_batch,
+                max_len=self.max_len,
+                cache_tree=str(jax.tree_util.tree_structure(self.cache)),
+            )
+
+            def issue(ctx):
+                logits, cache = self._decode(
+                    self.params, self.cache, jnp.asarray(self.cur_tok), jnp.asarray(self.pos)
+                )
+                self.cache = cache
+                ctx.fused.part(
+                    poll_fn=_poll_dispatched, extra_state={"y": logits}, name="serve-decode"
+                )
+                # blocking completion assist (see ReplayContext.prewaits)
+                ctx.prewaits.append(lambda: jax.block_until_ready(logits))
+                ctx.outputs["logits"] = logits
+
+            sched.add_op("serve_decode", issue, parts=1, label="decode-step")
+            rec.seal()
+        finally:
+            rec.abort()
+        # the freshly recorded graph replays immediately: recording is
+        # cheap here (no eager twin to run — the op reads live state)
+        return sched.replay().outputs["logits"]
 
     def _advance_slot(self, i: int, tok: int) -> None:
         """Per-slot host bookkeeping after a decode step: record the token,

@@ -316,6 +316,88 @@ def test_mpix006_reconciles_across_files():
 
 
 # ----------------------------------------------------------------------
+# MPIX007 — schedule record/seal brackets
+# ----------------------------------------------------------------------
+
+
+def test_mpix007_fires_on_unsealed_and_unprotected_recordings():
+    bad = """
+    from repro.core.schedule import Schedule
+
+    def never_seals(engine, ops):
+        sched = Schedule(engine=engine, name="s")
+        sched.record()
+        ops(sched)
+
+    def seal_can_be_skipped(engine, ops):
+        sched = Schedule(engine=engine, name="s")
+        rec = sched.record()
+        ops(sched)
+        rec.seal()
+    """
+    findings = lint_source(textwrap.dedent(bad), filename="s.py")
+    keys = {f.key for f in findings if f.rule == "MPIX007"}
+    assert keys == {"record-no-seal", "seal-not-in-finally"}
+
+
+def test_mpix007_silent_on_both_safe_brackets():
+    good = """
+    from repro.core.schedule import Schedule
+
+    def context_form(engine, ops):
+        sched = Schedule(engine=engine, name="s")
+        with sched.record():
+            ops(sched)
+
+    def explicit_bracket(engine, ops):
+        sched = Schedule(engine=engine, name="s")
+        rec = sched.record()
+        try:
+            ops(sched)
+            rec.seal()
+        finally:
+            rec.abort()
+
+    def seal_on_receiver_in_finally(engine, ops):
+        sched = Schedule(engine=engine, name="s")
+        sched.record()
+        try:
+            ops(sched)
+        finally:
+            sched.seal()
+    """
+    assert "MPIX007" not in rules_fired(good)
+
+
+def test_mpix007_ignores_untracked_record_calls():
+    good = """
+    def f(recorder):
+        recorder.record()  # some profiler, not a Schedule
+    """
+    assert "MPIX007" not in rules_fired(good)
+
+
+def test_mpix004_schedule_owned_handles_are_not_leaks():
+    good = """
+    def f(x, comm, sched, win):
+        # schedule-owned: the fused set carries the replay lifetime
+        isend_enqueue_scheduled(x, comm, 1, schedule=sched, window=win)
+        y, req = isend_enqueue_scheduled(x, comm, 1, schedule=sched, window=win)
+        return y
+    """
+    assert "MPIX004" not in rules_fired(good)
+
+
+def test_mpix004_still_fires_without_schedule_kwarg():
+    bad = """
+    def f(x, comm):
+        y, req = isend_enqueue(x, comm, 1)
+    """
+    findings = lint_source(textwrap.dedent(bad), filename="s.py")
+    assert any(f.rule == "MPIX004" and f.key == "unused-y-req" for f in findings)
+
+
+# ----------------------------------------------------------------------
 # baseline + CLI gating
 # ----------------------------------------------------------------------
 

@@ -812,6 +812,101 @@ def test_autotuner_background_start_stop():
     assert all(r.done for r in keep)
 
 
+# ------------------------------------------------- spin-budget feedback
+
+
+def _feed_spin_outcomes(eng, hits=0, parks=0):
+    """White-box: credit blocked-caller outcomes to the meta counters the
+    tuner samples (the real paths increment these in wait/park loops)."""
+    with eng._meta_lock:
+        eng._waiter_spin_hits += hits
+        eng._waiter_parks += parks
+
+
+def test_spin_tuner_grows_on_hit_ratio():
+    eng = pg.ProgressEngine(spin_s=1e-5)
+    tuner = eng.autotune(pg.AutotunePolicy(tune_spin=True, spin_hi=0.6, spin_lo=0.2))
+    _feed_spin_outcomes(eng, hits=8, parks=2)  # ratio 0.8 >= hi
+    tuner.tick()
+    assert eng.spin_s == pytest.approx(2e-5)  # x spin_grow
+    st = tuner.stats()
+    assert st["spin_grows"] == 1 and st["spin_shrinks"] == 0
+    assert st["spin_s"] == pytest.approx(2e-5)
+    # the delta was consumed: a quiet tick holds the budget
+    tuner.tick()
+    assert eng.spin_s == pytest.approx(2e-5)
+
+
+def test_spin_tuner_shrinks_on_park_ratio_and_clamps_at_min():
+    eng = pg.ProgressEngine(spin_s=4e-6)
+    tuner = eng.autotune(
+        pg.AutotunePolicy(tune_spin=True, spin_lo=0.2, spin_min=1e-6, spin_shrink=0.5)
+    )
+    _feed_spin_outcomes(eng, hits=1, parks=9)  # ratio 0.1 <= lo
+    tuner.tick()
+    assert eng.spin_s == pytest.approx(2e-6)
+    _feed_spin_outcomes(eng, hits=0, parks=10)
+    tuner.tick()
+    assert eng.spin_s == pytest.approx(1e-6)  # hit the floor
+    _feed_spin_outcomes(eng, hits=0, parks=10)
+    tuner.tick()
+    assert eng.spin_s == pytest.approx(1e-6)  # clamped, no further shrink
+    assert tuner.stats()["spin_shrinks"] == 2
+
+
+def test_spin_tuner_clamps_at_max():
+    eng = pg.ProgressEngine(spin_s=6e-4)
+    tuner = eng.autotune(pg.AutotunePolicy(tune_spin=True, spin_max=1e-3))
+    _feed_spin_outcomes(eng, hits=10)
+    tuner.tick()
+    assert eng.spin_s == pytest.approx(1e-3)  # capped, not 1.2e-3
+    _feed_spin_outcomes(eng, hits=10)
+    tuner.tick()
+    assert eng.spin_s == pytest.approx(1e-3)
+    assert tuner.stats()["spin_grows"] == 1  # the at-cap tick is not a move
+
+
+def test_spin_tuner_never_reenables_spin_zero():
+    """spin_s=0 is an explicit never-spin choice (pure parking); feedback
+    must not overrule it no matter how hit-heavy the window looks."""
+    eng = pg.ProgressEngine(spin_s=0.0)
+    tuner = eng.autotune(pg.AutotunePolicy(tune_spin=True))
+    _feed_spin_outcomes(eng, hits=100)
+    tuner.tick()
+    assert eng.spin_s == 0.0
+    assert tuner.stats()["spin_grows"] == 0
+
+
+def test_spin_tuner_holds_below_sample_floor_and_when_disabled():
+    eng = pg.ProgressEngine(spin_s=1e-5)
+    tuner = eng.autotune(pg.AutotunePolicy(tune_spin=True, spin_samples=4))
+    _feed_spin_outcomes(eng, hits=3)  # 3 outcomes < spin_samples: noise
+    tuner.tick()
+    assert eng.spin_s == pytest.approx(1e-5)
+    # a window with enough outcomes moves (the held tick reset the baseline)
+    _feed_spin_outcomes(eng, hits=5)
+    tuner.tick()
+    assert eng.spin_s == pytest.approx(2e-5)
+
+    eng2 = pg.ProgressEngine(spin_s=1e-5)
+    tuner2 = eng2.autotune(pg.AutotunePolicy())  # tune_spin defaults off
+    _feed_spin_outcomes(eng2, hits=100)
+    tuner2.tick()
+    assert eng2.spin_s == pytest.approx(1e-5)
+    assert "spin_s" in tuner2.stats()  # surfaced either way
+
+
+def test_spin_policy_validates():
+    with pytest.raises(ValueError, match="spin_lo"):
+        pg.AutotunePolicy(spin_lo=0.7, spin_hi=0.6)
+    with pytest.raises(ValueError, match="spin_grow"):
+        pg.AutotunePolicy(spin_grow=1.0)
+    with pytest.raises(ValueError, match="spin_min"):
+        pg.AutotunePolicy(spin_min=2e-3, spin_max=1e-3)
+    with pytest.raises(ValueError, match="spin_samples"):
+        pg.AutotunePolicy(spin_samples=0)
+
+
 def test_per_channel_stats_view():
     eng = pg.ProgressEngine()
     pool = ss.StreamPool()

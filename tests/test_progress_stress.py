@@ -66,8 +66,17 @@ CONFIGS = {
     "sanitized": dict(
         engine=dict(sanitize=True), n_threads=4, n_channels=3, chaos=True, autotune=True
     ),
+    # recorded-schedule replay under chaos: two threadcomm ranks record a
+    # scheduled ping-pong + barrier, then replay it repeatedly while the
+    # chaos thread churns progress-thread placement and the autotuner
+    # ticks, with regular request churn alongside — every replay's output
+    # must equal the eager exchange, and the sanitizer must end clean
+    "schedule": dict(
+        engine=dict(sanitize=True), n_threads=2, n_channels=2, chaos=True,
+        autotune=True, schedule=True,
+    ),
 }
-SEEDS = range(20)  # 6 configs x 20 seeds = 120 schedules
+SEEDS = range(20)  # 7 configs x 20 seeds = 140 schedules
 
 
 class _Completer(threading.Thread):
@@ -165,6 +174,48 @@ def _worker(engine, streams, window, completer, seed, tid, n_ops, errors):
         errors.append((tid, e))
 
 
+def _schedule_worker(comm, rank, seed, n_replays, errors):
+    """One threadcomm rank of the recorded-schedule soak: record a
+    ping-pong + barrier once, then replay it ``n_replays`` times with
+    fresh bindings, asserting every replay's output equals the eager
+    exchange it stands for (the peer replays in lockstep, so replay i's
+    reply must be the peer's bound payload for step i)."""
+    from repro.core import threadcoll as tc
+    from repro.core.schedule import Schedule
+
+    rng = Random((seed << 4) | rank)
+    peer = 1 - rank
+    try:
+        h = comm.attach(rank)
+        try:
+            sched = Schedule(engine=comm.engine, stream=h.stream, name=f"soak-sched-r{rank}")
+            rec = sched.record()
+            try:
+                if rank == 0:
+                    h.send_scheduled(sched, peer, ("rec", 0), tag=101, bind="msg")
+                    got = h.recv_scheduled(sched, peer, tag=102, out="reply", timeout=_OP_TIMEOUT)
+                else:
+                    got = h.recv_scheduled(sched, peer, tag=101, out="reply", timeout=_OP_TIMEOUT)
+                    h.send_scheduled(sched, peer, ("rec", 1), tag=102, bind="msg")
+                tc.record_barrier(h, sched, timeout=_OP_TIMEOUT)
+                rec.seal()
+            finally:
+                rec.abort()
+            assert got == ("rec", peer), f"record pass saw {got!r}"
+            for i in range(n_replays):
+                ctx = sched.replay(binding={"msg": (rank, i)}, timeout=_OP_TIMEOUT)
+                assert ctx.outputs["reply"] == (peer, i), (
+                    f"replay {i} diverged from eager: {ctx.outputs['reply']!r}"
+                )
+                if rng.random() < 0.3:
+                    time.sleep(rng.random() * 0.002)
+            assert sched.stats()["replays"] == n_replays
+        finally:
+            h.detach()
+    except BaseException as e:
+        errors.append((f"sched-r{rank}", e))
+
+
 def _chaos(engine, streams, tuner, stop_evt, seed, errors):
     """Start/stop progress threads and tick the autotuner concurrently
     with the churn — placement changes must never strand a waiter."""
@@ -226,6 +277,21 @@ def test_progress_soak(cfg_name, seed):
         )
         for tid in range(cfg["n_threads"])
     ]
+    comm = None
+    if cfg.get("schedule"):
+        from repro.core.threadcomm import HostThreadComm
+
+        comm = HostThreadComm(2, engine=engine, pool=pool, name="soak-sched")
+        comm.start()
+        workers += [
+            threading.Thread(
+                target=_schedule_worker,
+                args=(comm, rank, seed, 6, errors),
+                daemon=True,
+                name=f"soak-sched-r{rank}",
+            )
+            for rank in range(2)
+        ]
     for w in workers:
         w.start()
     for w in workers:
@@ -242,6 +308,11 @@ def test_progress_soak(cfg_name, seed):
     assert not completer.is_alive(), "completer hung with undrained queue"
     # -- invariant 2: no lost wakeups (worker asserts) -----------------
     assert not errors, f"(cfg={cfg_name} seed={seed}) {errors[0]}"
+
+    # the scheduled ping-pong epoch closes cleanly: every recorded send
+    # had its matching recorded recv, on the record pass and every replay
+    if comm is not None:
+        assert comm.finish(timeout=_OP_TIMEOUT) == 0
 
     # window drains completely
     window.drain(timeout=_OP_TIMEOUT)

@@ -1,0 +1,399 @@
+"""Recorded schedules (`repro.core.schedule`): lifecycle, fused request
+sets, invalidation, and byte-identity of the three converted steady-state
+loops (pipeline ticks, grad buckets, serving decode) against the eager
+paths they replace."""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.progress import ProgressEngine
+from repro.core.schedule import (
+    Schedule,
+    ScheduleError,
+    ScheduleStale,
+    ScheduleStateError,
+)
+from repro.core.streams import StreamPool, stream_comm_create
+
+_T = 20.0  # generous op timeout: CI hosts stall
+
+
+# ------------------------------------------------------------------ lifecycle
+
+
+def _record_double(sched):
+    """A minimal one-part graph: double the bound input, part completes
+    on first poll."""
+
+    def issue(ctx):
+        ctx.fused.part(poll_fn=lambda st: True, name="double")
+        ctx.outputs["y"] = ctx.bound("x") * 2
+
+    rec = sched.record()
+    try:
+        sched.add_op("double", issue, parts=1, label="double")
+        rec.seal()
+    finally:
+        rec.abort()
+
+
+def test_lifecycle_record_seal_replay():
+    sched = Schedule(engine=ProgressEngine(), name="t-life")
+    assert sched.state == "IDLE"
+    _record_double(sched)
+    assert sched.sealed
+    assert sched.ops() == [{"kind": "double", "label": "double", "parts": 1}]
+    for i in range(1, 4):
+        ctx = sched.replay(binding={"x": i}, timeout=_T)
+        assert ctx.outputs["y"] == 2 * i
+        assert ctx.epoch == i
+        assert ctx.done
+    st = sched.stats()
+    assert st["state"] == "SEALED" and st["replays"] == 3
+    assert st["ops"] == 1 and st["parts"] == 1
+
+
+def test_record_bracket_aborts_on_error():
+    sched = Schedule(engine=ProgressEngine(), name="t-abort")
+    with pytest.raises(RuntimeError, match="boom"):
+        with sched.record():
+            sched.add_op("noop", lambda ctx: None, parts=0)
+            raise RuntimeError("boom")
+    # the context manager aborted the recording: nothing was kept
+    assert sched.state == "IDLE"
+    assert sched.stats()["ops"] == 0
+
+
+def test_replay_before_seal_raises():
+    sched = Schedule(engine=ProgressEngine(), name="t-unsealed")
+    with pytest.raises(ScheduleStateError):
+        sched.replay()
+    rec = sched.record()
+    try:
+        with pytest.raises(ScheduleStateError):
+            sched.replay()  # still recording
+    finally:
+        rec.abort()
+
+
+def test_missing_binding_is_a_schedule_error():
+    sched = Schedule(engine=ProgressEngine(), name="t-bind")
+    _record_double(sched)
+    with pytest.raises(ScheduleError, match="needs binding 'x'"):
+        sched.replay(binding={"wrong": 1}, timeout=_T)
+
+
+def test_fingerprint_check_invalidates_and_rerecord_continues_epochs():
+    sched = Schedule(engine=ProgressEngine(), name="t-stale")
+    rec = sched.record()
+    try:
+        sched.fingerprint(n=4)
+
+        def issue(ctx):
+            ctx.fused.part(poll_fn=lambda st: True)
+
+        sched.add_op("op", issue, parts=1)
+        rec.seal()
+    finally:
+        rec.abort()
+    sched.replay(timeout=_T)
+    with pytest.raises(ScheduleStale):
+        sched.check(n=5)
+    assert sched.state == "INVALID"
+    assert "n" in sched.stats()["invalid_reason"]
+    # replaying an invalid schedule raises too — never silently wrong
+    with pytest.raises(ScheduleStale):
+        sched.replay(timeout=_T)
+    # re-record is the recovery path; epochs keep counting up across
+    # re-records (replay #1 succeeded, the invalid attempt never
+    # incremented, so the re-recorded replay is #2)
+    _record_double(sched)
+    ctx = sched.replay(binding={"x": 3}, timeout=_T)
+    assert ctx.outputs["y"] == 6
+    assert sched.stats()["replays"] == 2
+    assert ctx.epoch == 2
+
+
+def test_fused_part_overflow_is_caught():
+    sched = Schedule(engine=ProgressEngine(), name="t-overflow")
+
+    def issue(ctx):
+        ctx.fused.part(poll_fn=lambda st: True)
+        ctx.fused.part(poll_fn=lambda st: True)  # one more than recorded
+
+    rec = sched.record()
+    try:
+        sched.add_op("op", issue, parts=1)
+        rec.seal()
+    finally:
+        rec.abort()
+    with pytest.raises(ValueError, match="exceeds the recorded count"):
+        sched.replay(timeout=_T)
+    # the failed replay cancelled its fused set: one sweep drains the queue
+    sched.engine.progress()
+    assert sched.engine.pending() == 0
+
+
+def test_mid_issue_stale_cancels_fused_set():
+    sched = Schedule(engine=ProgressEngine(), name="t-midstale")
+    rec = sched.record()
+    try:
+        sched.fingerprint(shape=(4,))
+
+        def check(ctx):
+            ctx.schedule.check(shape=tuple(ctx.bound("x").shape))
+
+        def issue(ctx):
+            ctx.fused.part(poll_fn=lambda st: True)
+
+        sched.add_op("check", check, parts=0)
+        sched.add_op("op", issue, parts=1)
+        rec.seal()
+    finally:
+        rec.abort()
+    ctx = sched.replay(binding={"x": np.zeros(4)}, timeout=_T)
+    assert ctx.done
+    with pytest.raises(ScheduleStale):
+        sched.replay(binding={"x": np.zeros(5)}, timeout=_T)
+    sched.engine.progress()
+    assert sched.engine.pending() == 0
+
+
+def test_engine_counts_fused_sets_and_parts():
+    eng = ProgressEngine()
+    sched = Schedule(engine=eng, name="t-count")
+    _record_double(sched)
+    before = eng.stats()
+    for i in range(3):
+        sched.replay(binding={"x": i}, timeout=_T)
+    after = eng.stats()
+    assert after["fused_sets"] - before["fused_sets"] == 3
+    assert after["fused_parts"] - before["fused_parts"] == 3
+
+
+def test_prewait_mounted_as_parent_wait_fn():
+    """A registered prewait becomes the fused parent's batched wait_fn,
+    so the engine's wait retires the set in its fast blocking-batch
+    phase (no spin / park / full progress sweep)."""
+    sched = Schedule(engine=ProgressEngine(), name="t-prewait")
+    ran = []
+
+    def issue(ctx):
+        ctx.fused.part(poll_fn=lambda st: True)
+        ctx.prewaits.append(lambda: ran.append(ctx.epoch))
+
+    rec = sched.record()
+    try:
+        sched.add_op("op", issue, parts=1)
+        rec.seal()
+    finally:
+        rec.abort()
+    ctx = sched.replay(wait=False)
+    assert ctx.fused.request.wait_fn is None  # mounted lazily, at wait()
+    ctx.wait(timeout=_T)
+    assert ctx.fused.request.wait_fn is not None
+    assert ran == [1]
+    ctx.wait(timeout=_T)  # idempotent: assists and finalizers run once
+    assert ran == [1]
+
+
+def test_finalizers_run_once_after_wait():
+    sched = Schedule(engine=ProgressEngine(), name="t-fin")
+    order = []
+
+    def issue(ctx):
+        ctx.fused.part(poll_fn=lambda st: True)
+        ctx.finalizers.append(lambda: order.append("op"))
+
+    rec = sched.record()
+    try:
+        sched.add_op("op", issue, parts=1)
+        sched.add_finalizer(lambda: order.append("sched"))
+        rec.seal()
+    finally:
+        rec.abort()
+    ctx = sched.replay(timeout=_T)
+    ctx.wait(timeout=_T)
+    # op-level finalizers first, then the schedule's per-replay ones
+    assert order == ["op", "sched"]
+
+
+# ------------------------------------------------------- pipeline byte-identity
+
+
+def _pipe_stage(sp, x):
+    y, _ = jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, sp)
+    return y
+
+
+def test_gpipe_replay_byte_identical_and_stale_raises():
+    from repro.core.enqueue import OffloadWindow
+    from repro.parallel.pipeline import gpipe_forward_host
+
+    eng = ProgressEngine()
+    pool = StreamPool()
+    mesh = jax.make_mesh((1,), ("pipe",))
+    offload = pool.create(info={"type": "tpu_stream"}, name="t-pipe")
+    comm = stream_comm_create(mesh, ("pipe",), offload)
+    Ws = jax.random.normal(jax.random.key(0), (1, 2, 8, 8)) * 0.3
+    xs = jax.random.normal(jax.random.key(1), (3, 2, 8))
+    win = OffloadWindow(offload, depth=2, engine=eng, name="t-pipe-win")
+
+    eager, _ = gpipe_forward_host(_pipe_stage, Ws, xs, comm, window=win)
+
+    sched = Schedule(engine=eng, stream=offload, name="t-1f1b")
+    rec_out, _ = gpipe_forward_host(_pipe_stage, Ws, xs, comm, window=win, schedule=sched)
+    np.testing.assert_array_equal(np.asarray(rec_out), np.asarray(eager))
+    assert sched.sealed
+
+    for _ in range(3):
+        out, w2 = gpipe_forward_host(_pipe_stage, Ws, xs, comm, window=win, schedule=sched)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(eager))
+        assert w2 is win  # replay re-issues into the record-time window
+    assert sched.stats()["replays"] == 3
+
+    # structure drift raises instead of replaying a wrong graph
+    with pytest.raises(ScheduleStale):
+        gpipe_forward_host(_pipe_stage, Ws, xs[:, :, :4], comm, window=win, schedule=sched)
+    assert sched.state == "INVALID"
+
+
+def test_gpipe_replay_rejects_conflicting_depth():
+    from repro.core.enqueue import OffloadWindow
+    from repro.parallel.pipeline import gpipe_forward_host
+
+    eng = ProgressEngine()
+    pool = StreamPool()
+    mesh = jax.make_mesh((1,), ("pipe",))
+    offload = pool.create(info={"type": "tpu_stream"}, name="t-pipe-d")
+    comm = stream_comm_create(mesh, ("pipe",), offload)
+    Ws = jax.random.normal(jax.random.key(0), (1, 2, 8, 8)) * 0.3
+    xs = jax.random.normal(jax.random.key(1), (3, 2, 8))
+    win = OffloadWindow(offload, depth=2, engine=eng, name="t-pipe-d-win")
+
+    sched = Schedule(engine=eng, stream=offload, name="t-1f1b-d")
+    gpipe_forward_host(_pipe_stage, Ws, xs, comm, window=win, schedule=sched)
+    with pytest.raises(ValueError, match="depth bound at record time"):
+        gpipe_forward_host(_pipe_stage, Ws, xs, comm, depth=5, schedule=sched)
+
+
+# ---------------------------------------------------- grad-bucket byte-identity
+
+
+def test_grad_buckets_replay_byte_identical_and_stale_raises():
+    from repro.optim.grad_overlap import build_buckets, bucketed_all_reduce_host
+
+    eng = ProgressEngine()
+    pool = StreamPool()
+    mesh = jax.make_mesh((1,), ("data",))
+    comms = [
+        stream_comm_create(mesh, ("data",), pool.create(name=f"t-gb{i}")) for i in range(2)
+    ]
+    params = [jnp.zeros((64, 8), jnp.float32), jnp.zeros((256,), jnp.float32)]
+    plan = build_buckets(params, bucket_bytes=1024)
+    flat = jnp.arange(plan.total_elems, dtype=jnp.float32) / plan.total_elems
+
+    eager = bucketed_all_reduce_host(flat, plan, comms, engine=eng)
+
+    sched = Schedule(engine=eng, stream=comms[0].stream, name="t-grads")
+    rec_out = bucketed_all_reduce_host(flat, plan, comms, engine=eng, schedule=sched)
+    np.testing.assert_array_equal(np.asarray(rec_out), np.asarray(eager))
+
+    for _ in range(3):
+        out = bucketed_all_reduce_host(flat, plan, comms, engine=eng, schedule=sched)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(eager))
+    assert sched.stats()["replays"] == 3
+
+    with pytest.raises(ScheduleStale):
+        bucketed_all_reduce_host(flat[:-1], plan, comms, engine=eng, schedule=sched)
+    assert sched.state == "INVALID"
+
+
+# ------------------------------------------------------- serving byte-identity
+
+
+def test_serve_engine_scheduled_step_matches_unscheduled():
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.serving.engine import ServeEngine
+
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    params = api.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (5 + i,)) for i in range(3)]
+
+    def decode_all(step_schedule):
+        eng = ServeEngine(
+            cfg,
+            params,
+            max_batch=2,
+            max_len=64,
+            progress_engine=ProgressEngine(),
+            step_schedule=step_schedule,
+        )
+        reqs = [eng.submit(p, max_new_tokens=4) for p in prompts]
+        eng.run_until_done(max_steps=100)
+        assert all(r.done for r in reqs)
+        return [list(r.out_tokens) for r in reqs], eng
+
+    plain, _ = decode_all(False)
+    scheduled, eng = decode_all(True)
+    assert scheduled == plain
+    st = eng.step_schedule.stats()
+    assert st["state"] == "SEALED"
+    assert st["replays"] >= 2  # recorded once, replayed every later step
+
+
+# -------------------------------------------------------- threadcomm schedules
+
+
+def test_threadcomm_scheduled_pingpong_replays_lockstep():
+    from repro.core import threadcoll as tc
+    from repro.core.threadcomm import HostThreadComm
+
+    eng = ProgressEngine()
+    comm = HostThreadComm(2, engine=eng, name="t-sched-comm")
+    comm.start()
+    errors = []
+    n_replays = 4
+
+    def worker(rank):
+        peer = 1 - rank
+        try:
+            h = comm.attach(rank)
+            try:
+                sched = Schedule(engine=eng, stream=h.stream, name=f"t-pp-r{rank}")
+                rec = sched.record()
+                try:
+                    if rank == 0:
+                        h.send_scheduled(sched, peer, ("rec", 0), tag=7, bind="msg")
+                        got = h.recv_scheduled(sched, peer, tag=8, out="reply", timeout=_T)
+                    else:
+                        got = h.recv_scheduled(sched, peer, tag=7, out="reply", timeout=_T)
+                        h.send_scheduled(sched, peer, ("rec", 1), tag=8, bind="msg")
+                    tc.record_barrier(h, sched, timeout=_T)
+                    rec.seal()
+                finally:
+                    rec.abort()
+                assert got == ("rec", peer)
+                for i in range(n_replays):
+                    ctx = sched.replay(binding={"msg": (rank, i)}, timeout=_T)
+                    assert ctx.outputs["reply"] == (peer, i)
+                assert sched.stats()["replays"] == n_replays
+            finally:
+                h.detach()
+        except BaseException as e:  # surfaced by the main thread below
+            errors.append((rank, e))
+
+    ts = [threading.Thread(target=worker, args=(r,), daemon=True) for r in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=60.0)
+    assert not any(t.is_alive() for t in ts), "scheduled ping-pong deadlocked"
+    assert not errors, f"worker errors: {errors}"
+    assert comm.finish(timeout=_T) == 0  # no undelivered messages
