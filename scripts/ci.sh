@@ -27,6 +27,20 @@ else
   python -m pytest -q tests/test_progress_stress.py
 fi
 
+# fault-injection step: the seeded fault matrix (6 configs x 15 seeds of
+# kills/stalls/delays/send-timeouts/heartbeat-drops injected at the
+# threadcomm/window/heartbeat seams) plus the --faults variant of the
+# stress soak. Every schedule must end request-conserving, sanitizer-
+# clean and leak-free; the slow-marked end-to-end recovery walks
+# (detect -> replan -> reshard -> resume) run in the nightly slow lane.
+if python -c "import pytest_timeout" >/dev/null 2>&1; then
+  python -m pytest -q -m "not slow" tests/test_fault_injection.py --timeout=300
+  python -m pytest -q tests/test_progress_stress.py -k with_faults --faults --timeout=180
+else
+  python -m pytest -q -m "not slow" tests/test_fault_injection.py
+  python -m pytest -q tests/test_progress_stress.py -k with_faults --faults
+fi
+
 # bench smokes: exercise the pack-engine tiers, the enqueue-window depth
 # scaling, the host-threadcomm channel isolation, and the progress
 # wait-queue/autotuner paths end to end (each asserts its acceptance

@@ -23,6 +23,11 @@ Handles handed to a **schedule** are owned: a producer call carrying a
 an op whose replay lifetime belongs to the schedule's fused request set
 — the record-pass handle is retired by the recording loop itself, so
 dropping it is not a leak and is never flagged.
+
+Handles handed to a **fault injector** are likewise owned: a producer
+call carrying ``fault=`` (``ft.faultinject`` injected requests such as
+``stall_request``) registers the handle with the injector, which cancels
+anything still live at ``uninstall`` — dropping it is not a leak.
 """
 
 from __future__ import annotations
@@ -47,6 +52,12 @@ def _schedule_owned(call: ast.Call) -> bool:
     """A producer invoked with ``schedule=``: the schedule owns the op's
     replay lifetime (fused parts, cancelled or completed as a set)."""
     return any(kw.arg == "schedule" for kw in call.keywords)
+
+
+def _fault_owned(call: ast.Call) -> bool:
+    """A producer invoked with ``fault=``: the fault injector owns the
+    injected request's lifetime (cancelled at uninstall)."""
+    return any(kw.arg == "fault" for kw in call.keywords)
 
 
 def _direct_functions(tree: ast.Module):
@@ -98,7 +109,7 @@ def check(ctx: FileContext) -> None:
         for node in nodes:
             if not (isinstance(node, ast.Call) and call_name(node) in _PRODUCERS):
                 continue
-            if _schedule_owned(node):
+            if _schedule_owned(node) or _fault_owned(node):
                 continue
             parent = ctx.parent(node)
             if isinstance(parent, ast.Expr):

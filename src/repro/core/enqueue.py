@@ -615,6 +615,10 @@ class OffloadWindow:
         stream: Union[MPIXStream, StreamComm] = STREAM_NULL,
         depth: int = 2,
         engine: Optional[ProgressEngine] = None,
+        adaptive: bool = False,
+        min_depth: int = 1,
+        max_depth: Optional[int] = None,
+        adapt_every: int = 8,
         name: str = "window",
     ):
         if isinstance(stream, StreamComm):
@@ -625,6 +629,18 @@ class OffloadWindow:
         self.depth = depth
         self.engine = engine or default_engine()
         self.name = name
+        # adaptive depth: every ``adapt_every`` reserves, grow by one while
+        # issuers are hitting backpressure parks (completions are flowing
+        # but the window is the bottleneck), shrink by one when the window
+        # sat idle — the high-water in-flight count since the last
+        # adjustment never reached the current depth and nobody parked.
+        # Bounds: [min_depth, max_depth]; max_depth defaults to 4× the
+        # starting depth. Shrinking never cancels in-flight work — depth
+        # only gates NEW admissions.
+        self.adaptive = adaptive
+        self.min_depth = max(1, min_depth)
+        self.max_depth = max_depth if max_depth is not None else depth * 4
+        self.adapt_every = max(1, adapt_every)
         self._lock = threading.Lock()
         self._issue_seq = itertools.count()
         self._completion_seq = itertools.count()
@@ -635,6 +651,11 @@ class OffloadWindow:
         self._reaped = 0
         self._parks = 0
         self._max_depth_seen = 0
+        self._reserves = 0
+        self._parks_at_adjust = 0
+        self._max_inflight_since = 0
+        self._grows = 0
+        self._shrinks = 0
 
     # -- admission (the backpressure point) -----------------------------
     def _free_slots(self) -> int:
@@ -654,6 +675,15 @@ class OffloadWindow:
         :meth:`admit` when the request already exists."""
         deadline = None if timeout is None else time.monotonic() + timeout
         ch = self.stream.channel
+        grew = False
+        if self.adaptive:
+            with self._lock:
+                self._reserves += 1
+                if self._reserves % self.adapt_every == 0:
+                    grew = self._adjust_depth_locked()
+            if grew:
+                # wider window → slots exist now; wake parked reservers
+                self.engine.notify_channel(ch)
         while True:
             with self._lock:
                 if self.depth - len(self._in_flight) - self._reserved > 0:
@@ -692,6 +722,26 @@ class OffloadWindow:
                     slice_s = min(slice_s, remaining)
                 self.engine.park_on_channel(ch, lambda: self._free_slots() > 0, slice_s)
 
+    def _adjust_depth_locked(self) -> bool:
+        """One adaptive step (caller holds ``_lock``). Returns True on a
+        grow (the caller must notify the channel outside the lock)."""
+        parks_since = self._parks - self._parks_at_adjust
+        grew = False
+        if parks_since > 0 and self.depth < self.max_depth:
+            self.depth += 1
+            self._grows += 1
+            grew = True
+        elif (
+            parks_since == 0
+            and self._max_inflight_since < self.depth
+            and self.depth > self.min_depth
+        ):
+            self.depth -= 1
+            self._shrinks += 1
+        self._parks_at_adjust = self._parks
+        self._max_inflight_since = 0
+        return grew
+
     def unreserve(self) -> None:
         """Release a slot claimed by :meth:`reserve` without registering a
         request — the cleanup path when dispatch fails between the two
@@ -729,6 +779,8 @@ class OffloadWindow:
             depth_now = len(self._in_flight) + self._reserved
             if depth_now > self._max_depth_seen:
                 self._max_depth_seen = depth_now
+            if depth_now > self._max_inflight_since:
+                self._max_inflight_since = depth_now
         request.add_done_callback(lambda _r, _s=slot: self._on_done(_s))
         return slot
 
@@ -840,6 +892,9 @@ class OffloadWindow:
                 "max_depth_seen": self._max_depth_seen,
                 "in_flight": len(self._in_flight),
                 "completed_unreaped": len(self._completed),
+                "adaptive": self.adaptive,
+                "depth_grows": self._grows,
+                "depth_shrinks": self._shrinks,
             }
         if engine:
             out["engine"] = self.engine.stats()

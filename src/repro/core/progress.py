@@ -592,9 +592,15 @@ class ProgressEngine:
         extra_state: object = None,
         stream: MPIXStream = STREAM_NULL,
         name: str = "grequest",
+        fault: object = None,
     ) -> GeneralizedRequest:
         """``MPIX_Grequest_start``: create + enqueue on the stream's queue,
-        then wake anything parked on the stripe (progress threads)."""
+        then wake anything parked on the stripe (progress threads).
+
+        ``fault=`` hands the handle's lifetime to a fault injector
+        (``ft.faultinject``): the injector cancels whatever is still live
+        at uninstall, so callers may drop injected handles (mpixlint's
+        MPIX004 treats ``fault=`` like ``schedule=``)."""
         req = GeneralizedRequest(
             poll_fn=poll_fn,
             wait_fn=wait_fn,
@@ -607,6 +613,8 @@ class ProgressEngine:
         )
         ch = stream.channel
         stripe = self._stripe(ch)
+        if fault is not None:
+            fault.adopt(req)
         if self._sanitizer is not None:
             self._sanitizer.on_request_start(req)
         # completion from any thread wakes exactly the waiters it satisfies

@@ -507,15 +507,30 @@ class HostThreadComm:
         pool: Optional[StreamPool] = None,
         shared_channel: bool = False,
         heartbeat=None,
+        mailbox_capacity: Optional[int] = None,
+        fault_hook=None,
         name: str = "host-tc",
     ):
         if nthreads < 1:
             raise ValueError(f"HostThreadComm needs >= 1 thread, got {nthreads}")
+        if mailbox_capacity is not None and mailbox_capacity < 1:
+            raise ValueError(f"mailbox_capacity must be >= 1, got {mailbox_capacity}")
         self.nthreads = nthreads
         self.engine = engine or default_engine()
         self.pool = pool or default_pool()
         self.shared_channel = shared_channel
         self.heartbeat = heartbeat
+        # bounded mailboxes: a send to a full queue parks the SENDER on the
+        # destination's per-channel wait queue until a recv frees a slot —
+        # flow control rides the same park/notify machinery as blocked
+        # receives, so a fast producer can't grow a slow consumer's queue
+        # without bound. None = unbounded (the PR-3 behavior).
+        self.mailbox_capacity = mailbox_capacity
+        # fault-injection seam (ft.faultinject): called as
+        # fault_hook(site, rank=..., dst=...) at the top of every mailbox
+        # op; may raise (kill/timeout faults) or sleep (stall/delay).
+        self.fault_hook = fault_hook
+        self._bp_parks = 0
         self.name = name
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
@@ -686,21 +701,61 @@ class HostThreadComm:
         paper's single-queue-hop small-message shortcut (no request
         object on the mailbox path)."""
         self._check_handle(handle)
+        if self.fault_hook is not None:
+            self.fault_hook("tc.send", rank=handle.rank, dst=dst)
         if not (0 <= dst < self.nthreads):
             raise ValueError(f"send dst {dst} out of range [0, {self.nthreads})")
         dst_ch = self._streams[dst].channel
-        matched = None
-        with self.engine.channel_section(dst_ch):
-            entry = self._mailboxes[dst].match_pending(handle.rank, tag)
+        mb = self._mailboxes[dst]
+        cap = self.mailbox_capacity
+        src_rank = handle.rank
+        matched_box: List = []
+
+        def deliver() -> bool:
+            # runs under the destination channel's stripe lock (either the
+            # channel_section fast path or the park predicate): fulfill
+            # the earliest posted receive, else append if a slot is free.
+            entry = mb.match_pending(src_rank, tag)
             if entry is not None:
                 _ws, _wt, state = entry
                 state["payload"] = obj
-                state["src"] = handle.rank
+                state["src"] = src_rank
                 state["tag"] = tag
                 state["matched"] = True
-                matched = state
-            else:
-                self._mailboxes[dst].messages.append((handle.rank, tag, obj))
+                matched_box.append(state)
+                return True
+            if cap is None or len(mb.messages) < cap:
+                mb.messages.append((src_rank, tag, obj))
+                return True
+            return False
+
+        delivered = False
+        with self.engine.channel_section(dst_ch):
+            delivered = deliver()
+        if not delivered:
+            # mailbox full: backpressure — park on the destination channel's
+            # wait queue until a recv pops a slot free (it notifies the
+            # channel). Bounded park slices so a receiver that detached
+            # under us turns into an error, not a hang.
+            while not delivered:
+                delivered = self.engine.park_on_channel(dst_ch, deliver, timeout=1.0)
+                if delivered:
+                    break
+                with self._lock:
+                    dead = not self._active or dst in self._departed
+                if dead:
+                    raise RuntimeError(
+                        f"HostThreadComm({self.name}): send to rank {dst} backpressured "
+                        "on a full mailbox whose receiver departed"
+                    )
+                if self.fault_hook is not None:
+                    # a receiver that dies while we are parked must break the
+                    # backpressure wait (RankKilled/SendTimeout), not leave
+                    # the sender parked on a mailbox no one will ever drain
+                    self.fault_hook("tc.send", rank=handle.rank, dst=dst)
+            with self._lock:
+                self._bp_parks += 1
+        matched = matched_box[0] if matched_box else None
         handle.sends += 1
         if self.heartbeat is not None:
             self.heartbeat.record(handle.rank)
@@ -767,6 +822,8 @@ class HostThreadComm:
         timeout withdraws the post, so a later send can never vanish
         into a dead receive."""
         self._check_handle(handle)
+        if self.fault_hook is not None:
+            self.fault_hook("tc.recv", rank=handle.rank)
         if src != ANY_SOURCE and not (0 <= src < self.nthreads):
             raise ValueError(f"recv src {src} out of range [0, {self.nthreads})")
         if src == ANY_SOURCE:
@@ -809,6 +866,11 @@ class HostThreadComm:
                 f"HostThreadComm({self.name}): rank {handle.rank} recv(src={src}, "
                 f"tag={tag!r}) timed out after {timeout}s"
             )
+        if self.mailbox_capacity is not None:
+            # bounded mailboxes: the pop freed a slot — wake any sender
+            # parked on this channel waiting for space (the irecv path
+            # notifies via the request's done callback already)
+            self.engine.notify_channel(handle.channel)
         handle.recvs += 1
         if self.heartbeat is not None:
             self.heartbeat.record(handle.rank)
@@ -994,6 +1056,8 @@ class HostThreadComm:
                 "pending_messages": [len(mb.messages) for mb in self._mailboxes],
                 "posted_recvs": [len(mb.pending) for mb in self._mailboxes],
                 "delivered": [mb.delivered for mb in self._mailboxes],
+                "mailbox_capacity": self.mailbox_capacity,
+                "backpressure_parks": self._bp_parks,
             }
 
 
@@ -1003,6 +1067,8 @@ def host_threadcomm_init(
     pool: Optional[StreamPool] = None,
     shared_channel: bool = False,
     heartbeat=None,
+    mailbox_capacity: Optional[int] = None,
+    fault_hook=None,
     name: str = "host-tc",
 ) -> HostThreadComm:
     """``MPIX_Threadcomm_init(comm, num_threads)`` for the in-process
@@ -1013,6 +1079,8 @@ def host_threadcomm_init(
         pool=pool,
         shared_channel=shared_channel,
         heartbeat=heartbeat,
+        mailbox_capacity=mailbox_capacity,
+        fault_hook=fault_hook,
         name=name,
     )
 

@@ -63,6 +63,7 @@ class HeartbeatMonitor:
         now = clock()
         self._last: Dict[int, float] = {r: now for r in ranks}
         self._failed: List[int] = []
+        self._reported: set = set()
         self._req = self.engine.grequest_start(
             poll_fn=self._poll,
             wait_fn=_wait_next_deadline,
@@ -78,15 +79,27 @@ class HeartbeatMonitor:
 
     def add_rank(self, rank: int) -> None:
         """Start monitoring ``rank`` (threadcomm attach path). Idempotent;
-        a re-added rank gets a fresh deadline."""
+        a re-added rank gets a fresh deadline and a clean failure slate."""
         with self._lock:
             self._last[rank] = self.clock()
+            if rank in self._failed and rank not in self._reported:
+                self._failed.remove(rank)
 
     def remove_rank(self, rank: int) -> None:
         """Stop monitoring ``rank`` (threadcomm detach path): a cleanly
-        departed rank must not fail the detector later."""
+        departed rank must not fail the detector later.
+
+        Also retracts an unreported detection: the detector snapshots
+        expired ranks under the lock but fires ``on_failure`` outside it
+        (callback re-entrancy), so a rank deregistered between the
+        deadline scan and the report window would otherwise be announced
+        dead after it detached cleanly. ``_poll`` re-validates against
+        ``_failed`` right before reporting, so dropping the rank here
+        cancels the announcement."""
         with self._lock:
             self._last.pop(rank, None)
+            if rank in self._failed and rank not in self._reported:
+                self._failed.remove(rank)
 
     def _next_deadline(self) -> Optional[float]:
         """Earliest absolute time a monitored rank could miss its deadline."""
@@ -101,9 +114,17 @@ class HeartbeatMonitor:
         with self._lock:
             newly = [r for r, t in self._last.items() if now - t > self.timeout and r not in self._failed]
             self._failed.extend(newly)
-        if newly and self.on_failure is not None:
-            self.on_failure(list(newly))
-        return bool(self._failed)
+        if newly:
+            # re-validate under the lock before announcing: a clean
+            # remove_rank() in the gap since the scan retracts the rank
+            # from _failed, and it must not reach on_failure.
+            with self._lock:
+                report = [r for r in newly if r in self._failed]
+                self._reported.update(report)
+            if report and self.on_failure is not None:
+                self.on_failure(report)
+        with self._lock:
+            return bool(self._failed)
 
     @property
     def failed(self) -> List[int]:

@@ -32,6 +32,22 @@ class StragglerMonitor:
         self._hist: Dict[int, Deque[float]] = {r: collections.deque(maxlen=window) for r in ranks}
         self._strikes: Dict[int, int] = {r: 0 for r in ranks}
 
+    def add_rank(self, rank: int) -> None:
+        """Start tracking ``rank`` (elastic remesh path: survivors mapped
+        to new coordinates, or capacity added back). Without this, a rank
+        introduced after construction accumulated no history and could
+        never be flagged — ``record_step`` silently dropped it. Idempotent;
+        re-adding an existing rank keeps its history."""
+        if rank not in self._hist:
+            self._hist[rank] = collections.deque(maxlen=self.window)
+            self._strikes[rank] = 0
+
+    def drop_rank(self, rank: int) -> None:
+        """Stop tracking ``rank`` (evicted or dead): its history must not
+        skew the fleet median the survivors are judged against."""
+        self._hist.pop(rank, None)
+        self._strikes.pop(rank, None)
+
     def record_step(self, durations: Dict[int, float]) -> None:
         for r, d in durations.items():
             if r in self._hist:

@@ -16,6 +16,7 @@ Run: PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --steps 20
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 from functools import partial
 from typing import Optional
@@ -129,9 +130,17 @@ class Trainer:
         data_cfg: DataConfig,
         ckpt_dir: Optional[str] = None,
         ckpt_every: int = 50,
+        ckpt_keep: int = 3,
         seed: int = 0,
         autotune: bool = True,
         autotune_policy: Optional[AutotunePolicy] = None,
+        mesh_shape=(2, 16, 16),
+        mesh_axes=("pod", "data", "model"),
+        ranks=(0,),
+        hb_timeout: float = 3600.0,
+        hb_clock=None,
+        hb_tick: float = 0.0,
+        fault_injector=None,
     ):
         self.cfg, self.opt_cfg, self.data_cfg = cfg, opt_cfg, data_cfg
         self.engine = ProgressEngine()
@@ -150,15 +159,44 @@ class Trainer:
         self.data_stream = stream_create(name="data")
         self.pipeline = SyntheticPipeline(cfg, data_cfg, self.engine, self.data_stream)
         self.ckpt = (
-            CheckpointManager(ckpt_dir, self.engine, self.ckpt_stream) if ckpt_dir else None
+            CheckpointManager(ckpt_dir, self.engine, self.ckpt_stream, keep=ckpt_keep)
+            if ckpt_dir
+            else None
         )
         self.ckpt_every = ckpt_every
         self.params = api.init_params(cfg, jax.random.key(seed))
         self.opt_state = adamw_init(opt_cfg, self.params)
         self.step_fn = jax.jit(make_train_step(cfg, opt_cfg))
         self.start_step = 0
-        self.straggler = StragglerMonitor(ranks=[0])
-        self.heartbeat = HeartbeatMonitor(ranks=[0], timeout=3600.0, engine=self.engine)
+        # elastic state: the mesh the run believes in, the monitored rank
+        # set, and the detect → replan → reshard → resume machinery. The
+        # heartbeat's on_failure fires on the detector's polling thread,
+        # so it only *notes* the failure; the training loop consumes the
+        # note at the next step boundary (recover() rebuilds state there,
+        # where the params/opt live).
+        self.mesh_shape = tuple(mesh_shape)
+        self.mesh_axes = tuple(mesh_axes)
+        self.mesh_plan = None
+        self.ranks = list(ranks)
+        self.fault_injector = fault_injector
+        self._failure_lock = threading.Lock()
+        self._pending_failures: list = []
+        self.recoveries: list = []
+        self.straggler = StragglerMonitor(ranks=self.ranks)
+        # hb_clock + hb_tick: a virtual clock the loop advances by hb_tick
+        # per step makes detection latency a deterministic step count
+        # (timeout / tick steps after the last heartbeat) instead of a
+        # wall-time race — fault-injection tests never sleep real timeouts
+        self.hb_clock = hb_clock
+        self.hb_tick = hb_tick
+        hb_kwargs = {} if hb_clock is None else {"clock": hb_clock}
+        self.heartbeat = HeartbeatMonitor(
+            ranks=self.ranks,
+            timeout=hb_timeout,
+            engine=self.engine,
+            on_failure=self._note_failure,
+            **hb_kwargs,
+        )
         self.history = []
         self.last_progress_stats: Optional[dict] = None
 
@@ -189,6 +227,114 @@ class Trainer:
         self.maybe_restore()
         return plan
 
+    def _note_failure(self, failed_ranks) -> None:
+        """HeartbeatMonitor.on_failure target — runs on whichever thread
+        drove the detector poll, so it must not touch params/jit state;
+        the training loop picks the note up at its next step boundary."""
+        with self._failure_lock:
+            self._pending_failures.extend(failed_ranks)
+
+    def pending_failures(self) -> list:
+        with self._failure_lock:
+            return list(self._pending_failures)
+
+    def _take_failures(self) -> list:
+        with self._failure_lock:
+            out, self._pending_failures = self._pending_failures, []
+        return sorted(set(out))
+
+    def recover(self, failed_ranks, reshard_depth: int = 4) -> "object":
+        """The end-to-end elastic path: drop the dead ranks from the
+        monitors, plan the shrunken mesh, stream the latest checkpoint's
+        largest leaf through a depth-bounded reshard window onto the new
+        data-parallel grid, and reload live state from the same files.
+        Returns the MeshPlan; the reshard bytes + window stats land in
+        ``self.recoveries[-1]`` for the invariant checks (byte-equality
+        vs a clean restart)."""
+        from repro.ft.elastic import plan_remesh
+
+        failed_ranks = sorted(set(failed_ranks))
+        plan = plan_remesh(self.mesh_shape, self.mesh_axes, n_failed=len(failed_ranks))
+        print(
+            f"[trainer] failure of ranks {failed_ranks}: re-mesh "
+            f"{self.mesh_shape} -> {plan.shape} {plan.dropped}"
+        )
+        for r in failed_ranks:
+            self.straggler.drop_rank(r)
+            self.heartbeat.remove_rank(r)
+            if r in self.ranks:
+                self.ranks.remove(r)
+        # survivors keep fresh straggler slates on the new mesh (a rank
+        # with pre-failure history must not carry stale medians into the
+        # resharded epoch's different per-step work)
+        for r in self.ranks:
+            self.straggler.add_rank(r)
+        shards, win_stats = None, None
+        if self.ckpt is not None:
+            # saves are async: settle them so "latest available step" is a
+            # deterministic fact of the run, not of save-thread timing
+            self.ckpt.wait_for_pending()
+        ckpt_step = None
+        if self.ckpt is not None and self.ckpt.available_steps():
+            ckpt_step = self.ckpt.available_steps()[-1]
+            ckpt_dir = self.ckpt._dir_for(ckpt_step)
+            shards, win_stats = self._reshard_checkpoint(
+                ckpt_dir, plan, depth=reshard_depth
+            )
+            self.maybe_restore()
+        self.mesh_shape = plan.shape
+        self.mesh_plan = plan
+        self.recoveries.append(
+            {
+                "failed": failed_ranks,
+                "plan": plan,
+                "ckpt_step": ckpt_step,
+                "shards": shards,
+                "reshard_stats": win_stats,
+            }
+        )
+        return plan
+
+    def _reshard_checkpoint(self, ckpt_dir: str, plan, depth: int = 4):
+        """Windowed reshard of the checkpoint's largest leaf against the
+        new mesh's DP degree: the iovec store addresses the GLOBAL array,
+        so the new shards are just different coalesced subarray reads
+        over the same .bin files."""
+        import json
+        import os
+
+        from repro.checkpoint.iovec_store import manifest_path
+        from repro.ft.elastic import execute_reshard, reshard_plan
+
+        with open(manifest_path(ckpt_dir)) as f:
+            manifest = json.load(f)
+        name, meta = max(
+            manifest["leaves"].items(),
+            key=lambda kv: int(np.prod(kv[1]["shape"] or [1])),
+        )
+        shape = tuple(meta["shape"]) or (1,)
+        itemsize = np.dtype(meta["dtype"] if meta["dtype"] != "bfloat16" else "uint16").itemsize
+        # DP degree on the new mesh, clipped to the largest divisor of the
+        # leaf's leading dim (a grid must block-partition the array)
+        dp = 1
+        for ax in ("pod", "data"):
+            if ax in plan.axis_names:
+                dp *= plan.shape[plan.axis_names.index(ax)]
+        g = max(d for d in range(1, min(dp, shape[0]) + 1) if shape[0] % d == 0)
+        grid = (g,) + (1,) * (len(shape) - 1)
+        plans = reshard_plan(shape, grid, itemsize)
+        path = os.path.join(ckpt_dir, meta["file"])
+
+        def read_run(iov):
+            with open(path, "rb") as fh:
+                fh.seek(iov.offset)
+                return fh.read(iov.length)
+
+        shards, stats = execute_reshard(
+            plans, read_run, depth=depth, engine=self.engine, stream=self.ckpt_stream
+        )
+        return {"leaf": name, "grid": grid, "shards": shards}, stats
+
     def run(self, steps: int, log_every: int = 10):
         # background progress only where async work is actually in flight —
         # the paper's control knob (ext. 6), now driven by stats(): the
@@ -207,6 +353,13 @@ class Trainer:
         try:
             self.pipeline.prefetch(self.start_step)
             for step in range(self.start_step, self.start_step + steps):
+                # detect → replan → reshard → resume: a failure the
+                # heartbeat detector noted since the last step boundary is
+                # recovered HERE, then the loop keeps stepping on the
+                # shrunken mesh (history stays continuous)
+                failed = self._take_failures()
+                if failed:
+                    self.recover(failed)
                 t0 = time.perf_counter()
                 self.pipeline.prefetch(step + 1)
                 batch = {
@@ -221,8 +374,23 @@ class Trainer:
                 )
                 loss = float(metrics["loss"])
                 dt_step = time.perf_counter() - t0
-                self.straggler.record_step({0: dt_step})
-                self.heartbeat.record(0)
+                durations = {}
+                for r in list(self.ranks):
+                    d = dt_step
+                    if self.fault_injector is not None:
+                        # straggle faults report extra step seconds — the
+                        # monitor sees the slowdown without anyone sleeping
+                        d += self.fault_injector.stage_delay(r)
+                    durations[r] = d
+                self.straggler.record_step(durations)
+                for r in list(self.ranks):
+                    self.heartbeat.record(r)
+                if self.hb_clock is not None and self.hb_tick > 0:
+                    self.hb_clock.advance(self.hb_tick)
+                # one synchronous detector visit per step: a rank whose
+                # heartbeats stopped (dead, or suppressed by injection) is
+                # noted here and recovered at the next step boundary
+                self.heartbeat.check()
                 self.history.append(loss)
                 if step % log_every == 0:
                     print(f"[trainer] step {step} loss {loss:.4f} ({dt_step*1e3:.0f} ms)")

@@ -316,6 +316,147 @@ class ServeEngine:
         if errors:
             raise errors[0]
 
+    # -- elastic threadcomm loop (fault-injected rank death survivable) ------
+    def run_until_done_elastic(
+        self,
+        n_threads: int = 2,
+        fault_injector=None,
+        max_steps: int = 10_000,
+        sync_timeout: float = 300.0,
+    ) -> dict:
+        """:meth:`run_until_done_threaded` that survives rank death.
+
+        A killed worker (``ft.faultinject`` arming a ``kill_rank`` event:
+        its mailbox ops raise :class:`~repro.ft.faultinject.RankKilled`)
+        trips the SAME abort protocol PR 4 built — the epoch closes
+        cleanly, every channel returns to the pool — but instead of
+        re-raising, the dead rank is dropped and the loop re-opens a
+        fresh epoch over the survivors, whose ``i % n`` shard map now
+        covers the dead rank's slots.
+
+        No token is lost and none is duplicated across the abort: all
+        decode state lives in the engine (``pos``/``cur_tok``/``cache``/
+        ``out_tokens``), not in the threads, and the interrupted step is
+        repaired transactionally — rank 0 snapshots ``pos`` before each
+        bcast, so after the epoch tears down it can tell exactly which
+        active slots the dying epoch advanced (``pos`` moved) and
+        advances only the ones it didn't. Returns a summary dict
+        (``epochs``, ``dead_ranks``).
+        """
+        from repro.ft.faultinject import RankKilled
+
+        if n_threads < 1:
+            raise ValueError("run_until_done_elastic needs n_threads >= 1")
+        live = list(range(n_threads))
+        dead: List[int] = []
+        epochs = 0
+        while True:
+            epochs += 1
+            killed = self._run_elastic_epoch(live, fault_injector, max_steps, sync_timeout)
+            if killed is None:
+                return {"epochs": epochs, "dead_ranks": dead}
+            dead.append(killed)
+            live = [r for r in live if r != killed]
+            if not live:
+                raise RankKilled(killed)
+
+    def _run_elastic_epoch(
+        self, live: List[int], fault_injector, max_steps: int, sync_timeout: float
+    ) -> Optional[int]:
+        """One threadcomm epoch over ``live`` (global) ranks. Returns the
+        global rank the injector killed (the epoch aborted), or None (all
+        requests drained). Any non-kill error re-raises."""
+        from repro.core.threadcomm import HostThreadComm
+        from repro.ft.faultinject import RankKilled
+
+        n = len(live)
+        hook = None
+        if fault_injector is not None:
+            # comm ranks renumber every epoch; the injector targets GLOBAL
+            # ranks, so translate before checking
+            def hook(site, rank=None, dst=None):
+                fault_injector.check(
+                    site,
+                    rank=None if rank is None else live[rank],
+                    dst=None if dst is None else live[dst],
+                )
+
+        comm = HostThreadComm(n, engine=self.progress_engine, fault_hook=hook, name="serve-tc-el")
+        comm.start()
+        errors: List[BaseException] = []
+        # transactional step repair state: (active, next_tok, pos_before)
+        inflight: List = [None]
+
+        def worker(rank: int) -> None:
+            h = comm.attach(rank=rank)
+            try:
+                for _ in range(max_steps):
+                    if rank == 0:
+                        try:
+                            if not self.queue and all(r is None for r in self.slot_req):
+                                payload = None
+                            else:
+                                self._admit()
+                                active, next_tok = self._decode_active()
+                                inflight[0] = (active, next_tok, self.pos.copy())
+                                payload = ("step", (active, next_tok))
+                        except BaseException as e:
+                            errors.append(e)
+                            payload = ("abort",)
+                        payload = h.bcast(payload, root=0, timeout=sync_timeout)
+                    else:
+                        payload = h.bcast(root=0, timeout=sync_timeout)
+                    if payload is None or payload[0] == "abort":
+                        return
+                    failed = 0
+                    try:
+                        active, next_tok = payload[1]
+                        for i in active:
+                            if i % n == rank:
+                                self._advance_slot(i, int(next_tok[i]))
+                    except BaseException as e:
+                        errors.append(e)
+                        failed = 1
+                    if int(h.allreduce(failed, op="max", timeout=sync_timeout)):
+                        return
+                    if rank == 0:
+                        inflight[0] = None  # step fully applied everywhere
+            except BaseException as e:
+                errors.append(e)
+            finally:
+                h.detach()
+
+        threads = [
+            threading.Thread(target=worker, args=(r,), daemon=True, name=f"serve-el-{r}")
+            for r in range(1, n)
+        ]
+        try:
+            for t in threads:
+                t.start()
+            worker(0)
+        finally:
+            for t in threads:
+                t.join(timeout=sync_timeout)
+            comm.finish(timeout=30.0, drain=True)
+
+        kills = [e for e in errors if isinstance(e, RankKilled)]
+        others = [e for e in errors if not isinstance(e, (RankKilled, TimeoutError))]
+        if others:
+            raise others[0]
+        if not kills:
+            if errors:  # timeouts without a kill: a real stall, surface it
+                raise errors[0]
+            return None
+        # repair the interrupted step: advance exactly the active slots the
+        # dying epoch did NOT get to (their pos never moved). Workers have
+        # joined — no one else touches pos now.
+        if inflight[0] is not None:
+            active, next_tok, pos_before = inflight[0]
+            for i in active:
+                if self.slot_req[i] is not None and self.pos[i] == pos_before[i]:
+                    self._advance_slot(i, int(next_tok[i]))
+        return kills[0].rank
+
 
 def _splice(full, one, slot: int):
     """Insert a B=1 cache row into the batch cache at ``slot``. Caches are

@@ -16,6 +16,17 @@ import types
 
 import pytest
 
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--faults",
+        action="store_true",
+        default=False,
+        help="also run the fault-injected variant of the progress stress "
+        "soak (FaultPlan chaos layered onto the concurrency matrix)",
+    )
+
+
 try:
     import hypothesis  # noqa: F401  (real library present: nothing to do)
 except ImportError:

@@ -220,3 +220,123 @@ def test_straggler_rebalance_shares_inverse_speed():
     shares = mon.rebalance_shares(16)
     assert shares[0] > shares[1]
     assert sum(shares.values()) == 16
+
+
+# ------------------------------------------------- reshard failure paths
+
+
+def _reshard_engine():
+    from repro.core.streams import StreamPool
+
+    eng = ProgressEngine()
+    pool = StreamPool()
+    return eng, pool.create(name="reshard-fail")
+
+
+def test_execute_reshard_midwindow_error_drains_and_surfaces(tmp_path):
+    """A read_run that raises mid-stream: execute_reshard must still
+    drain the window (no slot leaks, no live requests) and surface the
+    ORIGINAL error, not a secondary timeout/assertion."""
+    from repro.ft.elastic import execute_reshard
+
+    eng, stream = _reshard_engine()
+    plans = reshard_plan((16, 8), (4, 1), itemsize=4)
+    n_runs = sum(len(v) for v in plans.values())
+    assert n_runs >= 4  # the failure must land with reads still in flight
+    boom = ValueError("disk sector went dark")
+    calls = {"n": 0}
+
+    def read_run(iov):
+        calls["n"] += 1
+        if calls["n"] == 2:  # second read fails while others are in flight
+            raise boom
+        return b"\0" * iov.length
+
+    with pytest.raises(ValueError, match="sector went dark") as ei:
+        execute_reshard(plans, read_run, depth=2, engine=eng, stream=stream)
+    assert ei.value is boom  # original exception object, not a wrapper
+    # every issued request retired: nothing in flight, nothing pending
+    eng.progress()
+    assert eng.pending() == 0, "reshard failure leaked live requests"
+    st = eng.stats()
+    assert st["enqueued"] == st["completions"]
+
+
+def test_execute_reshard_first_read_error_still_drains(tmp_path):
+    """Failure on the very first read (window barely populated)."""
+    from repro.ft.elastic import execute_reshard
+
+    eng, stream = _reshard_engine()
+    plans = reshard_plan((8, 4), (2, 1), itemsize=4)
+
+    def read_run(iov):
+        raise OSError("pread: EIO")
+
+    with pytest.raises(OSError, match="EIO"):
+        execute_reshard(plans, read_run, depth=3, engine=eng, stream=stream)
+    eng.progress()
+    assert eng.pending() == 0
+
+
+def test_execute_reshard_all_reads_fail_reports_first(tmp_path):
+    from repro.ft.elastic import execute_reshard
+
+    eng, stream = _reshard_engine()
+    plans = reshard_plan((8, 4), (4, 1), itemsize=4)
+    seen = []
+
+    def read_run(iov):
+        e = RuntimeError(f"fail@{iov.offset}")
+        seen.append(e)
+        raise e
+
+    with pytest.raises(RuntimeError) as ei:
+        execute_reshard(plans, read_run, depth=2, engine=eng, stream=stream)
+    assert ei.value in seen  # one of the real failures, not a synthetic
+    eng.progress()
+    assert eng.pending() == 0
+
+
+def test_trainer_reshard_checkpoint_error_path(tmp_path):
+    """Trainer._reshard_checkpoint against a checkpoint whose .bin was
+    truncated: the windowed reads return short, the reshard completes
+    (reads are seek+read, not validated sizes) — but a MISSING bin must
+    raise cleanly without leaking window slots."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig
+    from repro.ft.elastic import plan_remesh
+    from repro.launch.train import Trainer
+    from repro.optim.adamw import AdamWConfig
+
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    tr = Trainer(
+        cfg,
+        AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=2),
+        DataConfig(batch=2, seq=16, seed=0),
+        ckpt_dir=str(tmp_path / "ck"),
+        ckpt_every=5,  # only the final save fires (step 1 would double-save)
+        autotune=False,
+    )
+    tr.run(2)
+    step = tr.ckpt.available_steps()[-1]
+    d = tr.ckpt._dir_for(step)
+    plan = plan_remesh((2, 2, 2), ("pod", "data", "model"), n_failed=1)
+    # healthy path first: byte totals conserve
+    got, stats = tr._reshard_checkpoint(d, plan)
+    import json
+
+    with open(os.path.join(d, "manifest.json")) as f:
+        leaf = json.load(f)["leaves"][got["leaf"]]
+    nbytes = os.path.getsize(os.path.join(d, leaf["file"]))
+    assert sum(len(b) for b in got["shards"].values()) == nbytes
+    assert stats["admitted"] == stats["reaped"]
+    # failure path: delete the bin under the manifest's feet
+    os.remove(os.path.join(d, leaf["file"]))
+    with pytest.raises(FileNotFoundError):
+        tr._reshard_checkpoint(d, plan)
+    tr.heartbeat.stop()  # the detector request is the trainer's, not a leak
+    tr.engine.progress()
+    assert tr.engine.pending() == 0, "failed reshard leaked live requests"
+    tr.engine.stop_all()

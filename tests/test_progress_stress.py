@@ -340,3 +340,81 @@ def test_progress_soak(cfg_name, seed):
             f"sanitizer findings (cfg={cfg_name} seed={seed}): {rep['findings']}"
         )
         assert rep["counts"]["live_requests"] == 0, rep["counts"]
+
+
+# ----------------------------------------------------------------------
+# fault-injected soak (opt-in: pytest --faults)
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.timeout(180)
+@pytest.mark.parametrize("seed", range(5))
+def test_progress_soak_with_faults(request, seed):
+    """The sanitized soak with a seeded FaultPlan layered on: stall/delay
+    faults jitter ``notify_channel`` and ``window.reserve`` (widening the
+    park/notify race windows), and injector-owned stall requests churn
+    the queue — some completed by virtual-clock advance, the rest
+    cancelled at uninstall. All four soak invariants must still hold.
+    Opt-in via ``pytest --faults`` (ci.sh's fault step passes it)."""
+    if not request.config.getoption("--faults"):
+        pytest.skip("pass --faults to run the fault-injected soak")
+    from repro.ft.faultinject import FaultInjector, FaultPlan, VirtualClock
+
+    engine = pg.ProgressEngine(sanitize=True)
+    pool = ss.StreamPool()
+    streams = [pool.create(name=f"fsoak-{i}") for i in range(3)]
+    win_stream = pool.create(name="fsoak-win")
+    window = OffloadWindow(win_stream, depth=2, engine=engine)
+    clock = VirtualClock()
+    # rank -1 events match the engine/window seams (any-rank); horizon 0
+    # arms everything immediately, durations stay tiny for soak speed
+    plan = FaultPlan.random(
+        seed, ranks=[-1], n_events=4, horizon=0.0,
+        kinds=("stall_rank", "delay_rank"), max_duration=0.002,
+    )
+    completer = _Completer(engine, seed)
+    completer.start()
+    errors: list = []
+    with FaultInjector(plan, clock=clock) as inject:
+        inject.attach_engine(engine)
+        inject.attach_window(window)
+        # injector-owned churn: half complete via the clock, half are
+        # still live at uninstall and must be cancelled, not leaked
+        for i in range(6):
+            inject.stall_request(
+                engine, streams[i % 3], until=1.0 if i % 2 else 1e9,
+                name=f"fsoak-stall-{i}",
+            )
+        workers = [
+            threading.Thread(
+                target=_worker,
+                args=(engine, streams, window, completer, seed, tid, 10, errors),
+                daemon=True,
+                name=f"fsoak-w{tid}",
+            )
+            for tid in range(4)
+        ]
+        for w in workers:
+            w.start()
+        clock.advance(2.0)  # completes the even stall requests mid-churn
+        engine.progress()
+        for w in workers:
+            w.join(timeout=_JOIN_TIMEOUT)
+        hung = [w.name for w in workers if w.is_alive()]
+        assert not hung, f"deadlocked workers (faults seed={seed}): {hung}"
+        completer.stop_evt.set()
+        completer.join(timeout=10.0)
+        assert not completer.is_alive(), "completer hung with undrained queue"
+        assert not errors, f"(faults seed={seed}) {errors[0]}"
+        window.drain(timeout=_OP_TIMEOUT)
+    # context exit uninstalled the seams and cancelled the odd stalls
+    wst = window.stats(engine=False)
+    assert wst["admitted"] == wst["reaped"], wst
+    engine.stop_all()
+    engine.progress()
+    st = engine.stats()
+    assert st["enqueued"] == st["completions"] + engine.pending(), st
+    assert engine.pending() == 0, "requests left pending at quiescence"
+    rep = engine.sanitizer_report()
+    assert rep["findings"] == [], f"(faults seed={seed}) {rep['findings']}"
+    assert rep["counts"]["live_requests"] == 0, rep["counts"]

@@ -1,0 +1,166 @@
+"""Straggler escalation policy: table-driven strikes, share conservation,
+threshold boundaries.
+
+The policy contract the launcher consumes: a rank whose windowed median
+exceeds ``threshold ×`` the fleet median gets graded advice — 'rebalance'
+(shrink its microbatch share) for the first ``evict_after - 1``
+consecutive flags, 'evict' (hand to the elastic re-mesh path) from then
+on; one healthy check resets the strike count. ``rebalance_shares`` must
+conserve the microbatch total exactly under inverse-speed weighting.
+"""
+
+import pytest
+
+from repro.ft.straggler import Advice, StragglerMonitor
+
+
+def _feed(mon, slow_rank, slow, n_steps=1, fast=1.0):
+    for _ in range(n_steps):
+        mon.record_step({r: (slow if r == slow_rank else fast) for r in mon._hist})
+
+
+# ----------------------------------------------------------------------
+# strike escalation (table-driven)
+# ----------------------------------------------------------------------
+
+# (evict_after, n_flagged_checks) -> expected action sequence
+ESCALATIONS = [
+    (1, 3, ["evict", "evict", "evict"]),  # evict_after=1: no grace period
+    (2, 3, ["rebalance", "evict", "evict"]),
+    (3, 4, ["rebalance", "rebalance", "evict", "evict"]),
+    (5, 5, ["rebalance"] * 4 + ["evict"]),
+]
+
+
+@pytest.mark.parametrize("evict_after,n_checks,expect", ESCALATIONS)
+def test_strike_escalation_table(evict_after, n_checks, expect):
+    mon = StragglerMonitor(ranks=[0, 1, 2], window=4, threshold=1.5, evict_after=evict_after)
+    got = []
+    for _ in range(n_checks):
+        _feed(mon, slow_rank=2, slow=4.0)
+        advice = mon.check()
+        assert [a.rank for a in advice] == [2]
+        got.append(advice[0].action)
+    assert got == expect
+
+
+def test_healthy_check_resets_strikes():
+    mon = StragglerMonitor(ranks=[0, 1, 2], window=2, threshold=1.5, evict_after=3)
+    # two strikes: one short of eviction
+    for _ in range(2):
+        _feed(mon, slow_rank=2, slow=4.0, n_steps=2)
+        assert mon.check()[0].action == "rebalance"
+    # recovery: the rank speeds up, window flushes, check is clean
+    _feed(mon, slow_rank=2, slow=1.0, n_steps=2)
+    assert mon.check() == []
+    assert mon._strikes[2] == 0
+    # a relapse starts the escalation over — no memory of old strikes
+    for _ in range(2):
+        _feed(mon, slow_rank=2, slow=4.0, n_steps=2)
+        assert mon.check()[0].action == "rebalance"
+
+
+def test_two_stragglers_escalate_independently():
+    mon = StragglerMonitor(ranks=[0, 1, 2, 3], window=2, threshold=1.5, evict_after=2)
+    for r in (0, 1):
+        mon.record_step({0: 1.0, 1: 1.0, 2: 1.0, 3: 1.0})
+    # rank 3 straggles first; rank 2 joins one check later
+    mon.record_step({0: 1.0, 1: 1.0, 2: 1.0, 3: 9.0})
+    mon.record_step({0: 1.0, 1: 1.0, 2: 1.0, 3: 9.0})
+    assert {(a.rank, a.action) for a in mon.check()} == {(3, "rebalance")}
+    mon.record_step({0: 1.0, 1: 1.0, 2: 9.0, 3: 9.0})
+    mon.record_step({0: 1.0, 1: 1.0, 2: 9.0, 3: 9.0})
+    advice = {(a.rank, a.action) for a in mon.check()}
+    # rank 3 is on strike 2 (evict); rank 2 on strike 1 (rebalance)
+    assert advice == {(3, "evict"), (2, "rebalance")}
+
+
+# ----------------------------------------------------------------------
+# threshold boundaries
+# ----------------------------------------------------------------------
+
+
+def test_threshold_is_strict():
+    """slowdown == threshold exactly must NOT flag (strictly greater)."""
+    mon = StragglerMonitor(ranks=[0, 1, 2], window=1, threshold=1.5)
+    mon.record_step({0: 1.0, 1: 1.0, 2: 1.5})  # exactly 1.5x the fleet median
+    assert mon.check() == []
+    mon.record_step({0: 1.0, 1: 1.0, 2: 1.5 + 1e-9})
+    advice = mon.check()
+    assert [a.rank for a in advice] == [2]
+    assert advice[0].slowdown == pytest.approx(1.5)
+
+
+def test_no_advice_with_fewer_than_two_ranks():
+    mon = StragglerMonitor(ranks=[0], window=1, threshold=1.5)
+    mon.record_step({0: 100.0})
+    assert mon.check() == []  # no fleet to be slower than
+
+
+def test_advice_carries_slowdown_factor():
+    mon = StragglerMonitor(ranks=[0, 1, 2], window=1, threshold=1.5)
+    mon.record_step({0: 1.0, 1: 1.0, 2: 3.0})
+    (a,) = mon.check()
+    assert isinstance(a, Advice)
+    assert a.slowdown == pytest.approx(3.0)
+
+
+# ----------------------------------------------------------------------
+# rebalance_shares conservation
+# ----------------------------------------------------------------------
+
+SHARE_CASES = [
+    ({0: 1.0, 1: 1.0, 2: 1.0}, 12),     # uniform fleet
+    ({0: 1.0, 1: 2.0, 2: 4.0}, 14),     # geometric slowdown
+    ({0: 1.0, 1: 1.0, 2: 10.0}, 7),     # one deep straggler, odd total
+    ({0: 0.5, 1: 3.0}, 5),              # two ranks, drift-prone rounding
+    ({0: 1.0, 1: 1.0, 2: 1.0, 3: 9.0}, 4),  # total == nranks: min-share floor
+]
+
+
+@pytest.mark.parametrize("meds,total", SHARE_CASES)
+def test_rebalance_shares_conserve_total(meds, total):
+    mon = StragglerMonitor(ranks=list(meds), window=1)
+    mon.record_step(meds)
+    shares = mon.rebalance_shares(total)
+    assert set(shares) == set(meds)
+    assert sum(shares.values()) == total, shares  # conservation, exactly
+    assert all(s >= 1 for s in shares.values()), shares
+    # inverse-speed ordering: a strictly faster rank never gets fewer
+    ranks = sorted(meds, key=lambda r: meds[r])
+    for a, b in zip(ranks, ranks[1:]):
+        if meds[a] < meds[b]:
+            assert shares[a] >= shares[b], (shares, meds)
+
+
+def test_rebalance_shares_empty_monitor():
+    mon = StragglerMonitor(ranks=[], window=1)
+    assert mon.rebalance_shares(8) == {}
+
+
+# ----------------------------------------------------------------------
+# elastic integration: remesh membership changes
+# ----------------------------------------------------------------------
+
+
+def test_dropped_rank_leaves_fleet_median():
+    mon = StragglerMonitor(ranks=[0, 1, 2], window=1, threshold=1.5)
+    mon.record_step({0: 1.0, 1: 1.0, 2: 8.0})
+    assert [a.rank for a in mon.check()] == [2]
+    mon.drop_rank(2)  # evicted → its 8.0 median must stop skewing the fleet
+    mon.record_step({0: 1.0, 1: 1.1})
+    assert mon.check() == []
+    assert set(mon.medians()) == {0, 1}
+
+
+def test_added_rank_starts_clean_and_is_flaggable():
+    mon = StragglerMonitor(ranks=[0, 1], window=2, threshold=1.5, evict_after=2)
+    mon.record_step({0: 1.0, 1: 1.0})
+    mon.add_rank(7)  # capacity added back post-remesh
+    assert mon._strikes[7] == 0
+    mon.record_step({0: 1.0, 1: 1.0, 7: 5.0})
+    mon.record_step({0: 1.0, 1: 1.0, 7: 5.0})
+    advice = mon.check()
+    assert [(a.rank, a.action) for a in advice] == [(7, "rebalance")]
+    mon.record_step({0: 1.0, 1: 1.0, 7: 5.0})
+    assert [(a.rank, a.action) for a in mon.check()] == [(7, "evict")]
