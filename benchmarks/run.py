@@ -7,7 +7,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * threadcomm_latency— paper Fig. 7 (threadcomm vs MPI-everywhere) +
                         multi-pod all-reduce byte model
   * threadcomm_rate   — host-thread ranks: per-thread VCI vs shared
-                        channel message rate + collective latency; also
+                        channel message rate + collective latency + the
+                        bandwidth axis (Rabenseifner ``allreduce_large``
+                        vs binomial over a calibrated link, 64 KB→16 MB)
+                        and the grad-overlap exposed-comm bar; also
                         writes ``BENCH_threadcomm.json``
   * progress_overlap  — paper §General Progress RMA example
   * progress_autotune — per-channel wait queues vs stripe CVs (wakeups

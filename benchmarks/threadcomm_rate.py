@@ -22,12 +22,33 @@ Real ``threading.Thread`` ranks exchange messages through a
     noise on small hosts); medians over repeats are recorded.
 (b) collective latency: dissemination barrier + tree allreduce medians
     vs thread count 1/2/4/8 (default spin-then-park engine).
+(c) bandwidth axis (bytes/s vs array size, 64 KB → 16 MB at 8 ranks):
+    Rabenseifner ``allreduce_large`` (ring reduce-scatter ∘ allgather)
+    vs the binomial reduce→bcast trees. On this time-shared host a
+    mailbox hop is a pointer swap, so — exactly like
+    ``enqueue_window.py``'s simulated DMA — each hop is charged its
+    wire time against a calibrated link (``_LinkRank`` sleeps
+    ``payload_bytes / LINK_BPS`` before the send, GIL-free, so
+    concurrent hops overlap the way real NICs do). Algorithmic traffic
+    differences then surface as wall clock: ring moves ``2(n-1)/n·B``
+    per rank in parallel rounds while each binomial tree serializes
+    ``log2(n)`` full-message hops on its critical path.
+(d) grad-overlap exposed-comm bar: ``n_buckets`` gradient buckets, each
+    costing ``compute_ms`` of backward and ``bucket_bytes`` on a serial
+    calibrated link. Baseline runs the whole backward then all bucket
+    allreduces (comm fully exposed); the overlapped run issues each
+    bucket's transfer through an ``OffloadWindow`` as its grads
+    materialize and reaps in completion order — the
+    ``optim.grad_overlap`` windowed schedule — hiding wire time behind
+    the remaining backward.
 
-Acceptance invariant (asserted, like ``enqueue_window.py`` asserts
+Acceptance invariants (asserted, like ``enqueue_window.py`` asserts
 depth-2 > depth-1): at the widest thread count, the per-thread-VCI
-message rate beats the single-shared-channel baseline. Results →
-``BENCH_threadcomm.json`` (``BENCH_threadcomm.smoke.json`` under
-``--smoke``).
+message rate beats the single-shared-channel baseline; at every payload
+≥ 4 MB the Rabenseifner schedule reaches ≥ 2× the binomial allreduce
+bandwidth; the overlapped grad run exposes strictly less comm time than
+the baseline. Results → ``BENCH_threadcomm.json``
+(``BENCH_threadcomm.smoke.json`` under ``--smoke``).
 """
 
 from __future__ import annotations
@@ -40,6 +61,8 @@ import time
 
 import numpy as np
 
+from repro.core import threadcoll
+from repro.core.enqueue import OffloadWindow
 from repro.core.progress import ProgressEngine
 from repro.core.streams import StreamPool
 from repro.core.threadcomm import HostThreadComm
@@ -48,6 +71,18 @@ PAIR_COUNTS = (1, 2, 4, 8)
 COLL_SIZES = (1, 2, 4, 8)
 N_IDLE = 8  # parked bystander ranks (the notify-herd victims)
 _RELEASE_TAG = ("release", 9)
+
+# calibrated software link for the bandwidth axis: every ndarray hop is
+# charged payload/LINK_BPS of wire time (see docstring section (c)).
+# Slow enough that wire time dominates the host's park/wake overhead
+# (~30ms per 10-round ring on this 1-core container), so the measured
+# ratio reflects the algorithms' traffic, not the scheduler.
+LINK_BPS = 64 * 1024 * 1024
+BW_THREADS = 8
+BW_SIZES = tuple(1024 * k for k in (64, 256, 1024, 4096, 16384))
+BW_SIZES_SMOKE = tuple(1024 * k for k in (64, 1024, 4096))
+BW_ASSERT_BYTES = 4 * 1024 * 1024  # ≥ this size must show the 2× win
+BW_TARGET = 2.0
 
 
 def bench_msg_rate(n_pairs: int, n_msgs: int, nbytes: int, shared: bool):
@@ -169,12 +204,210 @@ def bench_collectives(n_threads: int, reps: int):
     return statistics.median(bar_times) * 1e6, statistics.median(ar_times) * 1e6
 
 
+# ----------------------------------------------------------------------
+# (c) bandwidth axis: Rabenseifner vs binomial over a calibrated link
+# ----------------------------------------------------------------------
+
+
+def _payload_nbytes(obj) -> int:
+    """Total ndarray bytes inside a message payload (the recursive-
+    doubling allgather ships a dict of chunks, so containers count)."""
+    if isinstance(obj, np.ndarray):
+        return obj.nbytes
+    if isinstance(obj, dict):
+        return sum(_payload_nbytes(v) for v in obj.values())
+    if isinstance(obj, (list, tuple)):
+        return sum(_payload_nbytes(v) for v in obj)
+    return 0
+
+
+class _LinkRank:
+    """Charge each outbound hop its wire time. Wraps an attached
+    ThreadRank handle; ``send`` sleeps ``payload/LINK_BPS`` (GIL-free)
+    before the zero-copy mailbox append, everything else delegates.
+    Control traffic (barrier Nones, tags) carries no ndarrays → free."""
+
+    def __init__(self, h, bps: float = LINK_BPS):
+        self._h = h
+        self._bps = bps
+
+    def __getattr__(self, name):
+        return getattr(self._h, name)
+
+    def send(self, dst, obj, *args, **kwargs):
+        nb = _payload_nbytes(obj)
+        if nb:
+            time.sleep(nb / self._bps)
+        return self._h.send(dst, obj, *args, **kwargs)
+
+
+def bench_bandwidth(n_threads: int, nbytes: int, reps: int):
+    """Median wall time (max across ranks per rep) of ``allreduce_large``
+    (ring RS ∘ AG) vs the binomial reduce→bcast allreduce on one
+    ``nbytes`` float32 payload per rank over the calibrated link.
+    Returns (rabenseifner_s, binomial_s)."""
+    eng = ProgressEngine()
+    comm = HostThreadComm(n_threads, engine=eng, pool=StreamPool(), name=f"bw-{nbytes}")
+    comm.start()
+    elems = max(1, nbytes // 4)
+    rng = np.random.default_rng(nbytes)
+    values = [rng.standard_normal(elems).astype(np.float32) for _ in range(n_threads)]
+    rab = [[] for _ in range(reps)]
+    bino = [[] for _ in range(reps)]
+    lock = threading.Lock()
+    errors = []
+
+    def worker(r):
+        h = _LinkRank(comm.attach(rank=r))
+        try:
+            threadcoll.barrier(h)
+            for rep in range(reps):
+                threadcoll.barrier(h)
+                t0 = time.perf_counter()
+                big = threadcoll.allreduce_large(h, values[r], timeout=120.0)
+                t1 = time.perf_counter()
+                threadcoll.barrier(h)
+                t2 = time.perf_counter()
+                small = threadcoll.allreduce(
+                    h, values[r], timeout=120.0, large_threshold=1 << 62
+                )
+                t3 = time.perf_counter()
+                with lock:
+                    rab[rep].append(t1 - t0)
+                    bino[rep].append(t3 - t2)
+                if r == 0 and rep == 0:
+                    # both algorithms compute the same reduction (fold
+                    # orders differ, so allclose not array_equal)
+                    np.testing.assert_allclose(big, small, rtol=1e-4, atol=1e-5)
+        except Exception as e:  # surfaced below; never hang the join
+            errors.append(e)
+        finally:
+            h.detach()
+
+    threads = [
+        threading.Thread(target=worker, args=(r,), daemon=True) for r in range(n_threads)
+    ]
+    try:
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=600.0)
+    finally:
+        comm.finish(timeout=10.0)
+        eng.stop_all()
+    if errors:
+        raise errors[0]
+    # a collective completes when its slowest rank does
+    return (
+        statistics.median(max(ts) for ts in rab),
+        statistics.median(max(ts) for ts in bino),
+    )
+
+
+# ----------------------------------------------------------------------
+# (d) grad-overlap exposed-comm bar: windowed issue/reap vs baseline
+# ----------------------------------------------------------------------
+
+
+def _wait_events(states, timeout) -> None:
+    deadline = None if timeout is None else time.monotonic() + timeout
+    for st in states:
+        st["evt"].wait(
+            None if deadline is None else max(0.0, deadline - time.monotonic())
+        )
+
+
+def bench_grad_overlap(n_buckets: int, bucket_bytes: int, compute_s: float):
+    """Exposed comm time of bucketed grad allreduce, baseline vs
+    overlapped. The link is one serial wire thread (transfers queue and
+    each occupies it for ``bucket_bytes/LINK_BPS`` — the bandwidth-bound
+    regime where overlap matters); each transfer is a generalized
+    request, and the overlapped run drives the same depth-2
+    ``OffloadWindow`` issue/reap schedule as
+    ``optim.grad_overlap.bucketed_all_reduce_host(window=...)``."""
+    eng = ProgressEngine()
+    pool = StreamPool()
+    pending = []
+    wire_lock = threading.Lock()
+    wire_cv = threading.Condition(wire_lock)
+    stop = []
+
+    def wire():
+        while True:
+            with wire_cv:
+                while not pending and not stop:
+                    wire_cv.wait(0.5)
+                if stop and not pending:
+                    return
+                nb, evt = pending.pop(0)
+            time.sleep(nb / LINK_BPS)
+            evt.set()  # engine waiters poll the evt; reserve self-progresses
+
+    wire_thread = threading.Thread(target=wire, daemon=True)
+    wire_thread.start()
+
+    def issue_transfer(stream):
+        evt = threading.Event()
+        with wire_cv:
+            pending.append((bucket_bytes, evt))
+            wire_cv.notify()
+        return eng.grequest_start(
+            poll_fn=lambda st: st["evt"].is_set(),
+            wait_fn=_wait_events,
+            extra_state={"evt": evt},
+            stream=stream,
+            name="grad-comm",
+        )
+
+    try:
+        # baseline: the whole backward, then every bucket's allreduce
+        stream = pool.create(name="grad-base")
+        t0 = time.perf_counter()
+        for _ in range(n_buckets):
+            time.sleep(compute_s)
+        compute_done = time.perf_counter()
+        reqs = [issue_transfer(stream) for _ in range(n_buckets)]
+        assert eng.wait_all(reqs, timeout=120.0)
+        exposed_baseline = time.perf_counter() - compute_done
+
+        # overlapped: issue each bucket as its grads materialize
+        win_stream = pool.create(name="grad-win")
+        win = OffloadWindow(win_stream, depth=2, engine=eng, name="grad-win")
+        t0 = time.perf_counter()
+        for i in range(n_buckets):
+            time.sleep(compute_s)  # backward produces bucket i
+            with win.issue(timeout=120.0) as submit:
+                submit(issue_transfer(win_stream), value=i)
+            win.reap()
+        win.drain(timeout=120.0)
+        exposed_overlap = (time.perf_counter() - t0) - n_buckets * compute_s
+    finally:
+        with wire_cv:
+            stop.append(True)
+            wire_cv.notify()
+        wire_thread.join(timeout=30.0)
+        eng.stop_all()
+    return {
+        "n_buckets": n_buckets,
+        "bucket_bytes": bucket_bytes,
+        "compute_ms_per_bucket": compute_s * 1e3,
+        "exposed_comm_ms_baseline": exposed_baseline * 1e3,
+        "exposed_comm_ms_overlap": max(0.0, exposed_overlap) * 1e3,
+        "overlap_ratio": max(0.0, exposed_overlap) / exposed_baseline,
+    }
+
+
 def bench(smoke: bool = False, json_path: str | None = "BENCH_threadcomm.json"):
     rows = []
     n_msgs = 200 if smoke else 400
     nbytes = 4096
     reps = 20 if smoke else 100
     trials = 3 if smoke else 5  # medians: park/wake timing is scheduler-noisy
+    bw_sizes = BW_SIZES_SMOKE if smoke else BW_SIZES
+    bw_reps = 2 if smoke else 3
+    go_buckets, go_bytes, go_compute_s = (
+        (4, 1024 * 1024, 0.006) if smoke else (8, 4 * 1024 * 1024, 0.020)
+    )
 
     data: dict = {
         "smoke": smoke,
@@ -184,9 +417,13 @@ def bench(smoke: bool = False, json_path: str | None = "BENCH_threadcomm.json"):
             "n_idle": N_IDLE,
             "coll_reps": reps,
             "trials": trials,
+            "link_bps": LINK_BPS,
+            "bw_threads": BW_THREADS,
+            "bw_reps": bw_reps,
         },
         "message_rate": {},
         "collectives": {},
+        "bandwidth": {},
     }
     for t in PAIR_COUNTS:
         vci_runs, shared_runs = [], []
@@ -223,6 +460,46 @@ def bench(smoke: bool = False, json_path: str | None = "BENCH_threadcomm.json"):
             (f"threadcomm_coll/{n}threads", bar_us, f"barrier={bar_us:.1f}us allreduce={ar_us:.1f}us")
         )
 
+    for nb in bw_sizes:
+        rab_s, bin_s = bench_bandwidth(BW_THREADS, nb, bw_reps)
+        speedup = bin_s / rab_s
+        data["bandwidth"][str(nb)] = {
+            "rabenseifner_Bps": nb / rab_s,
+            "binomial_Bps": nb / bin_s,
+            "rabenseifner_us": rab_s * 1e6,
+            "binomial_us": bin_s * 1e6,
+            "speedup": speedup,
+        }
+        rows.append(
+            (
+                f"threadcomm_bw/{nb // 1024}KB",
+                rab_s * 1e6,
+                f"rabenseifner={nb / rab_s / 1e6:.1f}MB/s "
+                f"binomial={nb / bin_s / 1e6:.1f}MB/s speedup={speedup:.2f}x",
+            )
+        )
+        # the bandwidth acceptance invariant: at large payloads the ring
+        # RS∘AG schedule must reach ≥2× the binomial trees' bandwidth
+        if nb >= BW_ASSERT_BYTES:
+            assert speedup >= BW_TARGET, (
+                f"allreduce_large at {nb}B only {speedup:.2f}x binomial "
+                f"(target {BW_TARGET}x)"
+            )
+
+    go = bench_grad_overlap(go_buckets, go_bytes, go_compute_s)
+    data["grad_overlap"] = go
+    rows.append(
+        (
+            "threadcomm_grad_overlap",
+            go["exposed_comm_ms_overlap"] * 1e3,
+            f"exposed_comm overlap={go['exposed_comm_ms_overlap']:.1f}ms "
+            f"baseline={go['exposed_comm_ms_baseline']:.1f}ms "
+            f"ratio={go['overlap_ratio']:.2f}",
+        )
+    )
+    # overlap must actually hide wire time behind the backward
+    assert go["exposed_comm_ms_overlap"] < go["exposed_comm_ms_baseline"], go
+
     widest = str(max(PAIR_COUNTS))
     vci = data["message_rate"][widest]["per_thread_vci_msgs_per_s"]
     shared = data["message_rate"][widest]["shared_channel_msgs_per_s"]
@@ -232,6 +509,8 @@ def bench(smoke: bool = False, json_path: str | None = "BENCH_threadcomm.json"):
     assert vci > shared, (
         f"per-thread VCI ({vci:.0f}/s) did not beat shared channel ({shared:.0f}/s)"
     )
+    asz = str(BW_ASSERT_BYTES)
+    data["speedup_rabenseifner_over_binomial_4MB"] = data["bandwidth"][asz]["speedup"]
 
     if json_path:
         with open(json_path, "w") as f:
@@ -252,4 +531,14 @@ if __name__ == "__main__":
     print(
         f"# vci/shared @8 pairs = {d['speedup_vci_over_shared_widest']:.2f}x "
         "(target: per-thread VCI beats the shared channel)"
+    )
+    print(
+        f"# rabenseifner/binomial @4MB = "
+        f"{d['speedup_rabenseifner_over_binomial_4MB']:.2f}x (target: >=2x)"
+    )
+    go = d["grad_overlap"]
+    print(
+        f"# grad-overlap exposed comm = {go['exposed_comm_ms_overlap']:.1f}ms "
+        f"vs baseline {go['exposed_comm_ms_baseline']:.1f}ms "
+        "(target: overlap < baseline)"
     )

@@ -154,6 +154,9 @@ THREADCOMM = {
         "n_idle": _NUM,
         "coll_reps": _NUM,
         "trials": _NUM,
+        "link_bps": _NUM,
+        "bw_threads": _NUM,
+        "bw_reps": _NUM,
     },
     "message_rate": Each(
         {
@@ -167,7 +170,26 @@ THREADCOMM = {
         }
     ),
     "collectives": Each({"barrier_us": _NUM, "allreduce64_us": _NUM}),
+    # bytes/s vs array size over the calibrated link, keyed by payload bytes
+    "bandwidth": Each(
+        {
+            "rabenseifner_Bps": _NUM,
+            "binomial_Bps": _NUM,
+            "rabenseifner_us": _NUM,
+            "binomial_us": _NUM,
+            "speedup": _NUM,
+        }
+    ),
+    "grad_overlap": {
+        "n_buckets": _NUM,
+        "bucket_bytes": _NUM,
+        "compute_ms_per_bucket": _NUM,
+        "exposed_comm_ms_baseline": _NUM,
+        "exposed_comm_ms_overlap": _NUM,
+        "overlap_ratio": _NUM,
+    },
     "speedup_vci_over_shared_widest": _NUM,
+    "speedup_rabenseifner_over_binomial_4MB": _NUM,
 }
 
 _LATENCY_ROW = {

@@ -45,7 +45,10 @@ fi
 # scaling, the host-threadcomm channel isolation, and the progress
 # wait-queue/autotuner paths end to end (each asserts its acceptance
 # invariant — threadcomm: per-thread-VCI message rate beats the
-# shared-channel baseline; progress: per-channel queues wake >2x fewer
+# shared-channel baseline, Rabenseifner allreduce_large reaches >=2x the
+# binomial bandwidth at >=4MB on the calibrated link, and the windowed
+# grad allreduce exposes less comm time than the non-overlapped
+# baseline; progress: per-channel queues wake >2x fewer
 # waiters per notify than stripe CVs and the autotuner matches/beats
 # static placement; schedule: recorded replays beat the eager loops
 # they replace and stay byte-identical — and writes

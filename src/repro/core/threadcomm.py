@@ -429,8 +429,19 @@ class ThreadRank:
     def reduce(self, value, op="sum", root: int = 0, timeout: Optional[float] = None):
         return threadcoll.reduce(self, value, op=op, root=root, timeout=timeout)
 
-    def allreduce(self, value, op="sum", timeout: Optional[float] = None):
-        return threadcoll.allreduce(self, value, op=op, timeout=timeout)
+    def allreduce(self, value, op="sum", timeout: Optional[float] = None,
+                  large_threshold: Optional[int] = None):
+        return threadcoll.allreduce(self, value, op=op, timeout=timeout,
+                                    large_threshold=large_threshold)
+
+    def reduce_scatter(self, value, op="sum", timeout: Optional[float] = None):
+        return threadcoll.reduce_scatter(self, value, op=op, timeout=timeout)
+
+    def allgather(self, value, timeout: Optional[float] = None):
+        return threadcoll.allgather(self, value, timeout=timeout)
+
+    def allreduce_large(self, value, op="sum", timeout: Optional[float] = None):
+        return threadcoll.allreduce_large(self, value, op=op, timeout=timeout)
 
     def alltoall(self, items: Sequence, timeout: Optional[float] = None) -> List:
         return threadcoll.alltoall(self, items, timeout=timeout)
@@ -439,12 +450,25 @@ class ThreadRank:
         return next(self._coll_seq)
 
     # -- recorded schedules (core.schedule) ------------------------------
-    def send_scheduled(self, schedule, dst: int, obj=None, tag=0, *, bind: Optional[str] = None) -> None:
+    def send_scheduled(
+        self,
+        schedule,
+        dst: int,
+        obj=None,
+        tag=0,
+        *,
+        bind: Optional[str] = None,
+        payload_fn: Optional[Callable] = None,
+    ) -> None:
         """Record a send to ``dst`` into ``schedule`` — validation,
         destination channel and mailbox resolve once, at record time; the
         record pass delivers eagerly. ``bind=`` names the replay binding
-        that supplies the payload (omit to replay the constant ``obj``)."""
-        self.comm._record_send(schedule, self, dst, obj, tag, bind)
+        that supplies the payload (omit to replay the constant ``obj``);
+        ``payload_fn=`` computes it at issue time from the replay context
+        (``payload_fn(ctx)``) — the data-dependent-hop form the ring
+        collectives use, where round k+1 forwards a fold of round k's
+        receive held in ``ctx.scratch``."""
+        self.comm._record_send(schedule, self, dst, obj, tag, bind, payload_fn)
 
     def recv_scheduled(
         self,
@@ -453,13 +477,18 @@ class ThreadRank:
         tag=0,
         *,
         out: Optional[str] = None,
+        into: Optional[str] = None,
         timeout: Optional[float] = None,
     ):
         """Record the matching receive: each replay posts a fused *part*
         the sender's delivery completes (no per-recv engine request).
         ``out=`` stores each replay's payload in ``ctx.outputs[out]``.
-        Blocks for and returns the record pass's payload."""
-        return self.comm._record_recv(schedule, self, src, tag, out, timeout)
+        ``into=`` makes the replayed recv *blocking at issue time*: the
+        issuing thread parks until the payload lands and stores it in
+        ``ctx.scratch[into]`` — required when a later op in the same
+        schedule consumes the payload (ring-collective folds). Blocks for
+        and returns the record pass's payload."""
+        return self.comm._record_recv(schedule, self, src, tag, out, timeout, into)
 
     # -- identity -------------------------------------------------------
     def as_stream_comm(self, mesh=None, axes: Sequence[str] = ()) -> StreamComm:
@@ -877,7 +906,8 @@ class HostThreadComm:
         return found[0][2]
 
     # -- recorded schedules (pt2pt over pre-resolved bindings) ------------
-    def _record_send(self, schedule, handle: ThreadRank, dst: int, obj, tag, bind) -> None:
+    def _record_send(self, schedule, handle: ThreadRank, dst: int, obj, tag, bind,
+                     payload_fn: Optional[Callable] = None) -> None:
         """Record a mailbox send (paper ext. 5 meets user-level
         schedules): handle/range validation and the destination channel +
         mailbox resolution happen once, HERE, and the record pass
@@ -919,6 +949,10 @@ class HostThreadComm:
             if matched is not None:
                 # outside the critical section, exactly as _send
                 matched["request"].complete()
+                # a blocking (``into=``) scheduled recv parks on its own
+                # channel for this payload — wake it now rather than ride
+                # out the park-recheck interval
+                self.engine.notify_channel(dst_ch)
             else:
                 self.engine.notify_channel(dst_ch)
 
@@ -929,21 +963,29 @@ class HostThreadComm:
                 )
             if handle._detached:
                 ctx.schedule._stale(f"rank {src_rank} detached since record()")
-            payload = ctx.bound(bind) if bind is not None else obj
+            if payload_fn is not None:
+                payload = payload_fn(ctx)
+            else:
+                payload = ctx.bound(bind) if bind is not None else obj
             deliver(payload, ("__sched__", tag, ctx.epoch))
 
         schedule.add_op("tc-send", issue, label=f"send r{src_rank}->r{dst}")
         deliver(obj, ("__sched__", tag, 0))
 
-    def _record_recv(self, schedule, handle: ThreadRank, src: int, tag, out, timeout):
+    def _record_recv(self, schedule, handle: ThreadRank, src: int, tag, out, timeout,
+                     into: Optional[str] = None):
         """Record the matching receive. Each replay posts a fused *part*
         as the pending entry — the sender's (eager or replayed) delivery
         fulfills and completes it through the existing ``match_pending``
         machinery — so a replayed recv skips both ``grequest_start``
         registration and the per-recv wait: the schedule's single fused
-        wait covers every recv in the graph. ``ANY_SOURCE`` is not
-        schedulable (channel bindings must resolve at record time). The
-        record pass blocks for and returns the epoch-0 payload."""
+        wait covers every recv in the graph. With ``into=`` the replayed
+        issue additionally *parks* until the payload lands and stores it
+        in ``ctx.scratch[into]`` — the blocking form the ring collectives
+        need, where the next recorded op folds this payload before the
+        next hop. ``ANY_SOURCE`` is not schedulable (channel bindings
+        must resolve at record time). The record pass blocks for and
+        returns the epoch-0 payload."""
         from repro.core.schedule import ScheduleError
 
         if not schedule.recording:
@@ -991,6 +1033,20 @@ class HostThreadComm:
             if complete_now:
                 part.complete()
             handle.recvs += 1
+            if into is not None:
+                # blocking issue: a later op in this schedule consumes the
+                # payload, so park here (spin-then-park on our own channel;
+                # the sender's delivery notifies it) instead of deferring
+                # to the fused wait
+                ok = self.engine.park_on_channel(
+                    ch, lambda: state["matched"], timeout
+                )
+                if not ok:
+                    ctx.schedule._stale(
+                        f"scheduled recv r{rank}<-r{src}: peer replay did not "
+                        f"deliver within {timeout}s"
+                    )
+                ctx.scratch[into] = state["payload"]
             if out is not None:
 
                 def extract(st=state):
@@ -1148,3 +1204,81 @@ class HybridThreadComm:
     def outer(self) -> ThreadComm:
         """The mesh-level communicator."""
         return self.mesh_comm
+
+    # -- hybrid collectives (host threadcoll × device mesh level) --------
+    def allreduce_large(self, handle: ThreadRank, value, op: str = "sum",
+                        timeout: Optional[float] = None) -> np.ndarray:
+        """Bandwidth-optimal allreduce over every (mesh position, host
+        thread) rank — the paper's motivating example with ext. 3 + 5
+        composed. ``value`` is this thread's stacked per-mesh-position
+        contribution, shape ``(mesh_size, *rest)`` (row m = what hybrid
+        rank (m, thread) holds); returns the full sum shaped ``rest``,
+        identical on every rank.
+
+        Rabenseifner applied at both hierarchy levels: a host-level ring
+        reduce-scatter over the *column* dimension (threadcoll ``axis=``
+        chunking keeps mesh rows whole — each thread ends owning a 1/M
+        column chunk summed over threads), then the mesh-level device
+        allreduce of just that chunk issued through this thread's
+        ``as_stream_comm`` (the :mod:`repro.core.hierarchical` RS→AR→AG
+        split when the mesh has more than one axis), then a host-level
+        allgather. The device level moves only ``bytes/M`` per thread
+        and each device collective is attributed to — and serialized on
+        — the issuing thread's own stream channel."""
+        if op != "sum":
+            raise ValueError(
+                "hybrid allreduce_large reduces the mesh level with psum; "
+                f"op={op!r} is host-level-only (use host collectives directly)"
+            )
+        arr = np.asarray(value)
+        msize = self.mesh_comm.size()
+        if arr.ndim < 1 or arr.shape[0] != msize:
+            raise ValueError(
+                f"hybrid allreduce_large input must stack the mesh dim first: "
+                f"expected shape ({msize}, ...), got {arr.shape}"
+            )
+        rest = arr.shape[1:]
+        flat2d = arr.reshape(msize, -1)
+        chunk = threadcoll.reduce_scatter(
+            handle, flat2d, op=op, timeout=timeout, axis=1
+        )  # (msize, cols/M) — still per-mesh-position
+        if msize > 1 and chunk.shape[1]:
+            chunk = np.asarray(
+                self._mesh_allreduce_program(handle, chunk.shape, chunk.dtype.name)(chunk)
+            )[0]
+        else:
+            chunk = chunk.sum(axis=0)
+        flat = threadcoll.allgather(handle, chunk.reshape(-1), timeout=timeout)
+        return flat.reshape(rest)
+
+    def _mesh_allreduce_program(self, handle: ThreadRank, shape, dtype_name: str):
+        """Memoized jitted shard_map program: sum a ``(mesh_size, c)``
+        host array over the mesh axes, returning the ``(1, c)`` replicated
+        total. The mesh comm is rebound to the calling thread's stream
+        (``MPIX_Stream_comm_create`` on its VCI) so the device collective
+        serializes on that thread's channel, and the hierarchical split
+        (RS inner / AR outer / AG inner) applies when the mesh has
+        multiple axes."""
+        key = (id(self.mesh_comm), handle.channel, shape, dtype_name)
+        prog = _hybrid_mesh_progs.get(key)
+        if prog is None:
+            # deferred: hierarchical imports this module at load time
+            from repro.core.hierarchical import hierarchical_all_reduce
+
+            mc = ThreadComm(self.mesh_comm.mesh, self.mesh_comm.axes, handle.stream)
+
+            def body(x):
+                y, _ = hierarchical_all_reduce(x, mc, axis=1)
+                return y
+
+            spec = P(mc.axes if len(mc.axes) > 1 else mc.axes[0])
+            prog = jax.jit(
+                shard_map(body, mesh=mc.mesh, in_specs=spec, out_specs=P())
+            )
+            _hybrid_mesh_progs[key] = prog
+        return prog
+
+
+# jitted mesh-level programs keyed by (mesh comm, chunk shape, dtype) —
+# the hybrid allreduce re-issues the same chunk geometry every step
+_hybrid_mesh_progs: Dict[tuple, Callable] = {}

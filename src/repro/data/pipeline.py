@@ -70,6 +70,11 @@ class SyntheticPipeline:
         self._rank0 = None
         self._workers: List[threading.Thread] = []
         self._assigned: Dict[int, int] = {}  # step -> worker rank
+        # weighted prefetch split (straggler rebalance): worker rank ->
+        # relative share, smooth-WRR credit, cumulative assignment count
+        self._shares: Dict[int, float] = {}
+        self._wrr_credit: Dict[int, float] = {}
+        self.assignments: Dict[int, int] = {}
         if data.loader_threads > 0:
             self.start_workers(data.loader_threads)
 
@@ -150,13 +155,50 @@ class SyntheticPipeline:
         """The loader threadcomm (None unless start_workers ran)."""
         return self._tc
 
+    @property
+    def n_workers(self) -> int:
+        """Number of live loader ranks (0 in thread-per-prefetch mode)."""
+        return len(self._workers)
+
+    # -- weighted microbatch split (straggler rebalance) -----------------
+    def set_shares(self, shares: Dict[int, float]) -> None:
+        """Set per-worker prefetch weights (worker ranks 1..W). The map
+        usually comes from ``StragglerMonitor.rebalance_shares`` via the
+        trainer: a straggling stage's loader gets a smaller weight and
+        therefore fewer microbatches from the next step on. Weights are
+        relative; workers missing from the map default to 1; non-positive
+        weights clamp to a tiny epsilon (starved, never deadlocked)."""
+        if self._tc is None:
+            raise RuntimeError("set_shares requires threadcomm loader workers")
+        clean = {}
+        for w in range(1, len(self._workers) + 1):
+            v = float(shares.get(w, 1.0))
+            clean[w] = v if v > 0 else 1e-6
+        self._shares = clean
+        self._wrr_credit = {w: 0.0 for w in clean}
+
+    def _next_worker(self) -> int:
+        """Smooth weighted round-robin over the loader ranks: every pick
+        adds each worker's weight to its credit, takes the max-credit
+        worker, and charges it the total weight. Equal weights reduce to
+        the old ``1 + step % W`` rotation; half the weight means half the
+        assignments, interleaved rather than bunched."""
+        if not self._shares:
+            self.set_shares({})
+        total = sum(self._shares.values())
+        for w, wt in self._shares.items():
+            self._wrr_credit[w] += wt
+        best = max(self._wrr_credit, key=lambda w: (self._wrr_credit[w], -w))
+        self._wrr_credit[best] -= total
+        return best
+
     # -- async prefetch ----------------------------------------------------
     def prefetch(self, step: int):
         """Enqueue an async build of batch ``step``; returns the request."""
         if self._tc is not None:
             if step in self._assigned:
                 return None  # already in flight
-            w = 1 + step % len(self._workers)
+            w = self._next_worker()
             # externally-completed handle: no poll_fn, so a blocked
             # wait_all parks; the worker completes it after the tc_send
             req = self.engine.grequest_start(
@@ -165,6 +207,7 @@ class SyntheticPipeline:
                 name=f"prefetch-{step}",
             )
             self._assigned[step] = w
+            self.assignments[w] = self.assignments.get(w, 0) + 1
             self._rank0.send(w, (step, req))
             return req
 

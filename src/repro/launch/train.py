@@ -19,7 +19,7 @@ import argparse
 import threading
 import time
 from functools import partial
-from typing import Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -183,6 +183,17 @@ class Trainer:
         self._pending_failures: list = []
         self.recoveries: list = []
         self.straggler = StragglerMonitor(ranks=self.ranks)
+        # straggler mitigation is enacted, not just logged: run() feeds
+        # advice through rebalance_shares into the pipeline's weighted
+        # prefetch split (see _apply_straggler_advice)
+        self.microbatch_total = max(len(self.ranks), int(getattr(cfg, "grad_accum", 1) or 1))
+        self.microbatch_shares: Dict[int, int] = {}
+        # named communication schedules riding this run (grad buckets,
+        # halo exchanges): recover() invalidates and re-records them on
+        # the new membership so a replay never runs against a stale rank
+        # set (the serving engine already does this eagerly; training
+        # now does too)
+        self.schedules: Dict[str, dict] = {}
         # hb_clock + hb_tick: a virtual clock the loop advances by hb_tick
         # per step makes detection latency a deterministic step count
         # (timeout / tick steps after the last heartbeat) instead of a
@@ -243,6 +254,47 @@ class Trainer:
             out, self._pending_failures = self._pending_failures, []
         return sorted(set(out))
 
+    # -- straggler mitigation ------------------------------------------------
+    def _apply_straggler_advice(self, advice) -> None:
+        """Enact 'rebalance' advice: recompute inverse-speed microbatch
+        shares and push them into the live pipeline's weighted prefetch
+        split. Loader rank w serves mesh rank ``ranks[(w-1) % n]``, so a
+        straggling stage's loader receives proportionally fewer
+        microbatches starting with the very next prefetch."""
+        if not any(a.action == "rebalance" for a in advice):
+            return
+        shares = self.straggler.rebalance_shares(self.microbatch_total)
+        if not shares:
+            return
+        self.microbatch_shares = shares
+        if self.pipeline.threadcomm is not None and self.ranks:
+            weights = {
+                w + 1: float(shares.get(self.ranks[w % len(self.ranks)], 1))
+                for w in range(self.pipeline.n_workers)
+            }
+            self.pipeline.set_shares(weights)
+
+    # -- recorded schedules across remesh ------------------------------------
+    def register_schedule(self, name: str, schedule, record_fn: Callable) -> None:
+        """Track a recorded communication schedule whose graph depends on
+        the current membership (grad buckets, pipeline sends).
+        ``record_fn(schedule)`` must (re-)record it eagerly against the
+        trainer's current mesh; recover() invalidates the schedule and
+        calls it after every remesh so replays resume on a fresh graph
+        instead of dying ScheduleStale mid-step."""
+        self.schedules[name] = {"schedule": schedule, "record": record_fn, "rerecords": 0}
+
+    def _rerecord_schedules(self, plan) -> list:
+        done = []
+        for name, ent in self.schedules.items():
+            sch = ent["schedule"]
+            if sch is not None and not getattr(sch, "recording", False):
+                sch.invalidate(f"membership changed: re-mesh -> {plan.shape}")
+            ent["record"](sch)
+            ent["rerecords"] += 1
+            done.append(name)
+        return done
+
     def recover(self, failed_ranks, reshard_depth: int = 4) -> "object":
         """The end-to-end elastic path: drop the dead ranks from the
         monitors, plan the shrunken mesh, stream the latest checkpoint's
@@ -284,6 +336,10 @@ class Trainer:
             self.maybe_restore()
         self.mesh_shape = plan.shape
         self.mesh_plan = plan
+        # membership changed: every registered schedule's recorded graph
+        # (channel bindings, rank fan-out) is stale — invalidate and
+        # re-record eagerly against the shrunken mesh before resuming
+        rerecorded = self._rerecord_schedules(plan)
         self.recoveries.append(
             {
                 "failed": failed_ranks,
@@ -291,6 +347,7 @@ class Trainer:
                 "ckpt_step": ckpt_step,
                 "shards": shards,
                 "reshard_stats": win_stats,
+                "schedules_rerecorded": rerecorded,
             }
         )
         return plan
@@ -383,6 +440,12 @@ class Trainer:
                         d += self.fault_injector.stage_delay(r)
                     durations[r] = d
                 self.straggler.record_step(durations)
+                advice = self.straggler.check()
+                if advice:
+                    # rebalance advice is enacted on the live pipeline;
+                    # evict escalation stays with the heartbeat/recover
+                    # path (a straggler is slow, not dead)
+                    self._apply_straggler_advice(advice)
                 for r in list(self.ranks):
                     self.heartbeat.record(r)
                 if self.hb_clock is not None and self.hb_tick > 0:

@@ -23,7 +23,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import datatype as dt
-from repro.core.collectives import all_reduce, reduce_scatter
+from repro.core.collectives import all_gather, all_reduce, reduce_scatter
 from repro.core.enqueue import _poll_dispatched, dispatch_enqueue
 from repro.core.progress import default_engine
 from repro.core.streams import StreamComm, MPIXStream, new_token
@@ -162,7 +162,39 @@ def _bucket_program(comm: StreamComm, start: int, n: int, scatter: bool):
     return prog
 
 
-def _grad_fingerprint(flat_grads, plan: GradBuckets, comms, scatter: bool) -> dict:
+def _bucket_rs_program(comm: StreamComm, start: int, n: int):
+    """Reduce-scatter half of the split bucket collective: slice the
+    bucket and ``psum_scatter`` it over the comm's axis, leaving each
+    shard holding its 1/size piece of the reduced bucket."""
+    return _bucket_program(comm, start, n, scatter=True)
+
+
+def _bucket_ag_program(comm: StreamComm, n: int):
+    """All-gather half: reassemble a scattered reduced bucket into the
+    replicated result. ``RS ∘ AG`` on the same comm equals the bucket's
+    all-reduce (the Rabenseifner identity), so the split pair stays
+    interchangeable with :func:`_bucket_program`'s psum."""
+    from repro.core.threadcomm import shard_map  # deferred: import order
+
+    key = (comm, n, "ag")
+    cached = _bucket_programs.get(key)
+    if cached is not None:
+        return cached
+    mesh, axis = comm.mesh, comm.axes[0]
+
+    def body(y):
+        z, _ = all_gather(y, comm, axis=0, token=new_token())
+        return z
+
+    prog = jax.jit(
+        shard_map(body, mesh=mesh, in_specs=P(axis), out_specs=P(), check_vma=False)
+    )
+    _bucket_programs[key] = prog
+    return prog
+
+
+def _grad_fingerprint(flat_grads, plan: GradBuckets, comms, scatter: bool,
+                      windowed: bool = False) -> dict:
     return {
         "kind": "grad_buckets",
         "flat_shape": tuple(flat_grads.shape),
@@ -171,6 +203,7 @@ def _grad_fingerprint(flat_grads, plan: GradBuckets, comms, scatter: bool) -> di
         "n_comms": len(comms),
         "comm_axes": tuple(c.axes[0] for c in comms),
         "scatter": bool(scatter),
+        "windowed": bool(windowed),
     }
 
 
@@ -181,12 +214,29 @@ def bucketed_all_reduce_host(
     scatter: bool = False,
     engine=None,
     schedule=None,
+    window=None,
+    materialize=None,
 ):
     """Host-driven twin of :func:`bucketed_all_reduce`: each bucket is its
     own jitted collective program dispatched from the host in stream
     round-robin, its completion a generalized request on the bucket's
     stream channel — the host overlaps bucket i's collective with bucket
     i+1's dispatch and blocks once, in one batched ``wait_all``.
+
+    ``window=`` (an :class:`~repro.core.enqueue.OffloadWindow`) switches
+    to the backward-overlapped split schedule: each bucket's collective
+    is cut into its reduce-scatter and allgather halves, the RS is
+    admitted through the window the moment the bucket is ready, and the
+    AG for a bucket is issued **in completion order** — whichever RS
+    lands first gets its allgather first, regardless of issue order, so
+    one slow bucket never serializes the reassembly of the others.
+    ``materialize=`` (``fn(i)``) is the backward-pass hook: it is called
+    right before bucket i's RS is issued, so the compute producing bucket
+    i runs while buckets ``< i`` are in flight — communication hides
+    behind the backward walk instead of starting after it. ``RS ∘ AG``
+    on one comm is the bucket's all-reduce (the Rabenseifner identity),
+    so the result is the unsplit path's, byte-for-byte on a
+    single-device axis and numerically equal otherwise.
 
     ``schedule=`` makes the round-robin record-then-replay: the first
     call records (running the eager path while capturing one pre-resolved
@@ -195,7 +245,10 @@ def bucketed_all_reduce_host(
     round-robin as one fused request set with a single wait — no per-
     bucket request registration, no per-bucket validation. Replay output
     is byte-identical (same executables, same inputs). A changed flat
-    length/dtype, bucket plan, or comm set raises ``ScheduleStale``.
+    length/dtype, bucket plan, or comm set raises ``ScheduleStale``. The
+    windowed split records the same way (the RS∘AG pair is the recorded
+    program; the window itself is issue pacing, which a fused replay
+    already maximizes).
 
     Returns the reduced flat vector (no tokens: host-side ordering comes
     from dataflow + the engine, the paper's get-the-host-out point).
@@ -219,10 +272,21 @@ def bucketed_all_reduce_host(
         ctx = schedule.replay(binding={"flat_grads": flat_grads})
         return ctx.outputs["flat"]
 
-    progs = [
-        _bucket_program(comms[i % k], start, n, scatter)
-        for i, (start, n) in enumerate(plan.bucket_slices)
-    ]
+    windowed = window is not None
+    if not windowed:
+        progs = [
+            _bucket_program(comms[i % k], start, n, scatter)
+            for i, (start, n) in enumerate(plan.bucket_slices)
+        ]
+    else:
+        rs_progs = [
+            _bucket_rs_program(comms[i % k], start, n)
+            for i, (start, n) in enumerate(plan.bucket_slices)
+        ]
+        ag_progs = [
+            None if scatter else _bucket_ag_program(comms[i % k], n)
+            for i, (start, n) in enumerate(plan.bucket_slices)
+        ]
 
     def run_eager():
         outs, reqs = [], []
@@ -235,20 +299,63 @@ def bucketed_all_reduce_host(
         eng.wait_all([r.grequest for r in reqs])
         return jnp.concatenate(outs)
 
-    if schedule is None:
-        return run_eager()
+    def run_windowed():
+        outs: List = [None] * plan.n_buckets
+        ag_reqs = []
 
-    fp = _grad_fingerprint(flat_grads, plan, comms, scatter)
+        def issue_ag(slot):
+            j, rs_j = slot.value
+            if ag_progs[j] is None:  # scatter=True: the RS chunk IS the result
+                outs[j] = rs_j
+                return
+            y = ag_progs[j](rs_j)
+            ag_reqs.append(
+                dispatch_enqueue(y, stream=comms[j % k].stream, engine=eng, name="grad-ag")
+            )
+            outs[j] = y
+
+        for i in range(plan.n_buckets):
+            if materialize is not None:
+                materialize(i)  # backward produces bucket i; earlier RS/AG in flight
+            rs = rs_progs[i](flat_grads)
+            with window.issue() as submit:
+                submit(
+                    dispatch_enqueue(
+                        rs, stream=comms[i % k].stream, engine=eng, name="grad-rs"
+                    ),
+                    value=(i, rs),
+                )
+            for slot in window.reap():  # AGs chase completions, not issue order
+                issue_ag(slot)
+        for slot in window.drain():
+            issue_ag(slot)
+        if ag_reqs:
+            eng.wait_all([r.grequest for r in ag_reqs])
+        return jnp.concatenate(outs)
+
+    if schedule is None:
+        return run_windowed() if windowed else run_eager()
+
+    fp = _grad_fingerprint(flat_grads, plan, comms, scatter, windowed)
 
     def check_and_reset(ctx):
         ctx.schedule.check(
-            **_grad_fingerprint(ctx.bound("flat_grads"), plan, comms, scatter)
+            **_grad_fingerprint(ctx.bound("flat_grads"), plan, comms, scatter, windowed)
         )
         ctx.scratch["outs"] = []
 
     def make_bucket(i, prog):
         def issue(ctx):
             y = prog(ctx.bound("flat_grads"))
+            ctx.fused.part(poll_fn=_poll_dispatched, extra_state={"y": y}, name="grad-bucket")
+            ctx.scratch["outs"].append(y)
+
+        return issue
+
+    def make_bucket_split(i, rs_prog, ag_prog):
+        def issue(ctx):
+            rs = rs_prog(ctx.bound("flat_grads"))
+            y = rs if ag_prog is None else ag_prog(rs)
             ctx.fused.part(poll_fn=_poll_dispatched, extra_state={"y": y}, name="grad-bucket")
             ctx.scratch["outs"].append(y)
 
@@ -265,11 +372,22 @@ def bucketed_all_reduce_host(
     try:
         schedule.fingerprint(**fp)
         schedule.add_op("check", check_and_reset, parts=0, label="fingerprint")
-        for i, prog in enumerate(progs):
-            schedule.add_op("grad_bucket", make_bucket(i, prog), parts=1, label=f"bucket{i}")
+        if windowed:
+            for i in range(plan.n_buckets):
+                schedule.add_op(
+                    "grad_bucket",
+                    make_bucket_split(i, rs_progs[i], ag_progs[i]),
+                    parts=1,
+                    label=f"bucket{i}",
+                )
+        else:
+            for i, prog in enumerate(progs):
+                schedule.add_op("grad_bucket", make_bucket(i, prog), parts=1, label=f"bucket{i}")
         schedule.add_op("collect", collect, parts=0, label="concat")
-        out = run_eager()
-        schedule.meta["grad_buckets"] = {"n_buckets": plan.n_buckets, "n_comms": k}
+        out = run_windowed() if windowed else run_eager()
+        schedule.meta["grad_buckets"] = {
+            "n_buckets": plan.n_buckets, "n_comms": k, "windowed": windowed,
+        }
         rec.seal()
     finally:
         rec.abort()

@@ -3,9 +3,10 @@ test_multidevice.py (the 8-device XLA flag must never leak into the main
 pytest process — smoke tests and benches see 1 device).
 
 Covers: stream collectives, threadcomm flatten/rank, hierarchical vs flat
-all-reduce, multi-stream chunked all-reduce, enqueue shift, GPipe
-pipeline forward/backward, bucketed grad overlap, int8-EF hierarchical
-all-reduce, and a distributed one-step trainer on a (2,2,2) pod mesh.
+all-reduce, multi-stream chunked all-reduce, enqueue shift, the hybrid
+host×mesh Rabenseifner allreduce, GPipe pipeline forward/backward,
+bucketed grad overlap, int8-EF hierarchical all-reduce, and a
+distributed one-step trainer on a (2,2,2) pod mesh.
 """
 
 import os
@@ -113,6 +114,48 @@ def main():
     exact = np.asarray(g).sum(0)
     err = np.max(np.abs(np.asarray(y6).reshape(-1) - exact)) / (np.abs(exact).max() + 1e-9)
     check("compressed_allreduce", err < 0.05)
+
+    # hybrid host×mesh Rabenseifner allreduce: host ring reduce-scatter
+    # (axis=1 column chunks) → device-level hierarchical allreduce of
+    # each thread's chunk through its own stream comm → host allgather
+    import threading
+
+    from repro.core.progress import ProgressEngine as _PE
+    from repro.core.streams import StreamPool
+    from repro.core.threadcomm import HostThreadComm
+
+    host = HostThreadComm(2, engine=_PE(), pool=StreamPool(), name="hyb")
+    hybrid = tc.with_host_threads(host)
+    host.start()
+    vals = [
+        (np.arange(8 * 60, dtype=np.float32).reshape(8, 60) + 1) * (t + 1)
+        for t in range(2)
+    ]
+    hyb_out = {}
+
+    def hyb_worker(t):
+        h = host.attach(rank=t)
+        try:
+            hyb_out[t] = hybrid.allreduce_large(h, vals[t], timeout=60.0)
+        finally:
+            h.detach()
+
+    try:
+        hts = [threading.Thread(target=hyb_worker, args=(t,), daemon=True) for t in range(2)]
+        for t in hts:
+            t.start()
+        for t in hts:
+            t.join(timeout=120.0)
+    finally:
+        host.finish(timeout=10.0)
+    hyb_expected = (vals[0] + vals[1]).sum(0)
+    check(
+        "hybrid_allreduce_large",
+        all(
+            hyb_out[t].shape == (60,) and np.allclose(hyb_out[t], hyb_expected, rtol=1e-5)
+            for t in range(2)
+        ),
+    )
 
     # GPipe pipeline: forward/backward equivalence vs sequential stack
     from repro.parallel.pipeline import gpipe_forward, split_stages

@@ -75,8 +75,18 @@ CONFIGS = {
         engine=dict(sanitize=True), n_threads=2, n_channels=2, chaos=True,
         autotune=True, schedule=True,
     ),
+    # large-collective schedule under chaos: three ranks record a ring
+    # Rabenseifner allreduce (the reduce-scatter + allgather hop graph of
+    # core.threadcoll) and replay it on fresh bindings while the chaos
+    # thread churns progress placement — every replay must be
+    # byte-identical to the eager collective on the same data, and the
+    # sanitizer must end with zero findings
+    "large-coll": dict(
+        engine=dict(sanitize=True), n_threads=2, n_channels=2, chaos=True,
+        autotune=True, large_coll=True,
+    ),
 }
-SEEDS = range(20)  # 7 configs x 20 seeds = 140 schedules
+SEEDS = range(20)  # 8 configs x 20 seeds = 160 schedules
 
 
 class _Completer(threading.Thread):
@@ -216,6 +226,51 @@ def _schedule_worker(comm, rank, seed, n_replays, errors):
         errors.append((f"sched-r{rank}", e))
 
 
+def _large_coll_worker(comm, rank, seed, n_replays, errors):
+    """One threadcomm rank of the large-collective schedule soak: record
+    a Rabenseifner ``allreduce_large`` (ring reduce-scatter + allgather)
+    once, then replay it on fresh bindings under chaos, asserting every
+    replay is byte-identical to the eager collective on the same data
+    (same hop graph, same fold order)."""
+    import numpy as np
+
+    from repro.core import threadcoll as tc
+    from repro.core.schedule import Schedule
+
+    rng = Random((seed << 4) | rank)
+    try:
+        h = comm.attach(rank)
+        try:
+            base = (
+                np.random.default_rng((seed << 8) | rank)
+                .standard_normal(257)
+                .astype(np.float32)
+            )
+            sched = Schedule(engine=comm.engine, stream=h.stream, name=f"soak-lc-r{rank}")
+            rec = sched.record()
+            try:
+                rec_out = tc.record_allreduce_large(
+                    h, sched, base, bind="x", out="y", timeout=_OP_TIMEOUT
+                )
+                rec.seal()
+            finally:
+                rec.abort()
+            eager0 = tc.allreduce_large(h, base, timeout=_OP_TIMEOUT)
+            assert np.array_equal(rec_out, eager0), "record pass diverged from eager"
+            for i in range(n_replays):
+                data = base * (i + 2)
+                eager = tc.allreduce_large(h, data, timeout=_OP_TIMEOUT)
+                ctx = sched.replay(binding={"x": data}, timeout=_OP_TIMEOUT)
+                assert np.array_equal(ctx.outputs["y"], eager), f"replay {i} diverged"
+                if rng.random() < 0.3:
+                    time.sleep(rng.random() * 0.002)
+            assert sched.stats()["replays"] == n_replays
+        finally:
+            h.detach()
+    except BaseException as e:
+        errors.append((f"lc-r{rank}", e))
+
+
 def _chaos(engine, streams, tuner, stop_evt, seed, errors):
     """Start/stop progress threads and tick the autotuner concurrently
     with the churn — placement changes must never strand a waiter."""
@@ -291,6 +346,20 @@ def test_progress_soak(cfg_name, seed):
                 name=f"soak-sched-r{rank}",
             )
             for rank in range(2)
+        ]
+    elif cfg.get("large_coll"):
+        from repro.core.threadcomm import HostThreadComm
+
+        comm = HostThreadComm(3, engine=engine, pool=pool, name="soak-lc")
+        comm.start()
+        workers += [
+            threading.Thread(
+                target=_large_coll_worker,
+                args=(comm, rank, seed, 4, errors),
+                daemon=True,
+                name=f"soak-lc-r{rank}",
+            )
+            for rank in range(3)
         ]
     for w in workers:
         w.start()

@@ -1,0 +1,406 @@
+"""Bandwidth-optimal large-array collectives (`core.threadcoll`):
+ring reduce_scatter / recursive-doubling+ring allgather / Rabenseifner
+allreduce_large vs a numpy oracle across dtypes, thread counts 1/2/4/8
+and the awkward n=3/5 rings, non-divisible sizes (remainder and empty
+chunks), the small/large algorithm switch boundary, record/replay
+byte-identity of the recorded ring graphs, and a fault-injected
+kill_rank mid-allreduce (clean raise, no leaked mailboxes).
+
+Float oracles use a float64 reference with allclose — numpy's pairwise
+summation and the ring's deterministic left-fold visit addends in
+different orders, so bit-equality against ``np.sum`` is not the
+contract.  Bit-equality IS asserted wherever the fold order is
+identical by construction: across ranks, switch path vs direct large
+path, and replay vs eager.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import threadcoll
+from repro.core.progress import ProgressEngine
+from repro.core.schedule import Schedule, ScheduleStale
+from repro.core.streams import StreamPool
+from repro.core.threadcomm import HostThreadComm
+from repro.ft.faultinject import (
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    RankKilled,
+    VirtualClock,
+)
+
+_T = 60.0
+
+
+def _run_ranks(comm, body, join_timeout=120.0):
+    """One thread per rank running ``body(handle)``; re-raise the first
+    worker failure in the test thread (same idiom as test_threadcomm_host)."""
+    errors = []
+
+    def wrap(r):
+        h = comm.attach(rank=r)
+        try:
+            body(h)
+        except BaseException as e:  # noqa: BLE001 — surfaced below
+            errors.append(e)
+        finally:
+            h.detach()
+
+    threads = [
+        threading.Thread(target=wrap, args=(r,), daemon=True)
+        for r in range(comm.nthreads)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=join_timeout)
+    assert not any(t.is_alive() for t in threads), "collective deadlock"
+    if errors:
+        raise errors[0]
+
+
+def _comm(n, **kw):
+    comm = HostThreadComm(n, engine=ProgressEngine(), pool=StreamPool(), **kw)
+    comm.start()
+    return comm
+
+
+# ------------------------------------------------------------ chunk_bounds
+
+
+@pytest.mark.parametrize(
+    "total,n", [(10, 3), (7, 5), (3, 8), (0, 4), (4097, 8), (16, 4), (1, 1)]
+)
+def test_chunk_bounds_cover_contiguously_and_balance(total, n):
+    bounds = threadcoll.chunk_bounds(total, n)
+    assert len(bounds) == n
+    off = 0
+    for o, sz in bounds:
+        assert o == off and sz >= 0
+        off += sz
+    assert off == total
+    sizes = [sz for _, sz in bounds]
+    assert max(sizes) - min(sizes) <= 1  # remainder spread one at a time
+
+
+# ------------------------------------------- randomized vs numpy oracle
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 5, 8])
+def test_rs_ag_allreduce_large_vs_oracle(n):
+    """All three large collectives against the oracle, several sizes per
+    epoch (incl. sizes < n → empty chunks, and non-divisible sizes)."""
+    comm = _comm(n, name=f"tcl-{n}")
+    sizes = [1, 3, 7, 1000, 4097]
+    rng = np.random.default_rng(1234 + n)
+    fdata = {s: rng.standard_normal((n, s)).astype(np.float32) for s in sizes}
+    idata = {s: rng.integers(-50, 50, (n, s)).astype(np.int64) for s in sizes}
+    results = {}
+
+    def body(h):
+        for s in sizes:
+            chunk = threadcoll.reduce_scatter(h, fdata[s][h.rank])
+            off, sz = threadcoll.chunk_bounds(s, n)[h.rank]
+            results[("rs", s, h.rank)] = (off, sz, chunk)
+            results[("ar", s, h.rank)] = threadcoll.allreduce_large(h, fdata[s][h.rank])
+            results[("ari", s, h.rank)] = threadcoll.allreduce_large(h, idata[s][h.rank])
+            results[("ag", s, h.rank)] = threadcoll.allgather(h, chunk)
+
+    _run_ranks(comm, body)
+    comm.finish(timeout=_T, drain=True)
+
+    for s in sizes:
+        oracle = fdata[s].astype(np.float64).sum(axis=0)
+        ioracle = idata[s].sum(axis=0)
+        full = np.concatenate([results[("rs", s, r)][2] for r in range(n)])
+        assert full.shape == (s,) and full.dtype == np.float32
+        np.testing.assert_allclose(full, oracle, rtol=1e-4, atol=1e-5)
+        for r in range(n):
+            off, sz, chunk = results[("rs", s, r)]
+            assert chunk.shape == (sz,)  # remainder chunks, possibly empty
+            np.testing.assert_allclose(
+                results[("ar", s, r)], oracle.astype(np.float32), rtol=1e-4, atol=1e-5
+            )
+            np.testing.assert_array_equal(results[("ari", s, r)], ioracle)  # int: exact
+            # allgather of the rs chunks reassembles the identical vector
+            np.testing.assert_array_equal(results[("ag", s, r)], full)
+        # identical fold order ⇒ bit-identical result on every rank
+        for r in range(1, n):
+            np.testing.assert_array_equal(results[("ar", s, r)], results[("ar", s, 0)])
+
+
+def test_allgatherv_ragged_sizes():
+    n = 5
+    comm = _comm(n, name="tcl-agv")
+    parts = [np.arange(r + 1, dtype=np.int32) + 10 * r for r in range(n)]
+    results = {}
+
+    def body(h):
+        results[h.rank] = threadcoll.allgather(h, parts[h.rank])
+
+    _run_ranks(comm, body)
+    comm.finish(timeout=_T, drain=True)
+    expect = np.concatenate(parts)
+    for r in range(n):
+        np.testing.assert_array_equal(results[r], expect)
+
+
+def test_reduce_scatter_axis_keeps_other_dims():
+    """axis= chunks one dimension, keeping the rest whole (the hybrid
+    device level scatters columns while mesh rows stay intact)."""
+    n = 3
+    comm = _comm(n, name="tcl-ax")
+    rng = np.random.default_rng(7)
+    data = rng.standard_normal((n, 4, 10)).astype(np.float32)
+    results = {}
+
+    def body(h):
+        results[h.rank] = threadcoll.reduce_scatter(h, data[h.rank], axis=1)
+
+    _run_ranks(comm, body)
+    comm.finish(timeout=_T, drain=True)
+    oracle = data.astype(np.float64).sum(axis=0)
+    bounds = threadcoll.chunk_bounds(10, n)
+    for r in range(n):
+        off, sz = bounds[r]
+        assert results[r].shape == (4, sz)
+        np.testing.assert_allclose(results[r], oracle[:, off : off + sz], rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------- small/large switch
+
+
+def test_allreduce_switches_on_byte_threshold(monkeypatch):
+    n = 4
+    comm = _comm(n, name="tcl-sw")
+    calls = []
+    real_large = threadcoll.allreduce_large
+    monkeypatch.setattr(
+        threadcoll,
+        "allreduce_large",
+        lambda *a, **kw: (calls.append(1), real_large(*a, **kw))[1],
+    )
+    rng = np.random.default_rng(3)
+    data = rng.standard_normal((n, 256)).astype(np.float32)  # 1 KiB per rank
+    results = {}
+
+    def body(h):
+        # at/above the threshold: the Rabenseifner path
+        results[("big", h.rank)] = threadcoll.allreduce(
+            h, data[h.rank], large_threshold=data[h.rank].nbytes
+        )
+        # below: the binomial control-traffic path
+        results[("small", h.rank)] = threadcoll.allreduce(
+            h, data[h.rank], large_threshold=data[h.rank].nbytes + 1
+        )
+        # both paths reduce to the same chunk graph on the large side
+        results[("direct", h.rank)] = real_large(h, data[h.rank])
+
+    _run_ranks(comm, body)
+    comm.finish(timeout=_T, drain=True)
+    assert len(calls) == n  # each rank took the large branch exactly once
+    oracle = data.astype(np.float64).sum(axis=0)
+    for r in range(n):
+        # switch path is bit-identical to calling allreduce_large directly
+        np.testing.assert_array_equal(results[("big", r)], results[("direct", r)])
+        np.testing.assert_allclose(results[("small", r)], oracle, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(results[("big", r)], oracle, rtol=1e-4, atol=1e-5)
+    # the default threshold is the documented knob
+    assert threadcoll.LARGE_THRESHOLD == 64 * 1024
+
+
+def test_allreduce_single_rank_and_empty():
+    comm = _comm(1, name="tcl-one")
+    results = {}
+
+    def body(h):
+        results["large"] = threadcoll.allreduce_large(h, np.arange(5.0))
+        results["switch"] = threadcoll.allreduce(h, np.arange(5.0), large_threshold=0)
+        results["rs"] = threadcoll.reduce_scatter(h, np.arange(5.0))
+
+    _run_ranks(comm, body)
+    comm.finish(timeout=_T, drain=True)
+    np.testing.assert_array_equal(results["large"], np.arange(5.0))
+    np.testing.assert_array_equal(results["switch"], np.arange(5.0))
+    np.testing.assert_array_equal(results["rs"], np.arange(5.0))
+
+
+# ------------------------------------------------- record / replay parity
+
+
+@pytest.mark.parametrize("n", [2, 3, 4])
+def test_record_allreduce_large_replay_byte_equal(n):
+    """The recorded ring graph replayed on a fresh binding is
+    byte-identical to the eager collective on the same data (same hops,
+    same fold order); a size-changed binding raises ScheduleStale on
+    every rank with nothing left in the mailboxes."""
+    eng = ProgressEngine()
+    comm = HostThreadComm(n, engine=eng, pool=StreamPool(), name=f"tcl-rec{n}")
+    comm.start()
+    rng = np.random.default_rng(42 + n)
+    d0 = rng.standard_normal((n, 501)).astype(np.float32)
+    d1 = rng.standard_normal((n, 501)).astype(np.float32)
+    bad = rng.standard_normal((n, 500)).astype(np.float32)
+    results = {}
+
+    def body(h):
+        r = h.rank
+        sched = Schedule(engine=eng, name=f"ar-r{r}")
+        eager0 = threadcoll.allreduce_large(h, d0[r])
+        bracket = sched.record()
+        try:
+            rec = threadcoll.record_allreduce_large(
+                h, sched, d0[r], bind="x", out="y", timeout=_T
+            )
+            bracket.seal()
+        finally:
+            bracket.abort()
+        eager1 = threadcoll.allreduce_large(h, d1[r])
+        ctx = sched.replay(binding={"x": d1[r]}, timeout=_T)
+        results[r] = (eager0, rec, eager1, ctx.outputs["y"])
+        # every rank binds a wrong-size input: the setup op invalidates
+        # before any hop is issued, so nobody is left parked
+        with pytest.raises(ScheduleStale):
+            sched.replay(binding={"x": bad[r]}, timeout=_T)
+
+    _run_ranks(comm, body)
+    leftover = comm.finish(timeout=_T, drain=True)
+    assert leftover == 0, "leaked mailbox messages after record/replay"
+    for r in range(n):
+        eager0, rec, eager1, replayed = results[r]
+        np.testing.assert_array_equal(rec, eager0)  # recording IS an execution
+        np.testing.assert_array_equal(replayed, eager1)  # replay == eager, bitwise
+    eng.stop_all()
+
+
+def test_record_rs_and_ag_standalone():
+    n = 3
+    eng = ProgressEngine()
+    comm = HostThreadComm(n, engine=eng, pool=StreamPool(), name="tcl-rsag")
+    comm.start()
+    rng = np.random.default_rng(11)
+    d0 = rng.standard_normal((n, 64)).astype(np.float32)
+    d1 = rng.standard_normal((n, 64)).astype(np.float32)
+    results = {}
+
+    def body(h):
+        r = h.rank
+        srs = Schedule(engine=eng, name=f"rs-r{r}")
+        b1 = srs.record()
+        try:
+            rec_chunk = threadcoll.record_reduce_scatter(
+                h, srs, d0[r], bind="x", out="c", timeout=_T
+            )
+            b1.seal()
+        finally:
+            b1.abort()
+        eager1 = threadcoll.reduce_scatter(h, d1[r])
+        ctx = srs.replay(binding={"x": d1[r]}, timeout=_T)
+        sag = Schedule(engine=eng, name=f"ag-r{r}")
+        b2 = sag.record()
+        try:
+            rec_full = threadcoll.record_allgather(h, sag, rec_chunk, out="f", timeout=_T)
+            b2.seal()
+        finally:
+            b2.abort()
+        ctx2 = sag.replay(timeout=_T)  # record-time constant input
+        results[r] = (rec_chunk, eager1, ctx.outputs["c"], rec_full, ctx2.outputs["f"])
+
+    _run_ranks(comm, body)
+    assert comm.finish(timeout=_T, drain=True) == 0
+    full0 = np.concatenate([results[r][0] for r in range(n)])
+    for r in range(n):
+        rec_chunk, eager1, replay_chunk, rec_full, replay_full = results[r]
+        np.testing.assert_array_equal(replay_chunk, eager1)
+        np.testing.assert_array_equal(rec_full, full0)
+        np.testing.assert_array_equal(replay_full, full0)
+    eng.stop_all()
+
+
+# ------------------------------------------------ fault-injected allreduce
+
+
+def test_kill_rank_mid_allreduce_raises_cleanly():
+    """A rank killed mid-Rabenseifner: the victim's next hop raises
+    RankKilled, its ring neighbours unwind via RankKilled (send to the
+    corpse) or TimeoutError (recv from it) — and finish(drain=True)
+    leaves zero undrained mailboxes, the sanitizer zero findings."""
+    n = 4
+    engine = ProgressEngine(sanitize=True)
+    pool = StreamPool()
+    clock = VirtualClock()
+    plan = FaultPlan([FaultEvent(0.0, "kill_rank", 2)])
+    comm = HostThreadComm(n, engine=engine, pool=pool, name="tcl-kill")
+    rng = np.random.default_rng(5)
+    data = rng.standard_normal((n, 64 * 1024)).astype(np.float32)  # 256 KiB each
+    outcomes = {}
+
+    def body(h):
+        try:
+            threadcoll.allreduce_large(h, data[h.rank], timeout=2.0)
+            outcomes[h.rank] = "completed"
+        except RankKilled:
+            outcomes[h.rank] = "killed"
+        except TimeoutError:
+            outcomes[h.rank] = "timeout"
+
+    with FaultInjector(plan, clock=clock) as inject:
+        inject.attach_comm(comm)
+        comm.start()
+        _run_ranks(comm, body)
+        leftover = comm.finish(timeout=_T, drain=True)
+    # the ring cannot complete without rank 2: nobody reports success
+    assert all(v in ("killed", "timeout") for v in outcomes.values()), outcomes
+    assert outcomes[2] == "killed"
+    assert leftover >= 0  # partial chunks drained, not stranded
+    assert pool.n_live == 0, "VCI channels leaked after injected failure"
+    engine.stop_all()
+    engine.progress()
+    rep = engine.sanitizer_report()
+    assert rep["findings"] == [], rep["findings"]
+    assert rep["counts"]["live_requests"] == 0, rep["counts"]
+
+
+# ------------------------------------------- hybrid host×mesh composition
+
+
+def test_hybrid_allreduce_large_host_level():
+    """HybridThreadComm.allreduce_large on a 1-device mesh: the host ring
+    RS/AG brackets a local mesh reduction (the multi-device variant of
+    the same path runs in tests/multidevice_checks.py). Every thread
+    holds a (mesh_size, *rest) stacked contribution; every thread gets
+    the full (rest)-shaped sum back."""
+    import jax
+
+    from repro.core.threadcomm import threadcomm_init
+
+    mesh = jax.make_mesh((1,), ("data",))
+    mc = threadcomm_init(mesh, ("data",))
+    host = _comm(3, name="tcl-hybrid")
+    hybrid = mc.with_host_threads(host)
+    vals = [
+        (np.arange(5 * 7, dtype=np.float32).reshape(1, 5, 7) + 1) * (t + 1)
+        for t in range(3)
+    ]
+    expected = sum(vals).sum(axis=0)  # over mesh dim then threads
+    out = {}
+
+    def body(h):
+        out[h.rank] = hybrid.allreduce_large(h, vals[h.rank], timeout=_T)
+        # contract checks on one rank: sum-only, mesh-dim-stacked input
+        if h.rank == 0:
+            with pytest.raises(ValueError, match="psum"):
+                hybrid.allreduce_large(h, vals[0], op="max", timeout=_T)
+            with pytest.raises(ValueError, match="mesh dim"):
+                hybrid.allreduce_large(h, np.ones((2, 4)), timeout=_T)
+
+    _run_ranks(host, body)
+    assert host.finish(timeout=_T, drain=True) == 0
+    for r in range(3):
+        assert out[r].shape == (5, 7)
+        np.testing.assert_allclose(out[r], expected, rtol=1e-5)
+    np.testing.assert_array_equal(out[0], out[1])  # replicated bit-exactly
+    np.testing.assert_array_equal(out[1], out[2])
