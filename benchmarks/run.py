@@ -27,6 +27,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                         pack-engine tiers (naive/coalesced/vectorized);
                         also writes ``BENCH_datatype.json`` (machine-
                         readable MB/s + descriptor-vs-enumerate latency)
+  * serving_load      — Poisson open-loop serving: contiguous vs paged
+                        KV requests/s + p50/p99 token latency, paged
+                        token parity and equal-memory concurrency depth
+                        asserted; also writes ``BENCH_serving.json``
   * kernels_bench     — Pallas kernels vs references (interpret mode)
   * roofline_table    — §Roofline summary from the dry-run artifacts
 """
@@ -47,6 +51,7 @@ def main() -> None:
         progress_overlap,
         roofline_table,
         schedule_replay,
+        serving_load,
         threadcomm_latency,
         threadcomm_rate,
     )
@@ -60,6 +65,7 @@ def main() -> None:
         ("enqueue_window", enqueue_window),
         ("schedule_replay", schedule_replay),
         ("datatype_iov", datatype_iov),
+        ("serving_load", serving_load),
         ("kernels_bench", kernels_bench),
         ("roofline_table", roofline_table),
     ]

@@ -253,12 +253,68 @@ SCHEDULE = {
     "speedup_recorded_over_eager_min": _NUM,
 }
 
+_SERVING_LOAD_ROW = {
+    "requests_per_s": _NUM,
+    "p50_token_latency_ms": _NUM,
+    "p99_token_latency_ms": _NUM,
+    "completed": _NUM,
+    "tokens_out": _NUM,
+    "steps": _NUM,
+    "max_concurrent": _NUM,
+}
+
+# docs/benchmarks.md ## BENCH_serving.json
+SERVING = {
+    "smoke": bool,
+    "config": {
+        "arch": str,
+        "n_requests": _NUM,
+        "rate_rps": _NUM,
+        "max_batch": _NUM,
+        "max_len": _NUM,
+        "page_size": _NUM,
+        "pool_pages": _NUM,
+        "prompt_lens": ListOf(_NUM),
+        "out_range": ListOf(_NUM),
+        "seed": _NUM,
+    },
+    # per engine kind (contiguous / paged), identical Poisson traffic
+    "load": Each(_SERVING_LOAD_ROW),
+    "paged_kv": {
+        "appends": _NUM,
+        "gathers": _NUM,
+        "spilled_pages": _NUM,
+        "reloaded_pages": _NUM,
+        "defrag_moves": _NUM,
+        "peak_pages": _NUM,
+        "pages_in_use": _NUM,
+    },
+    "parity": {"n_requests": _NUM, "token_equal": bool},
+    "spill": {
+        "n_requests": _NUM,
+        "pool_pages": _NUM,
+        "token_equal": bool,
+        "spilled_pages": _NUM,
+        "reloaded_pages": _NUM,
+    },
+    "equal_memory": {
+        "contiguous_slots": _NUM,
+        "paged_dense_slots": _NUM,
+        "pool_pages": _NUM,
+        "kv_bytes_contiguous": _NUM,
+        "kv_bytes_paged": _NUM,
+        "max_concurrent_paged": _NUM,
+        "n_requests": _NUM,
+    },
+}
+
 SCHEMAS = {
     "BENCH_datatype.json": DATATYPE,
     "BENCH_enqueue.json": ENQUEUE,
     "BENCH_threadcomm.json": THREADCOMM,
     "BENCH_progress.json": PROGRESS,
     "BENCH_schedule.json": SCHEDULE,
+    "BENCH_serving.json": SERVING,
 }
 
 # the committed full-size records are mandatory; .smoke siblings are

@@ -51,13 +51,18 @@ fi
 # baseline; progress: per-channel queues wake >2x fewer
 # waiters per notify than stripe CVs and the autotuner matches/beats
 # static placement; schedule: recorded replays beat the eager loops
-# they replace and stay byte-identical — and writes
+# they replace and stay byte-identical; serving: the paged engine stays
+# token-for-token equal to the contiguous engine under Poisson load,
+# the tight-pool spill path round-trips, and paged admission sustains a
+# deeper concurrent set than max_batch contiguous slots at equal
+# memory — and writes
 # BENCH_*.smoke.json, never the committed full-size records)
 python -m benchmarks.datatype_iov --smoke
 python -m benchmarks.enqueue_window --smoke
 python -m benchmarks.threadcomm_rate --smoke
 python -m benchmarks.progress_autotune --smoke
 python -m benchmarks.schedule_replay --smoke
+python -m benchmarks.serving_load --smoke
 
 # schema gate: every BENCH_*.json just written (and the committed
 # full-size records) must match the shapes documented in

@@ -38,15 +38,18 @@ from repro.models.config import ModelConfig
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.parallel import sharding as shd
 
-__all__ = ["make_train_step", "make_serve_step", "Trainer"]
+__all__ = ["make_grad_step", "make_train_step", "make_serve_step", "Trainer"]
 
 
-def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, dp: tuple = ()):
-    """dp: data-parallel mesh axes — used to pin the microbatch sharding
-    after the accumulation reshape (GSPMD would otherwise be free to put
-    the batch sharding on the accumulation dim, serializing DP)."""
+def make_grad_step(cfg: ModelConfig, dp: tuple = ()):
+    """The backward half of the train step: (params, batch) → (grads, loss),
+    with the same microbatch-accumulation scan as :func:`make_train_step`.
+    ``make_train_step`` composes this with ``adamw_update`` under one jit,
+    so factoring it out leaves the fused step's traced HLO unchanged —
+    while the Trainer's windowed grad path can jit JUST this and drive
+    the bucketed allreduce from the host between backward and update."""
 
-    def train_step(params, opt_state, batch):
+    def grad_step(params, batch):
         accum = cfg.grad_accum
         vg = jax.value_and_grad(lambda p, b: api.loss_fn(cfg, p, b), has_aux=True)
         if accum <= 1:
@@ -74,6 +77,19 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, dp: tuple = ()):
             (gsum, lsum), _ = lax.scan(mb, (g0, jnp.float32(0)), micro)
             grads = jax.tree.map(lambda g: g / accum, gsum)
             loss = lsum / accum
+        return grads, loss
+
+    return grad_step
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, dp: tuple = ()):
+    """dp: data-parallel mesh axes — used to pin the microbatch sharding
+    after the accumulation reshape (GSPMD would otherwise be free to put
+    the batch sharding on the accumulation dim, serializing DP)."""
+    grad_step = make_grad_step(cfg, dp)
+
+    def train_step(params, opt_state, batch):
+        grads, loss = grad_step(params, batch)
         new_params, new_state, om = adamw_update(opt_cfg, grads, opt_state, params)
         return new_params, new_state, {"loss": loss, **om}
 
@@ -141,6 +157,10 @@ class Trainer:
         hb_clock=None,
         hb_tick: float = 0.0,
         fault_injector=None,
+        grad_overlap: str = "jit",
+        grad_bucket_bytes: int = 1 << 16,
+        grad_comms: int = 2,
+        grad_window_depth: int = 2,
     ):
         self.cfg, self.opt_cfg, self.data_cfg = cfg, opt_cfg, data_cfg
         self.engine = ProgressEngine()
@@ -167,6 +187,43 @@ class Trainer:
         self.params = api.init_params(cfg, jax.random.key(seed))
         self.opt_state = adamw_init(opt_cfg, self.params)
         self.step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+        # grad_overlap="windowed" drives the REAL backward through the
+        # backward-overlapped bucketed allreduce (ROADMAP item 2's carried
+        # follow-on): the step becomes jitted grad_step → flatten →
+        # bucketed_all_reduce_host(window=) with per-bucket RS admitted as
+        # grads materialize and AGs reaped in completion order → unflatten
+        # → jitted adamw_update. Numerically identical to the fused "jit"
+        # step (RS∘AG on the 1-rank data axis is the identity; multi-rank
+        # it is the bucket's allreduce), pinned by
+        # tests/test_grad_overlap_window.py::test_trainer_windowed_*.
+        if grad_overlap not in ("jit", "windowed"):
+            raise ValueError(
+                f"grad_overlap must be 'jit' or 'windowed', got {grad_overlap!r}"
+            )
+        self.grad_overlap = grad_overlap
+        if grad_overlap == "windowed":
+            from repro.core.enqueue import OffloadWindow
+            from repro.core.streams import stream_comm_create
+            from repro.optim.grad_overlap import build_buckets
+
+            self._grad_fn = jax.jit(make_grad_step(cfg))
+            self._update_fn = jax.jit(
+                lambda g, o, p: adamw_update(opt_cfg, g, o, p)
+            )
+            mesh = jax.make_mesh((1,), ("data",))
+            self._grad_comms = [
+                stream_comm_create(mesh, ("data",), stream_create(name=f"grad{i}"))
+                for i in range(max(1, grad_comms))
+            ]
+            self._grad_window = OffloadWindow(
+                stream_create(name="grad-win"),
+                depth=grad_window_depth,
+                engine=self.engine,
+                name="grad-win",
+            )
+            self._grad_plan = build_buckets(
+                jax.tree.leaves(self.params), bucket_bytes=grad_bucket_bytes
+            )
         self.start_step = 0
         # elastic state: the mesh the run believes in, the monitored rank
         # set, and the detect → replan → reshard → resume machinery. The
@@ -392,6 +449,35 @@ class Trainer:
         )
         return {"leaf": name, "grid": grid, "shards": shards}, stats
 
+    def _windowed_step(self, batch) -> Dict:
+        """One step on the windowed grad path: jitted backward → flatten →
+        per-bucket reduce-scatter admitted through the OffloadWindow as
+        the grads materialize (allgathers reaped in completion order) →
+        unflatten → jitted optimizer update."""
+        from repro.optim.grad_overlap import (
+            bucketed_all_reduce_host,
+            flatten_grads,
+            unflatten_grads,
+        )
+
+        grads, loss = self._grad_fn(self.params, batch)
+        flat = flatten_grads(grads)
+        reduced = bucketed_all_reduce_host(
+            flat,
+            self._grad_plan,
+            self._grad_comms,
+            engine=self.engine,
+            window=self._grad_window,
+            # the materialize hook is the backward seam: bucket i's RS
+            # may not read flat before the producing compute lands
+            materialize=lambda i: jax.block_until_ready(flat),
+        )
+        grads = unflatten_grads(reduced, grads)
+        self.params, self.opt_state, om = self._update_fn(
+            grads, self.opt_state, self.params
+        )
+        return {"loss": loss, **om}
+
     def run(self, steps: int, log_every: int = 10):
         # background progress only where async work is actually in flight —
         # the paper's control knob (ext. 6), now driven by stats(): the
@@ -426,9 +512,12 @@ class Trainer:
                     batch["img_embeds"] = batch["img_embeds"].astype(self.cfg.cdtype)
                 if "enc_frames" in batch:
                     batch["enc_frames"] = batch["enc_frames"].astype(self.cfg.cdtype)
-                self.params, self.opt_state, metrics = self.step_fn(
-                    self.params, self.opt_state, batch
-                )
+                if self.grad_overlap == "windowed":
+                    metrics = self._windowed_step(batch)
+                else:
+                    self.params, self.opt_state, metrics = self.step_fn(
+                        self.params, self.opt_state, batch
+                    )
                 loss = float(metrics["loss"])
                 dt_step = time.perf_counter() - t0
                 durations = {}

@@ -32,7 +32,7 @@ from repro.core.streams import MPIXStream, STREAM_NULL
 from repro.models import api
 from repro.models.config import ModelConfig
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "PagedServeEngine"]
 
 
 @dataclass
@@ -85,7 +85,20 @@ class ServeEngine:
 
     # -- admission ---------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16, eos_id: int = -1) -> Request:
-        req = Request(next(self._rid), np.asarray(prompt, np.int32), max_new_tokens, eos_id)
+        prompt = np.asarray(prompt, np.int32)
+        # validate here, where the caller can still handle it — an
+        # over-length prompt admitted into a slot lands pos at/past the
+        # cache bound and silently truncates the request to <= 1 token
+        if prompt.ndim != 1 or prompt.shape[0] < 1:
+            raise ValueError(f"prompt must be a non-empty 1-D token array, got shape {prompt.shape}")
+        if prompt.shape[0] >= self.max_len:
+            raise ValueError(
+                f"prompt of {prompt.shape[0]} tokens does not fit max_len="
+                f"{self.max_len} (need len(prompt) < max_len to decode at all)"
+            )
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        req = Request(next(self._rid), prompt, max_new_tokens, eos_id)
         if self.progress_engine is not None:
             # completion handle: externally completed by step() at EOS — no
             # poll_fn, so a blocked wait_all parks on the CV instead of
@@ -122,22 +135,47 @@ class ServeEngine:
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
+    def _idle(self) -> bool:
+        """No work left anywhere: the run loops exit when this holds."""
+        return not self.queue and all(r is None for r in self.slot_req)
+
+    def _prefill_request(self, req: Request):
+        """Run the per-request prefill, record its token, and apply the
+        admission-time termination check: the prefill-produced token IS
+        the request's first output token, so EOS/limit must be checked
+        HERE — deferring to ``_advance_slot`` (the pre-fix behavior) let
+        ``max_new_tokens=1`` and eos-on-first-token requests decode one
+        extra step and emit one extra token. Returns ``(done, cache1)``;
+        a done request must not occupy a slot."""
+        last_logits, cache1 = self._prefill(self.params, {"tokens": req.prompt[None, :]})
+        tok = int(np.argmax(np.asarray(last_logits[0])))
+        req.out_tokens.append(tok)
+        if tok == req.eos_id or len(req.out_tokens) >= req.max_new_tokens:
+            req.done = True
+            if req.grequest is not None:
+                req.grequest.complete()
+            return True, cache1
+        return False, cache1
+
     def _admit(self) -> None:
         for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.popleft()
-            last_logits, cache1 = self._prefill(self.params, {"tokens": req.prompt[None, :]})
+            while True:
+                if not self.queue:
+                    return
+                req = self.queue.popleft()
+                done, cache1 = self._prefill_request(req)
+                if not done:
+                    break
+                # finished at admission (EOS/limit on the prefill token):
+                # the slot stays free for the next queued request
             # splice the single-row cache into this slot (batch dim = axis 1
             # for stacked caches, axis 0 inside per-layer leaves of dim B..)
             self.cache = jax.tree.map(
                 lambda full, one: _splice(full, one, slot), self.cache, cache1
             )
-            tok = int(np.argmax(np.asarray(last_logits[0])))
-            req.out_tokens.append(tok)
             self.slot_req[slot] = req
             self.pos[slot] = req.prompt.shape[0]
-            self.cur_tok[slot] = tok
+            self.cur_tok[slot] = req.out_tokens[-1]
 
     # -- decode loop ----------------------------------------------------------
     def _decode_active(self):
@@ -231,7 +269,7 @@ class ServeEngine:
 
     def run_until_done(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
-            if not self.queue and all(r is None for r in self.slot_req):
+            if self._idle():
                 return
             self.step()
 
@@ -270,7 +308,7 @@ class ServeEngine:
                 for _ in range(max_steps):
                     if rank == 0:
                         try:
-                            if not self.queue and all(r is None for r in self.slot_req):
+                            if self._idle():
                                 payload = None
                             else:
                                 self._admit()
@@ -393,7 +431,7 @@ class ServeEngine:
                 for _ in range(max_steps):
                     if rank == 0:
                         try:
-                            if not self.queue and all(r is None for r in self.slot_req):
+                            if self._idle():
                                 payload = None
                             else:
                                 self._admit()
@@ -465,3 +503,210 @@ def _splice(full, one, slot: int):
     if full.ndim == one.ndim and one.shape[1] == 1:
         return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype), slot, axis=1)
     raise ValueError(f"unexpected cache leaf shapes {full.shape} vs {one.shape}")
+
+
+class PagedServeEngine(ServeEngine):
+    """:class:`ServeEngine` over a paged KV store (``serving.paged_kv``).
+
+    The dense ``(max_batch, max_len)`` cache remains the decode working
+    set — the batchwide jitted ``decode_step`` is unchanged, so resident
+    requests produce token-for-token the contiguous engine's stream —
+    but the *authoritative* KV bytes live in fixed-size pages with a
+    per-request page table:
+
+    * admission is no longer bounded by ``max_batch``: a queued request
+      is **prefilled ahead** into pages (actual prompt length, rounded
+      up to one page) and parks awaiting a slot; activation scatters its
+      pages into the freed slot row (a datatype-described gather, no
+      re-prefill) and decode resumes where the prefill token left off.
+    * every decode step appends the newly written position of each
+      active slot to its pages (the decode-step page view), so a done
+      request's release returns exactly its pages to the pool.
+    * pool pressure spills cold prefix pages of parked requests (the
+      youngest-parked first — it activates last) to the host cold store
+      through the spill :class:`~repro.core.enqueue.OffloadWindow`, and
+      activation reloads them.
+
+    FIFO order is preserved end to end (parked requests are by
+    construction older than queued ones), which is what makes the
+    paged-vs-contiguous token parity exact under identical traffic.
+    Only position-indexed caches page (dense attention); the paged
+    store's constructor rejects ring-buffer windowed layouts.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        max_batch: int = 8,
+        max_len: int = 512,
+        progress_engine: Optional[ProgressEngine] = None,
+        stream: MPIXStream = STREAM_NULL,
+        step_schedule=False,
+        page_size: int = 16,
+        pool_pages: Optional[int] = None,
+        spill_parked: bool = False,
+    ):
+        super().__init__(
+            cfg,
+            params,
+            max_batch=max_batch,
+            max_len=max_len,
+            progress_engine=progress_engine,
+            stream=stream,
+            step_schedule=step_schedule,
+        )
+        from repro.serving.paged_kv import PagedKVCache
+
+        if pool_pages is None:
+            # default: the bytes the contiguous engine would reserve
+            pool_pages = max_batch * (-(-max_len // page_size))
+        self.kv = PagedKVCache(
+            self.cache,
+            max_len,
+            page_size=page_size,
+            num_pages=pool_pages,
+            engine=progress_engine,
+            spill_stream=stream,
+        )
+        self.parked: Deque[Request] = collections.deque()
+        self.spill_parked = spill_parked
+        # growth headroom withheld from prefill-ahead admission: every
+        # active slot may cross a page boundary at its next decode step
+        self._page_reserve = max_batch
+        self.max_concurrent = 0
+
+    # -- pool pressure -----------------------------------------------------
+    def _make_room(self, need: int) -> bool:
+        """Free ``need`` pool pages by spilling cold prefix pages of parked
+        requests, youngest first (the last to activate). Returns whether
+        the pool now has ``need`` free pages."""
+        if self.kv.free_pages >= need:
+            return True
+        self.kv.reclaim(wait=True)
+        for req in reversed(self.parked):
+            if self.kv.free_pages >= need:
+                break
+            short = need - self.kv.free_pages
+            if self.kv.spillable(req.rid) and self.kv.spill_prefix(req.rid, max_pages=short):
+                self.kv.reclaim(wait=True)
+        return self.kv.free_pages >= need
+
+    # -- admission ---------------------------------------------------------
+    def _activate(self, slot: int, req: Request) -> None:
+        """Scatter a parked request's pages into ``slot`` and resume
+        decode after its prefill token — no re-prefill."""
+        from repro.serving.paged_kv import PoolExhausted
+
+        try:
+            cache1 = self.kv.gather(req.rid)
+        except PoolExhausted:
+            # reload may need pool rows for the spilled pages: make room
+            # at the expense of younger parked requests and retry once
+            self._make_room(sum(1 for p in self.kv.page_table(req.rid) if p is None))
+            cache1 = self.kv.gather(req.rid)
+        self.cache = jax.tree.map(lambda full, one: _splice(full, one, slot), self.cache, cache1)
+        self.slot_req[slot] = req
+        self.pos[slot] = self.kv.length(req.rid)
+        self.cur_tok[slot] = req.out_tokens[-1]
+
+    def _prefill_paged(self, req: Request) -> bool:
+        """Prefill + write the prompt span into fresh pages. Returns False
+        when the request finished at admission (EOS/limit on the prefill
+        token — the same check the contiguous engine applies) and
+        consumed no pages."""
+        done, cache1 = self._prefill_request(req)
+        if done:
+            return False
+        self.kv.alloc(req.rid)
+        # prefill splice: the whole prompt span, one descriptor pack per
+        # leaf per page chunk (B=1 source — slot 0 of the prefill cache)
+        self.kv.append(req.rid, cache1, 0, 0, int(req.prompt.shape[0]))
+        return True
+
+    def _admit(self) -> None:
+        self.kv.reclaim()  # harvest completed spill copies
+        # keep decode growth safe: every active slot sitting on a page
+        # boundary allocates at its next append
+        crossing = sum(
+            1
+            for i, r in enumerate(self.slot_req)
+            if r is not None and self.pos[i] % self.kv.page_size == 0
+        )
+        if crossing:
+            self._make_room(crossing)
+        for slot in self._free_slots():
+            if self.parked:
+                self._activate(slot, self.parked.popleft())
+                continue
+            admitted = False
+            while self.queue:
+                nxt = self.queue[0]
+                need = self.kv.pages_for(int(nxt.prompt.shape[0]))
+                if self.kv.free_pages < need and not self._make_room(need):
+                    break  # pool full even after spilling: stop admitting
+                req = self.queue.popleft()
+                if not self._prefill_paged(req):
+                    continue  # done at admission; slot stays free
+                cache1 = self.kv.gather(req.rid)
+                self.cache = jax.tree.map(
+                    lambda full, one: _splice(full, one, slot), self.cache, cache1
+                )
+                self.slot_req[slot] = req
+                self.pos[slot] = req.prompt.shape[0]
+                self.cur_tok[slot] = req.out_tokens[-1]
+                admitted = True
+                break
+            if not admitted and not self.parked:
+                break
+        # prefill-ahead: park queued requests in pages while the pool has
+        # room beyond the growth reserve — admission depth is now a page
+        # budget (actual lengths), not a slot count (max_len reservations)
+        while self.queue:
+            nxt = self.queue[0]
+            need = self.kv.pages_for(int(nxt.prompt.shape[0]))
+            if self.kv.free_pages - self._page_reserve < need:
+                break
+            req = self.queue.popleft()
+            if not self._prefill_paged(req):
+                continue
+            self.parked.append(req)
+            if self.spill_parked:
+                # park cold: move the full prefix pages to the cold store
+                # right away, keeping only the partial tail resident
+                self.kv.spill_prefix(req.rid)
+        concurrent = sum(1 for r in self.slot_req if r is not None) + len(self.parked)
+        if concurrent > self.max_concurrent:
+            self.max_concurrent = concurrent
+
+    def _idle(self) -> bool:
+        return not self.parked and super()._idle()
+
+    # -- decode bookkeeping -------------------------------------------------
+    def _advance_slot(self, i: int, tok: int) -> None:
+        """Mirror the decode step's newly written position into the
+        request's pages (the decode-step page view) before the base
+        bookkeeping advances ``pos`` — the span ``[pos, pos+1)`` of slot
+        ``i`` is exactly what the jitted decode just wrote. Idempotent
+        under the elastic loop's transactional repair (re-appending an
+        already-stored span overwrites byte-identically)."""
+        from repro.serving.paged_kv import PoolExhausted
+
+        req = self.slot_req[i]
+        try:
+            self.kv.append(req.rid, self.cache, i, int(self.pos[i]), 1)
+        except PoolExhausted:
+            self._make_room(1)
+            self.kv.append(req.rid, self.cache, i, int(self.pos[i]), 1)
+        super()._advance_slot(i, tok)
+        if req.done:
+            self.kv.release(req.rid)
+
+    def stats(self) -> dict:
+        return {
+            "max_concurrent": self.max_concurrent,
+            "parked": len(self.parked),
+            "active": sum(1 for r in self.slot_req if r is not None),
+            "queued": len(self.queue),
+            "kv": self.kv.stats(),
+        }

@@ -1,0 +1,488 @@
+"""Paged KV cache: datatype-described page gather/scatter (paper ext. 2).
+
+The serving engine's contiguous design reserves ``max_len`` cache
+positions per slot for the whole lifetime of a request — memory scales
+with the *worst-case* length of ``max_batch`` requests. This module
+splits the KV store into fixed-size **pages** of ``page_size`` logical
+token positions, owned per-request through a page table, so memory
+scales with the *actual* tokens held and admission is no longer bounded
+by ``max_batch`` (see :class:`~repro.serving.engine.PagedServeEngine`).
+
+Every movement of KV bytes is described by a ``core.datatype``
+descriptor and driven through the vectorized iovec engine — the paper's
+ext. 2 pitch (datatypes as a general-purpose data-layout API beyond
+communication) applied to cache management:
+
+* **token-span gather/scatter** — a span of positions ``[p0, p0+n)`` of
+  one batch slot is a ``subarray`` of each cache leaf viewed as
+  ``(reps, B, T, K)`` (``K`` = trailing head elems); a page's interior
+  is the matching ``(reps, page_size, K)`` subarray of its per-leaf
+  block. ``pack`` on one side feeds ``unpack`` on the other, both
+  through the uniform-layout strided fast path (the descriptors are
+  two-level nested vectors, exactly the paper's flagship example).
+  Prefill splice (prompt-length spans) and decode-step page views
+  (1-token spans after each step) are the same descriptor family.
+* **defrag** — live pages are compacted to the head of the pool with one
+  ``hindexed`` pack over the pool bytes (block per page, displacement =
+  old physical row) unpacked through a ``contiguous`` descriptor.
+* **eviction / reload** — cold pages spill to a host-side cold store
+  and return, each copy admitted as a generalized request through an
+  :class:`~repro.core.enqueue.OffloadWindow` (bounded in-flight,
+  completion-order reaping; the same backpressure bracket checkpoint
+  saves use).
+
+Layout of one page (``page_bytes = page_size * token_bytes``)::
+
+    [ leaf0: (reps0, page_size, K0) | leaf1: (reps1, page_size, K1) | ... ]
+
+Only position-indexed caches are supported: every leaf must carry the
+full ``max_len`` on axis 2 (dense attention). Ring-buffer windowed
+layers and state-space leaves keep position-dependent aliasing the page
+map cannot express — the constructor rejects them up front.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import datatype as dtt
+from repro.core.enqueue import OffloadWindow
+from repro.core.progress import ProgressEngine
+from repro.core.streams import MPIXStream, STREAM_NULL
+
+__all__ = ["PagedKVCache", "PagedKVError", "PoolExhausted"]
+
+
+class PagedKVError(ValueError):
+    """Unsupported cache layout or a page-table contract violation."""
+
+
+class PoolExhausted(PagedKVError):
+    """No free page and nothing reclaimable — the caller must spill or
+    shed load."""
+
+
+@dataclass(frozen=True)
+class _LeafSpec:
+    """Static layout of one cache leaf inside the page format."""
+
+    reps: int  # leaves stacked on axis 0 (layers per group)
+    T: int  # positions (== max_len, checked)
+    K: int  # trailing elems per position (n_kv * head_dim, or 1)
+    tail: Tuple[int, ...]  # trailing dims, for reconstruction
+    dtype: object  # numpy dtype (ml_dtypes-aware)
+    itemsize: int
+    rec_bytes: int  # bytes of this leaf's share of one token record
+    block_off: int  # byte offset of this leaf's block inside a page
+    block_bytes: int  # page_size * rec_bytes
+
+
+class PagedKVCache:
+    """Fixed-size-page KV store with per-request page tables.
+
+    ``template`` is a live cache pytree (any batch size) used only to
+    derive the per-leaf layout; the pool itself is host memory
+    (``num_pages`` rows of ``page_bytes``). Requests ``alloc`` a table,
+    ``append`` token spans gathered from a batch cache, and ``gather``
+    back a B=1 cache pytree for slot activation. All four data paths —
+    append, gather, :meth:`defrag`, spill/reload — move bytes through
+    ``core.datatype`` descriptors only (no ad-hoc indexing).
+    """
+
+    def __init__(
+        self,
+        template,
+        max_len: int,
+        page_size: int = 16,
+        num_pages: int = 64,
+        engine: Optional[ProgressEngine] = None,
+        spill_stream: MPIXStream = STREAM_NULL,
+        spill_depth: int = 2,
+    ):
+        if page_size < 1:
+            raise PagedKVError(f"page_size must be >= 1, got {page_size}")
+        if num_pages < 1:
+            raise PagedKVError(f"num_pages must be >= 1, got {num_pages}")
+        leaves, self._treedef = jax.tree_util.tree_flatten(template)
+        if not leaves:
+            raise PagedKVError("cache template has no leaves")
+        specs: List[_LeafSpec] = []
+        off = 0
+        for leaf in leaves:
+            if leaf.ndim < 3 or leaf.shape[2] != max_len:
+                raise PagedKVError(
+                    f"paged KV needs position-indexed leaves (axis 2 == max_len="
+                    f"{max_len}); got shape {leaf.shape} — ring-buffer windowed "
+                    "or state-space caches are not pageable"
+                )
+            tail = tuple(int(d) for d in leaf.shape[3:])
+            K = int(math.prod(tail)) if tail else 1
+            dtype = np.dtype(leaf.dtype)
+            rec = leaf.shape[0] * K * dtype.itemsize
+            specs.append(
+                _LeafSpec(
+                    reps=int(leaf.shape[0]),
+                    T=max_len,
+                    K=K,
+                    tail=tail,
+                    dtype=dtype,
+                    itemsize=dtype.itemsize,
+                    rec_bytes=rec,
+                    block_off=off,
+                    block_bytes=page_size * rec,
+                )
+            )
+            off += page_size * rec
+        self._specs = specs
+        self.max_len = max_len
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.token_bytes = sum(s.rec_bytes for s in specs)
+        self.page_bytes = off
+        if num_pages < self.pages_for(max_len):
+            raise PagedKVError(
+                f"pool of {num_pages} pages cannot hold one max_len={max_len} "
+                f"request ({self.pages_for(max_len)} pages)"
+            )
+        self._pool = np.zeros((num_pages, self.page_bytes), np.uint8)
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))  # pop() = lowest last
+        self._tables: Dict[int, List[Optional[int]]] = {}  # rid -> physical page per logical idx (None = spilled)
+        self._len: Dict[int, int] = {}  # rid -> tokens stored
+        self._cold: Dict[Tuple[int, int], np.ndarray] = {}  # (rid, logical idx) -> page bytes
+        self._lock = threading.RLock()
+        self.engine = engine
+        self._window = (
+            OffloadWindow(spill_stream, depth=spill_depth, engine=engine, name="kv-spill")
+            if engine is not None
+            else None
+        )
+        self._spill_stream = spill_stream
+        # counters
+        self._appends = 0
+        self._gathers = 0
+        self._spilled_pages = 0
+        self._reloaded_pages = 0
+        self._defrag_moves = 0
+        self._peak_pages = 0
+
+    # -- geometry ---------------------------------------------------------
+    def pages_for(self, ntok: int) -> int:
+        return -(-max(0, int(ntok)) // self.page_size)
+
+    @property
+    def free_pages(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - self.free_pages
+
+    def length(self, rid: int) -> int:
+        return self._len[rid]
+
+    def page_table(self, rid: int) -> List[Optional[int]]:
+        with self._lock:
+            return list(self._tables[rid])
+
+    # -- descriptors (the only addressing in this module) -----------------
+    def _cache_span_dt(self, spec: _LeafSpec, B: int, slot: int, p0: int, ntok: int):
+        """Positions ``[p0, p0+ntok)`` of batch row ``slot`` inside a cache
+        leaf viewed as ``(reps, B, T, K)``. Packed order (rep, pos, K)."""
+        return dtt.subarray(
+            (spec.reps, B, spec.T, spec.K),
+            (spec.reps, 1, ntok, spec.K),
+            (0, slot, p0, 0),
+            dtt.predefined(spec.itemsize),
+        )
+
+    def _page_span_dt(self, spec: _LeafSpec, a: int, ntok: int):
+        """The matching span inside a page's per-leaf ``(reps, page_size,
+        K)`` block, starting at page-relative position ``a``."""
+        return dtt.subarray(
+            (spec.reps, self.page_size, spec.K),
+            (spec.reps, ntok, spec.K),
+            (0, a, 0),
+            dtt.predefined(spec.itemsize),
+        )
+
+    def _leaf_block(self, pid: int, spec: _LeafSpec) -> np.ndarray:
+        return self._pool[pid, spec.block_off : spec.block_off + spec.block_bytes]
+
+    def _chunks(self, p0: int, ntok: int):
+        """Split ``[p0, p0+ntok)`` into page-aligned (logical_page, a, n)."""
+        p = p0
+        end = p0 + ntok
+        while p < end:
+            j, a = divmod(p, self.page_size)
+            n = min(end - p, self.page_size - a)
+            yield j, a, n
+            p += n
+
+    # -- allocation --------------------------------------------------------
+    def alloc(self, rid: int) -> None:
+        with self._lock:
+            if rid in self._tables:
+                raise PagedKVError(f"rid {rid} already allocated")
+            self._tables[rid] = []
+            self._len[rid] = 0
+
+    def release(self, rid: int) -> None:
+        with self._lock:
+            table = self._tables.pop(rid, None)
+            self._len.pop(rid, None)
+            if table is None:
+                return
+            for j, pid in enumerate(table):
+                if pid is not None:
+                    self._free.append(pid)
+                self._cold.pop((rid, j), None)
+
+    def _alloc_page(self, rid: int) -> int:
+        with self._lock:
+            if not self._free:
+                raise PoolExhausted(
+                    f"KV pool exhausted ({self.num_pages} pages in use); spill "
+                    "parked requests or grow the pool"
+                )
+            pid = self._free.pop()
+            self._tables[rid].append(pid)
+            self._peak_pages = max(self._peak_pages, self.num_pages - len(self._free))
+            return pid
+
+    # -- token-span write: prefill splice + decode-step page views ---------
+    def append(self, rid: int, cache, slot: int, pos0: int, ntok: int) -> None:
+        """Gather positions ``[pos0, pos0+ntok)`` of batch row ``slot``
+        from ``cache`` (any pytree with this store's leaf layout; B=1
+        prefill caches and the full batch cache both work) into ``rid``'s
+        pages. Append-only past the stored length; re-writing an
+        already-stored span is allowed and overwrites in place (the
+        elastic loop's transactional step repair may replay a step)."""
+        with self._lock:
+            cur = self._len[rid]
+            if pos0 > cur:
+                raise PagedKVError(f"append at {pos0} past stored length {cur}")
+            if pos0 < cur and pos0 + ntok > cur:
+                raise PagedKVError("span straddles the stored length")
+            new_len = max(cur, pos0 + ntok)
+            while len(self._tables[rid]) < self.pages_for(new_len):
+                self._alloc_page(rid)
+            table = self._tables[rid]
+            leaves = jax.tree_util.tree_leaves(cache)
+            if len(leaves) != len(self._specs):
+                raise PagedKVError("cache tree does not match the paged template")
+            for j, a, n in self._chunks(pos0, ntok):
+                pid = table[j]
+                if pid is None:
+                    raise PagedKVError(f"append into spilled page {j} of rid {rid}")
+                p = j * self.page_size + a  # absolute position of this chunk
+                for spec, leaf in zip(self._specs, leaves):
+                    buf = np.asarray(leaf)
+                    src = self._cache_span_dt(spec, buf.shape[1], slot, p, n)
+                    packed = dtt.pack(buf, src)
+                    dtt.unpack(packed, self._page_span_dt(spec, a, n), self._leaf_block(pid, spec))
+            self._len[rid] = new_len
+            self._appends += 1
+
+    # -- token-span read: slot activation ----------------------------------
+    def gather(self, rid: int):
+        """Scatter ``rid``'s pages into a fresh B=1 cache pytree (positions
+        past the stored length are zero, matching ``init_cache``). Reloads
+        any spilled pages first."""
+        self.ensure_resident(rid)
+        with self._lock:
+            length = self._len[rid]
+            table = self._tables[rid]
+            out = [
+                np.zeros((spec.reps, 1, spec.T) + spec.tail, spec.dtype)
+                for spec in self._specs
+            ]
+            for j, a, n in self._chunks(0, length):
+                pid = table[j]
+                for spec, dst in zip(self._specs, out):
+                    packed = dtt.pack(self._leaf_block(pid, spec), self._page_span_dt(spec, a, n))
+                    dtt.unpack(
+                        packed,
+                        self._cache_span_dt(spec, 1, 0, j * self.page_size + a, n),
+                        dst,
+                    )
+            self._gathers += 1
+        import jax.numpy as jnp
+
+        return jax.tree_util.tree_unflatten(self._treedef, [jnp.asarray(o) for o in out])
+
+    # -- eviction: spill/reload through the offload window ------------------
+    def _window_copy(self, fn, value):
+        """Run ``fn`` (a host byte copy) as a generalized request admitted
+        through the spill window — bounded in-flight copies, completion-
+        order reaping — or inline when no engine is attached."""
+        if self._window is None:
+            fn()
+            return None
+        with self._window.issue() as submit:
+            g = self.engine.grequest_start(stream=self._spill_stream, name="kv-spill")
+
+            def run():
+                try:
+                    fn()
+                finally:
+                    g.complete()
+
+            t = threading.Thread(target=run, daemon=True, name="kv-spill-copy")
+            t.start()
+            return submit(g, value=value)
+
+    def spillable(self, rid: int) -> int:
+        """Resident *full* pages of ``rid`` (the cold-prefix candidates —
+        a partially filled tail page stays resident for appends)."""
+        with self._lock:
+            full = self._len[rid] // self.page_size
+            return sum(1 for pid in self._tables[rid][:full] if pid is not None)
+
+    def spill_prefix(self, rid: int, max_pages: Optional[int] = None) -> int:
+        """Spill up to ``max_pages`` cold prefix pages (lowest logical
+        index first) of ``rid`` to the host cold store, each copy through
+        the offload window. Pool rows are freed by :meth:`reclaim` once
+        the copies complete. Returns the number of spills submitted."""
+        submitted = 0
+        with self._lock:
+            full = self._len[rid] // self.page_size
+            table = self._tables[rid]
+            for j in range(full):
+                if max_pages is not None and submitted >= max_pages:
+                    break
+                pid = table[j]
+                if pid is None:
+                    continue
+                # gather the page's bytes through a (trivially contiguous)
+                # descriptor into the cold store; the pool row stays owned
+                # until reclaim() observes the completed copy
+                page_dt = dtt.contiguous(self.page_bytes, dtt.predefined(1))
+                row = self._pool[pid]
+                dst = np.empty(self.page_bytes, np.uint8)
+                key = (rid, j)
+
+                def copy(row=row, dst=dst, key=key, page_dt=page_dt):
+                    dst[...] = dtt.pack(row, page_dt)
+                    self._cold[key] = dst
+
+                table[j] = None
+                self._window_copy(copy, value=("spill", rid, j, pid))
+                if self._window is None:
+                    self._free.append(pid)
+                submitted += 1
+                self._spilled_pages += 1
+        return submitted
+
+    def reclaim(self, wait: bool = False) -> int:
+        """Harvest completed spill copies, returning their pool rows to
+        the free list. ``wait=True`` drains the window first."""
+        if self._window is None:
+            return 0
+        slots = self._window.drain() if wait else self._window.reap()
+        freed = 0
+        with self._lock:
+            for s in slots:
+                kind = s.value[0]
+                if kind == "spill":
+                    _, _rid, _j, pid = s.value
+                    self._free.append(pid)
+                    freed += 1
+        return freed
+
+    def ensure_resident(self, rid: int) -> int:
+        """Reload every spilled page of ``rid`` from the cold store into
+        fresh pool rows (copies through the offload window, drained before
+        returning — gather needs the bytes). Returns pages reloaded."""
+        self.reclaim(wait=self._window is not None and self._window.in_flight() > 0)
+        reloaded = 0
+        with self._lock:
+            table = self._tables[rid]
+            for j, pid in enumerate(table):
+                if pid is not None:
+                    continue
+                new_pid = self._alloc_page_for(rid, j)
+                data = self._cold.pop((rid, j))
+                page_dt = dtt.contiguous(self.page_bytes, dtt.predefined(1))
+                row = self._pool[new_pid]
+
+                def copy(row=row, data=data, page_dt=page_dt):
+                    dtt.unpack(data, page_dt, row)
+
+                self._window_copy(copy, value=("reload", rid, j, new_pid))
+                reloaded += 1
+                self._reloaded_pages += 1
+        if self._window is not None and reloaded:
+            self._window.wait_all()
+            self.reclaim()
+        return reloaded
+
+    def _alloc_page_for(self, rid: int, j: int) -> int:
+        if not self._free:
+            raise PoolExhausted(
+                f"KV pool exhausted reloading rid {rid} page {j}; spill more "
+                "parked requests or grow the pool"
+            )
+        pid = self._free.pop()
+        self._tables[rid][j] = pid
+        self._peak_pages = max(self._peak_pages, self.num_pages - len(self._free))
+        return pid
+
+    # -- defrag ------------------------------------------------------------
+    def defrag(self) -> dict:
+        """Compact every live page to the head of the pool, in (rid,
+        logical-index) order: one ``hindexed`` pack over the pool bytes
+        (displacement = old physical row) unpacked contiguously. Page
+        tables are rewritten; the free list becomes one dense tail run.
+        Requires no spill copies in flight (drains the window)."""
+        self.reclaim(wait=self._window is not None and self._window.in_flight() > 0)
+        with self._lock:
+            order: List[Tuple[int, int, int]] = []  # (rid, j, old pid)
+            for rid in sorted(self._tables):
+                for j, pid in enumerate(self._tables[rid]):
+                    if pid is not None:
+                        order.append((rid, j, pid))
+            nlive = len(order)
+            moves = sum(1 for new, (_r, _j, old) in enumerate(order) if new != old)
+            if moves:
+                src = dtt.hindexed(
+                    [self.page_bytes] * nlive,
+                    [pid * self.page_bytes for (_r, _j, pid) in order],
+                    dtt.predefined(1),
+                )
+                packed = dtt.pack(self._pool, src)
+                dst = dtt.contiguous(nlive * self.page_bytes, dtt.predefined(1))
+                dtt.unpack(packed, dst, self._pool)
+                for new, (rid, j, _old) in enumerate(order):
+                    self._tables[rid][j] = new
+            self._free = list(range(self.num_pages - 1, nlive - 1, -1))
+            self._defrag_moves += moves
+            return {"live_pages": nlive, "moves": moves}
+
+    # -- instrumentation ---------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            out = {
+                "num_pages": self.num_pages,
+                "page_size": self.page_size,
+                "page_bytes": self.page_bytes,
+                "token_bytes": self.token_bytes,
+                "pages_in_use": self.num_pages - len(self._free),
+                "peak_pages": self._peak_pages,
+                "live_requests": len(self._tables),
+                "appends": self._appends,
+                "gathers": self._gathers,
+                "spilled_pages": self._spilled_pages,
+                "reloaded_pages": self._reloaded_pages,
+                "defrag_moves": self._defrag_moves,
+                "cold_pages": len(self._cold),
+            }
+        if self._window is not None:
+            out["spill_window"] = self._window.stats(engine=False)
+        return out

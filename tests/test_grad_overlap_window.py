@@ -233,3 +233,82 @@ def test_recover_rerecords_grad_bucket_schedule_byte_equal():
     finally:
         tr.heartbeat.stop()
         tr.engine.stop_all()
+
+
+# ------------------------------------------- trainer drives the window
+
+
+def _mk_trainer(mode, **kw):
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    return Trainer(
+        cfg,
+        AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=3),
+        DataConfig(batch=4, seq=16, seed=4),
+        seed=0,
+        autotune=False,
+        grad_overlap=mode,
+        grad_bucket_bytes=1 << 14,
+        **kw,
+    )
+
+
+def test_trainer_windowed_byte_equal_to_split_eager_step():
+    """grad_overlap='windowed' drives the REAL backward through the
+    window: the trainer's step must be byte-identical to the reference
+    split step (same jitted grad fn -> direct adamw update) — the
+    windowed RS∘AG round trip adds no rounding."""
+    from repro.launch.train import make_grad_step
+    from repro.optim.adamw import adamw_init, adamw_update
+
+    tr = _mk_trainer("windowed")
+    cfg, opt_cfg = tr.cfg, tr.opt_cfg
+    try:
+        # reference: identical batches (SyntheticPipeline is deterministic
+        # across instances), grads straight into the optimizer
+        gf = jax.jit(make_grad_step(cfg))
+        uf = jax.jit(lambda g, o, p: adamw_update(opt_cfg, g, o, p))
+        ref_p = jax.tree.map(lambda x: x, tr.params)
+        ref_o = adamw_init(opt_cfg, ref_p)
+        ref_losses = []
+        for step in range(3):
+            tr.pipeline.prefetch(step)
+            batch = {k: jnp.asarray(v) for k, v in tr.pipeline.get_batch(step).items()}
+            g, loss = gf(ref_p, batch)
+            ref_p, ref_o, _ = uf(g, ref_o, ref_p)
+            ref_losses.append(float(loss))
+
+        hist = tr.run(3, log_every=100)
+        assert hist == ref_losses
+        for a, b in zip(jax.tree.leaves(tr.params), jax.tree.leaves(ref_p)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # the backward really went through the window: one RS + one AG
+        # admitted per bucket per step, all reaped
+        st = tr._grad_window.stats(engine=False)
+        n = tr._grad_plan.n_buckets
+        assert st["admitted"] == st["reaped"] == 3 * n, (st, n)
+        assert st["in_flight"] == 0 and st["completed_unreaped"] == 0
+    finally:
+        tr.heartbeat.stop()
+        tr.engine.stop_all()
+
+
+def test_trainer_windowed_close_to_fused_jit_step():
+    """Against the fused one-jit trainer step the windowed path is
+    numerically close (XLA fuses backward+update differently across the
+    jit split; the comm path itself is exact — see the byte-parity test)."""
+    te = _mk_trainer("jit")
+    tw = _mk_trainer("windowed")
+    try:
+        he = te.run(3, log_every=100)
+        hw = tw.run(3, log_every=100)
+        assert he[0] == hw[0]  # same params, same first batch
+        np.testing.assert_allclose(he, hw, rtol=1e-3)
+    finally:
+        for tr in (te, tw):
+            tr.heartbeat.stop()
+            tr.engine.stop_all()
+
+
+def test_trainer_rejects_unknown_grad_overlap():
+    with pytest.raises(ValueError, match="grad_overlap"):
+        _mk_trainer("banana")
